@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: wall time (interpret mode on CPU — correctness
+path) + derived TPU roofline estimates from the kernel's op/byte counts."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels():
+    from repro.kernels.circ_conv import kernel as ck
+    from repro.kernels.qmatmul import ops as qops
+    from repro.kernels.simd_fused import kernel as sk
+    from repro.vsa import ops as vsa
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # circ_conv elementwise: NVSA-scale binding (n=256 pairs of 4x256 codes)
+    x = jax.random.normal(key, (256, 4, 256))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (256, 4, 256))
+    us = _bench(lambda a, b: ck.circ_elem(a, b, interpret=True), x, y)
+    flops = 2 * 256 * 4 * 256 * 256
+    rows.append(("kernels/circ_elem_256x4x256/us_interp", us,
+                 f"tpu_roofline_us={flops / PEAK * 1e6:.2f}"))
+
+    # circ dict mode: 256 queries x 16 dictionary entries
+    dic = jax.random.normal(key, (16, 4, 256))
+    us = _bench(lambda a, b: ck.circ_dict(a, b, interpret=True), x, dic)
+    flops = 2 * 256 * 16 * 4 * 256 * 256
+    rows.append(("kernels/circ_dict_256q_16d/us_interp", us,
+                 f"tpu_roofline_us={flops / PEAK * 1e6:.2f}"))
+
+    # qmatmul int8 and packed int4
+    xq = jax.random.randint(key, (256, 512), -127, 127, jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (512, 256), -127, 127,
+                            jnp.int8)
+    xs = jnp.ones((256,), jnp.float32)
+    ws = jnp.ones((256,), jnp.float32)
+    us = _bench(lambda: qops.qmatmul(xq, wq, xs, ws))
+    rows.append(("kernels/qmatmul_int8_256x512x256/us_interp", us,
+                 f"tpu_roofline_us={2*256*512*256 / (2*PEAK) * 1e6:.3f}"))
+    wp = qops.pack_int4(jnp.clip(wq, -8, 7))
+    us = _bench(lambda: qops.qmatmul(xq, wp, xs, ws, int4=True))
+    hbm_bytes = 256 * 512 + 512 * 128 + 256 * 256 * 4
+    rows.append(("kernels/qmatmul_int4_256x512x256/us_interp", us,
+                 f"hbm_bytes_vs_int8={hbm_bytes}/{256*512 + 512*256 + 256*256*4}"))
+
+    # fused match_prob (SIMD unit)
+    q = vsa.random_codebook(key, 512, 4, 256)
+    d = vsa.random_codebook(jax.random.fold_in(key, 2), 16, 4, 256)
+    us = _bench(lambda: sk.fused_match_prob(q, d, 0.1, interpret=True))
+    bytes_ = (512 + 16) * 4 * 256 * 4 + 512 * 16 * 4
+    rows.append(("kernels/fused_match_prob_512x16/us_interp", us,
+                 f"tpu_mem_bound_us={bytes_ / HBM * 1e6:.3f}"))
+
+    # oracle comparison factor (kernel vs XLA ref wall time, interpret mode
+    # is NOT indicative of TPU perf — recorded for completeness)
+    from repro.kernels.circ_conv import ref as cref
+    us_ref = _bench(lambda a, b: cref.circ_elem_ref(a, b, "conv"), x, y)
+    rows.append(("kernels/circ_elem_ref_xla/us", us_ref, "oracle"))
+    return rows

@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def load_cells(mesh: str | None = "pod16x16"):
+    cells = []
+    if not DRYRUN.exists():
+        return cells
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("tag"):
+            continue  # perf A/B variants are reported in §Perf
+        cells.append(r)
+    return cells
+
+
+def bench_roofline():
+    rows = []
+    ok = skip = err = 0
+    for r in load_cells(mesh=None):
+        cell = f"{r['arch']}__{r['shape']}__{r['mesh']}"
+        if r["status"] == "skip":
+            skip += 1
+            continue
+        if r["status"] != "ok":
+            err += 1
+            rows.append((f"roofline/{cell}/ERROR", 0.0, r.get("error", "?")[:60]))
+            continue
+        ok += 1
+        t = r["roofline"]
+        if r["mesh"] == "pod16x16":  # roofline table is single-pod (brief)
+            rows.append((f"roofline/{cell}/dominant", 0.0, t["dominant"]))
+            rows.append((f"roofline/{cell}/compute_ms", 0.0,
+                         round(t["compute_s"] * 1e3, 2)))
+            rows.append((f"roofline/{cell}/memory_ms", 0.0,
+                         round(t["memory_s"] * 1e3, 2)))
+            rows.append((f"roofline/{cell}/collective_ms", 0.0,
+                         round(t["collective_s"] * 1e3, 3)))
+            rows.append((f"roofline/{cell}/useful_flops_ratio", 0.0,
+                         round(r["useful_flops_ratio"], 3)))
+    rows.append(("roofline/cells_ok", 0.0, ok))
+    rows.append(("roofline/cells_skipped_documented", 0.0, skip))
+    rows.append(("roofline/cells_error", 0.0, err))
+    return rows

@@ -1,0 +1,81 @@
+"""Batched LM serving with KV caches + the enc-dec overlap demo.
+
+Part 1: greedy batched generation from a smoke llama-family model —
+         prefill via scan-decode, then token-by-token with a ring of
+         request slots.
+Part 2: seamless-m4t-style enc-dec serving where encode(batch i+1) is
+         issued alongside decode(batch i) — NSFlow's inter-loop overlap
+         (paper Fig. 4 ③) mapped to serving.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs import base as cbase
+from repro.configs.shapes import ShapeSpec
+from repro.nn import init as nninit
+from repro.serve.engine import Engine, ServeConfig
+
+
+def serve_llama():
+    arch = ARCHS["llama3.2-3b"]
+    cfg = arch.make_smoke()
+    params = nninit.materialize(cbase.model_spec(arch, cfg), jax.random.PRNGKey(0))
+    shape = ShapeSpec("serve", "decode", 128, 4)
+
+    def init_caches(batch):
+        specs, _, _ = cbase.decode_state_specs(arch, cfg, shape)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    engine = Engine(cbase.decode_fn(arch, cfg), init_caches,
+                    ServeConfig(max_new_tokens=16))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (4, 12)).astype(np.int32)
+    t0 = time.time()
+    out = engine.generate(params, prompts)
+    print(f"[serve_lm] llama-smoke: 4 requests x 16 tokens in "
+          f"{time.time()-t0:.1f}s -> {out.shape}")
+    print(f"[serve_lm] greedy continuations: {out[:, :8].tolist()}")
+
+
+def serve_encdec_overlap():
+    from repro.models import encdec
+
+    arch = ARCHS["seamless-m4t-large-v2"]
+    cfg = arch.make_smoke()
+    params = nninit.materialize(cbase.model_spec(arch, cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    enc_fn = jax.jit(lambda p, f: encdec.encode(p, cfg, f))
+    step_fn = jax.jit(lambda p, c, t, pos: encdec.decode_step(p, cfg, c, t, pos))
+
+    def one_batch_frames():
+        return jnp.asarray(rng.normal(size=(2, 24, cfg.d_model)), jnp.bfloat16)
+
+    # software pipeline: encode(i+1) is dispatched before decode(i) finishes
+    # (on a real mesh the encoder/decoder occupy disjoint device groups —
+    # the folding analogue; here we demonstrate the schedule)
+    n_batches, new_tokens = 3, 8
+    t0 = time.time()
+    enc_next = enc_fn(params, one_batch_frames())
+    for i in range(n_batches):
+        enc_cur = enc_next
+        if i + 1 < n_batches:
+            enc_next = enc_fn(params, one_batch_frames())  # overlapped encode
+        caches = encdec.init_caches(params, cfg, enc_cur, max_len=32)
+        tok = jnp.zeros((2,), jnp.int32)
+        for t in range(new_tokens):
+            caches, logits = step_fn(params, caches, tok, jnp.int32(t))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"[serve_lm] enc-dec pipelined serving: {n_batches} batches x "
+          f"{new_tokens} tokens in {time.time()-t0:.1f}s "
+          f"(encode i+1 overlaps decode i)")
+
+
+if __name__ == "__main__":
+    serve_llama()
+    serve_encdec_overlap()

@@ -1,0 +1,82 @@
+"""End-to-end LM training driver: train a ~100M-param llama-family model on
+the synthetic token stream for a few hundred steps, with checkpoint/restart.
+
+Defaults are sized for CPU demonstration (~25M params, 200 steps); pass
+``--width full100m`` for the ~100M configuration (same code path — slower
+on CPU, the intended substrate is a TPU slice via the identical shardings).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
+from repro.models import lm
+from repro.nn import init as nninit
+from repro.train import optimizer as opt_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+WIDTHS = {
+    # ~25M params — a few minutes of CPU
+    "demo": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                 head_dim=64, d_ff=1024, vocab=8192),
+    # ~100M params — the assignment's end-to-end scale
+    "full100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                     head_dim=64, d_ff=2048, vocab=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", choices=list(WIDTHS), default="demo")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--out", default="results/train_lm_metrics.json")
+    args = ap.parse_args()
+
+    cfg = lm.LMConfig(name=f"lm-{args.width}", **WIDTHS[args.width])
+    spec = lm.lm_spec(cfg)
+    params = nninit.materialize(spec, jax.random.PRNGKey(0))
+    print(f"[train_lm] {args.width}: {nninit.param_count(spec)/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    loader = SyntheticTokens(TokenPipelineConfig(
+        vocab_size=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=0))
+    trainer = Trainer(
+        loss_fn=lambda p, b: lm.loss_fn(p, cfg, b), params=params,
+        tcfg=TrainerConfig(total_steps=args.steps,
+                           ckpt_every=max(25, args.steps // 4),
+                           ckpt_dir=args.ckpt_dir),
+        ocfg=opt_mod.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                 total_steps=args.steps),
+        loader=loader)
+    if trainer.try_restore():
+        print(f"[train_lm] resumed from step {trainer.step}")
+    t0 = time.time()
+    hist = trainer.run()
+    dt = time.time() - t0
+    if not hist:
+        print("[train_lm] nothing to do (checkpoint already at target step)")
+        return
+    print(f"[train_lm] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"({dt/max(1,len(hist)):.2f}s/step)")
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"width": args.width, "steps": len(hist),
+         "losses": [h["loss"] for h in hist],
+         "s_per_step": dt / max(1, len(hist))}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

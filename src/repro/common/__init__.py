@@ -1,0 +1,17 @@
+from repro.common.util import (
+    PyTree,
+    tree_bytes,
+    tree_count,
+    split_key,
+    pad_to_multiple,
+    cdiv,
+)
+
+__all__ = [
+    "PyTree",
+    "tree_bytes",
+    "tree_count",
+    "split_key",
+    "pad_to_multiple",
+    "cdiv",
+]

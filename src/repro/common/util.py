@@ -1,0 +1,66 @@
+"""Small shared utilities used across the framework."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = cdiv(size, multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def tree_count(tree: PyTree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total byte size of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def split_key(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ["B", "KiB", "MiB", "GiB", "TiB"]:
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ["FLOP", "KFLOP", "MFLOP", "GFLOP", "TFLOP", "PFLOP"]:
+        if abs(n) < 1000.0:
+            return f"{n:.2f} {unit}"
+        n /= 1000.0
+    return f"{n:.2f} EFLOP"
+
+
+def round_up_pow2(n: int) -> int:
+    return 1 << max(0, math.ceil(math.log2(max(1, n))))

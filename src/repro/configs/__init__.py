@@ -1,0 +1,4 @@
+from repro.configs.registry import ARCHS, get_arch
+from repro.configs.shapes import SHAPES
+
+__all__ = ["ARCHS", "get_arch", "SHAPES"]

@@ -1,0 +1,171 @@
+"""ArchSpec — the uniform adapter every assigned architecture implements.
+
+The launcher, dry-run, trainer, and smoke tests all consume this interface;
+adding an architecture = one config file defining an ArchSpec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.nn import init as nninit
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str                   # moe | dense | ssm | hybrid | vlm | audio
+    kind: str                     # lm | rwkv | griffin | vlm | encdec
+    make_full: Callable[[], Any]
+    make_smoke: Callable[[], Any]
+    supports_long: bool = False
+    fsdp: bool = False            # shard the non-TP weight dim over data
+    opt_8bit: bool = False        # quantized AdamW moments
+    note: str = ""
+    source: str = ""
+
+
+def _mod(kind: str):
+    if kind == "lm":
+        from repro.models import lm as m
+    elif kind == "rwkv":
+        from repro.models import rwkv6 as m
+    elif kind == "griffin":
+        from repro.models import griffin as m
+    elif kind == "vlm":
+        from repro.models import vlm as m
+    elif kind == "encdec":
+        from repro.models import encdec as m
+    else:
+        raise ValueError(kind)
+    return m
+
+
+def model_spec(arch: ArchSpec, cfg):
+    m = _mod(arch.kind)
+    return {"lm": getattr(m, "lm_spec", None), "rwkv": getattr(m, "rwkv_spec", None),
+            "griffin": getattr(m, "griffin_spec", None),
+            "vlm": getattr(m, "vlm_spec", None),
+            "encdec": getattr(m, "encdec_spec", None)}[arch.kind](cfg)
+
+
+def loss_fn(arch: ArchSpec, cfg):
+    m = _mod(arch.kind)
+    return lambda params, batch: m.loss_fn(params, cfg, batch)
+
+
+def _dm(cfg, kind: str) -> int:
+    return cfg.lm.d_model if kind == "vlm" else cfg.d_model
+
+
+def train_batch_specs(arch: ArchSpec, cfg, shape: ShapeSpec):
+    """ShapeDtypeStructs for one global training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if arch.kind == "vlm":
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((b, cfg.n_img_tokens,
+                                                  cfg.lm.d_model), jnp.bfloat16),
+            "tokens": tok, "targets": tok,
+        }
+    if arch.kind == "encdec":
+        half = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model), jnp.bfloat16),
+            "tgt_tokens": jax.ShapeDtypeStruct((b, half), jnp.int32),
+            "tgt_targets": jax.ShapeDtypeStruct((b, half), jnp.int32),
+        }
+    return {"tokens": tok, "targets": tok}
+
+
+def prefill_fn(arch: ArchSpec, cfg):
+    """Full-context forward returning last-token logits (inference-prefill)."""
+    m = _mod(arch.kind)
+    if arch.kind == "lm":
+        def f(params, tokens):
+            hidden, _ = m.forward(params, cfg, tokens)
+            return m.lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+    elif arch.kind == "rwkv":
+        def f(params, tokens):
+            hidden = m.forward(params, cfg, tokens)
+            from repro.nn import layers
+            return layers.dense(params["head"], hidden[:, -1], cfg.compute_dtype)
+    elif arch.kind == "griffin":
+        def f(params, tokens):
+            hidden = m.forward(params, cfg, tokens)
+            from repro.nn import layers
+            return layers.logits(params["embed"], hidden[:, -1], cfg.compute_dtype)
+    elif arch.kind == "vlm":
+        def f(params, batch):
+            hidden, _ = m.forward(params, cfg, batch["patch_embeds"], batch["tokens"])
+            from repro.models import lm as lmm
+            return lmm.lm_logits(params, cfg.lm, hidden[:, -1:])[:, 0]
+    else:  # encdec
+        def f(params, frames):
+            enc = m.encode(params, cfg, frames)
+            from repro.nn import layers
+            return jnp.mean(enc, axis=1)  # encoder summary (decoder starts empty)
+    return f
+
+
+def prefill_input_specs(arch: ArchSpec, cfg, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if arch.kind == "vlm":
+        return ({"patch_embeds": jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.lm.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)},)
+    if arch.kind == "encdec":
+        return (jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),)
+    return (jax.ShapeDtypeStruct((b, s), jnp.int32),)
+
+
+def decode_fn(arch: ArchSpec, cfg):
+    m = _mod(arch.kind)
+    def f(params, caches, token, pos):
+        return m.decode_step(params, cfg, caches, token, pos)
+    return f
+
+
+def decode_state_specs(arch: ArchSpec, cfg, shape: ShapeSpec):
+    """(caches, token, pos) ShapeDtypeStructs for one decode step."""
+    m = _mod(arch.kind)
+    b, s = shape.global_batch, shape.seq_len
+    if arch.kind == "rwkv":
+        caches = m.state_shapes(cfg, b)
+    elif arch.kind == "griffin":
+        caches = m.state_shapes(cfg, b, s)
+    elif arch.kind == "encdec":
+        caches = m.cache_shapes(cfg, b, min(s, 4096), src_len=s)
+    elif arch.kind == "vlm":
+        caches = m.cache_shapes(cfg, b, s)
+    else:
+        caches = m.cache_shapes(cfg, b, s)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, token, pos
+
+
+def param_count(arch: ArchSpec, cfg) -> int:
+    return nninit.param_count(model_spec(arch, cfg))
+
+
+def active_param_count(arch: ArchSpec, cfg) -> int:
+    """MoE-aware active parameters per token (for MODEL_FLOPS = 6·N_active·D)."""
+    import numpy as np
+
+    spec = model_spec(arch, cfg)
+    moe_cfg = getattr(cfg, "moe", None)
+    if moe_cfg is None:
+        return nninit.param_count(spec)
+    total = 0
+    for p in jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, nninit.P)):
+        n = int(np.prod(p.shape))
+        if "experts" in p.axes:  # routed-expert weight: top_k of E active
+            n = n * moe_cfg.top_k // moe_cfg.n_experts
+        total += n
+    return total

@@ -1,0 +1,22 @@
+"""Architecture registry: --arch <id> resolves here."""
+from repro.configs.granite_moe_1b_a400m import ARCH as granite_moe
+from repro.configs.deepseek_v3_671b import ARCH as deepseek_v3
+from repro.configs.llama3_2_3b import ARCH as llama32
+from repro.configs.stablelm_3b import ARCH as stablelm
+from repro.configs.gemma3_12b import ARCH as gemma3
+from repro.configs.starcoder2_3b import ARCH as starcoder2
+from repro.configs.rwkv6_7b import ARCH as rwkv6
+from repro.configs.recurrentgemma_9b import ARCH as recurrentgemma
+from repro.configs.internvl2_26b import ARCH as internvl2
+from repro.configs.seamless_m4t_large_v2 import ARCH as seamless
+
+ARCHS = {a.id: a for a in [
+    granite_moe, deepseek_v3, llama32, stablelm, gemma3, starcoder2,
+    rwkv6, recurrentgemma, internvl2, seamless,
+]}
+
+
+def get_arch(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]

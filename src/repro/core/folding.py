@@ -1,0 +1,67 @@
+"""Mesh folding — the TPU analogue of AdArray sub-array folding (Sec IV-B).
+
+NSFlow splits its systolic array into sub-arrays so NN and vector-symbolic
+streams run *concurrently*. On a TPU mesh the same move is a spatial device
+split: inside one SPMD program, devices with ``axis_index < n_l`` execute
+the NN stream on their slice of the NN batch while the remaining ``n_v``
+devices execute the VSA stream — one ``lax.cond`` on the axis index, one
+psum to reassemble each stream's output. The DSE's (N_l : N_v) partition
+(Algorithm 1) chooses the split.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from jax.sharding import PartitionSpec as PS
+
+
+def make_folded_fn(mesh, axis: str, n_l: int, nn_fn: Callable,
+                   vsa_fn: Callable, nn_out_shape, vsa_out_shape):
+    """Build f(nn_x, vsa_x) -> (nn_out, vsa_out) where the two streams run
+    concurrently on disjoint device groups of the ``axis`` (sizes n_l : n_v).
+
+    nn_x: (B_nn, ...) — row-sharded across the first n_l devices;
+    vsa_x: (B_vsa, ...) — row-sharded across the remaining devices.
+    Shapes must divide by their group size.
+    """
+    n_total = mesh.shape[axis]
+    n_v = n_total - n_l
+
+    def inner(nn_x, vsa_x):
+        idx = jax.lax.axis_index(axis)
+        nn_shard = nn_x.shape[0] // n_l
+        vsa_shard = vsa_x.shape[0] // n_v
+
+        def nn_branch(_):
+            i = jnp.clip(idx, 0, n_l - 1)
+            xs = jax.lax.dynamic_slice_in_dim(nn_x, i * nn_shard, nn_shard)
+            out = jnp.zeros(nn_out_shape, jnp.float32)
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, nn_fn(xs).astype(jnp.float32), i * nn_shard, 0)
+            return out, jnp.zeros(vsa_out_shape, jnp.float32)
+
+        def vsa_branch(_):
+            j = jnp.clip(idx - n_l, 0, n_v - 1)
+            xs = jax.lax.dynamic_slice_in_dim(vsa_x, j * vsa_shard, vsa_shard)
+            out = jnp.zeros(vsa_out_shape, jnp.float32)
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, vsa_fn(xs).astype(jnp.float32), j * vsa_shard, 0)
+            return jnp.zeros(nn_out_shape, jnp.float32), out
+
+        nn_out, vsa_out = jax.lax.cond(idx < n_l, nn_branch, vsa_branch, None)
+        return jax.lax.psum(nn_out, axis), jax.lax.psum(vsa_out, axis)
+
+    def wrapped(nn_x, vsa_x):
+        return shard_map(inner, mesh=mesh, in_specs=(PS(), PS()),
+                         out_specs=(PS(), PS()), check_vma=False)(nn_x, vsa_x)
+
+    return wrapped

@@ -1,0 +1,97 @@
+"""Mesh DSE — the TPU retargeting of NSFlow Phase I (beyond-paper).
+
+The paper's Phase I searches (H, W, N) for an FPGA array; the TPU analogue
+searches the *mesh factorization* (data × model parallel sizes) and
+per-node knobs (remat, microbatch) against the same style of analytical
+cost model, now built from the v5e roofline terms:
+
+  compute    = step FLOPs / (chips × peak)
+  memory     = (param reads + activation traffic) / (chips × HBM bw)
+  collective = TP psums + DP grad reduce (+EP) / (chips × ICI bw)
+  (+ a per-device HBM capacity constraint: params + moments + activations)
+
+The predicted-best mesh is validated against dry-run measurements in
+EXPERIMENTS.md §Perf — keeping the paper's two-phase structure: a coarse
+static split first (this module), per-node refinement second (remat /
+precision per layer in the launch configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.launch.mesh import HW
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPoint:
+    data: int
+    model: int
+    remat: bool
+    accum: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hbm_gb: float
+    feasible: bool
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def search(n_params: float, n_active: float, d_model: int, n_layers: int,
+           seq: int, global_batch: int, chips: int = 256,
+           bytes_per_param: float = 2.0, moment_bytes: float = 8.0,
+           kv_bytes_per_tok: float = 0.0, train: bool = True) -> list[MeshPoint]:
+    """Rank mesh factorizations for one (arch × shape).
+
+    Analytic; no compile. Returns points sorted by bound_s (feasible first).
+    """
+    tokens = global_batch * seq
+    passes = 3 if train else 1
+    flops = 2 * n_active * tokens * passes
+    points = []
+    for model in _divisors(chips):
+        data = chips // model
+        if global_batch % data and global_batch >= data:
+            continue
+        for remat in ((False, True) if train else (False,)):
+          for accum in ((1, 4, 16) if train else (1,)):
+            eff_passes = passes + (1 if remat else 0)
+            f = 2 * n_active * tokens * eff_passes
+            compute = f / (chips * HW["peak_flops_bf16"])
+            # memory: weights stream once per pass per chip-shard per
+            # microbatch + activations (residual stream, halved by remat)
+            w_bytes = n_params * bytes_per_param / model
+            act = tokens / data * d_model * 2.0 * n_layers * (2 if not remat else 1)
+            memory = (w_bytes * eff_passes * accum + act) / HW["hbm_bw"]
+            # collectives: TP psum of activations per layer (2×), DP grad
+            # reduce-scatter+all-gather of the model shard
+            tp = 0.0 if model == 1 else \
+                2 * n_layers * (tokens / data) * d_model * 2.0
+            dp = 0.0 if (data == 1 or not train) else \
+                2 * n_params * bytes_per_param / model
+            collective = (tp + dp) / (HW["ici_bw_per_link"] * HW["ici_links"])
+            # live activations: one microbatch's layer boundaries, sharded
+            # over the model axis too (sequence-sharded saves)
+            act_live = act / (accum * model)
+            hbm = (n_params * (bytes_per_param + (moment_bytes if train else 0))
+                   / (model * (data if train else 1))  # ZeRO moments over data
+                   + act_live * 2 + tokens / data * kv_bytes_per_tok)
+            points.append(MeshPoint(data, model, remat, accum, compute, memory,
+                                    collective, hbm / 1e9,
+                                    hbm < HW["hbm_bytes"]))
+    points.sort(key=lambda p: (not p.feasible, p.bound_s))
+    return points
+
+
+def best(n_params, n_active, d_model, n_layers, seq, global_batch,
+         chips: int = 256, **kw) -> MeshPoint:
+    return search(n_params, n_active, d_model, n_layers, seq, global_batch,
+                  chips, **kw)[0]

@@ -1,0 +1,219 @@
+"""Execution-trace extraction: jaxpr -> OpGraph (paper Sec V-B, Listing 1).
+
+The paper extracts a compiled program trace from the PyTorch workload; the
+JAX-native equivalent is a jaxpr walk. We recurse through pjit / custom-vjp /
+scan / remat wrappers, classify every primitive into the paper's kernel
+taxonomy (nn / vsa / simd / mem), and record dims, bytes and FLOPs so the
+analytical models (Sec V-C) can attach runtime functions to each node.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.opgraph import OpGraph, OpNode
+
+_ELEMWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "sin", "cos", "sign", "abs", "neg", "floor",
+    "ceil", "round", "erf", "integer_pow", "and", "or", "not", "xor", "select_n",
+    "clamp", "nextafter", "is_finite", "square", "cumsum", "cumprod", "cumlogsumexp",
+}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+           "reduce_or", "argmax", "argmin", "reduce_precision"}
+_MEM = {
+    "reshape", "transpose", "broadcast_in_dim", "convert_element_type", "slice",
+    "dynamic_slice", "dynamic_update_slice", "concatenate", "pad", "squeeze",
+    "gather", "scatter", "scatter-add", "scatter_add", "rev", "iota", "copy",
+    "split", "expand_dims", "bitcast_convert_type",
+}
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr", "body_jaxpr")
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _classify_pallas(name: str) -> tuple[str, str]:
+    if "circ" in name or "elem_kernel" in name or "dict_kernel" in name:
+        return "vsa", "circ_conv_kernel"
+    if "match_prob" in name:
+        return "simd", "fused_match_prob_kernel"
+    if "qmm" in name:
+        return "nn", "qmatmul_kernel"
+    return "simd", f"pallas:{name}"
+
+
+class _Tracer:
+    def __init__(self):
+        self.graph = OpGraph()
+        self.counts: dict[str, int] = collections.defaultdict(int)
+        self.env: dict[Any, str] = {}  # jaxpr Var -> producing node name
+
+    def _fresh(self, stem: str) -> str:
+        self.counts[stem] += 1
+        return f"{stem}_{self.counts[stem]}"
+
+    def _deps(self, invars) -> list[str]:
+        out = []
+        for v in invars:
+            key = id(v)
+            if key in self.env and self.env[key] not in out:
+                out.append(self.env[key])
+        return out
+
+    def _bind_outs(self, outvars, name: str):
+        for v in outvars:
+            self.env[id(v)] = name
+
+    def _sub(self, params: dict):
+        for key in _SUBJAXPR_PARAMS:
+            if key in params:
+                j = params[key]
+                return j.jaxpr if hasattr(j, "jaxpr") else j
+        return None
+
+    def walk(self, jaxpr, invar_sources: dict | None = None, scale: int = 1):
+        if invar_sources:
+            self.env.update(invar_sources)
+        for eqn in jaxpr.eqns:
+            self._eqn(eqn, scale)
+
+    def _eqn(self, eqn, scale: int):
+        prim = eqn.primitive.name
+        params = eqn.params
+        deps = self._deps(eqn.invars)
+        out_aval = eqn.outvars[0].aval if eqn.outvars else None
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        out_shape = tuple(getattr(out_aval, "shape", ()) or ())
+
+        # --- structural primitives: recurse ---
+        if prim in ("jit", "pjit", "closed_call", "core_call", "custom_jvp_call",
+                    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "remat2",
+                    "checkpoint", "custom_lin"):
+            sub = self._sub(params)
+            if sub is not None:
+                mapping = {id(iv): self.env[id(ov)]
+                           for iv, ov in zip(sub.invars, eqn.invars)
+                           if id(ov) in self.env}
+                self.walk(sub, mapping, scale)
+                for sv, ov in zip(sub.outvars, eqn.outvars):
+                    if id(sv) in self.env:
+                        self.env[id(ov)] = self.env[id(sv)]
+                return
+        if prim == "scan":
+            sub = self._sub(params)
+            length = int(params.get("length", 1))
+            if sub is not None:
+                mapping = {id(iv): self.env[id(ov)]
+                           for iv, ov in zip(sub.invars, eqn.invars)
+                           if id(ov) in self.env}
+                self.walk(sub, mapping, scale * length)
+                name = self._fresh("scan_out")
+                node = OpNode(name, "mem", {"out_shape": out_shape,
+                                            "repeat": length},
+                              deps=self._deps(eqn.invars), out_bytes=out_bytes,
+                              label=f"scan[{length}]")
+                self.graph.add(node)
+                self._bind_outs(eqn.outvars, name)
+                return
+        if prim in ("while", "cond"):
+            for key in ("body_jaxpr", "cond_jaxpr"):
+                if key in params:
+                    j = params[key]
+                    self.walk(j.jaxpr if hasattr(j, "jaxpr") else j, None, scale)
+            if "branches" in params:
+                for br in params["branches"]:
+                    self.walk(br.jaxpr if hasattr(br, "jaxpr") else br, None, scale)
+            name = self._fresh(prim)
+            self.graph.add(OpNode(name, "mem", {"out_shape": out_shape}, deps,
+                                  out_bytes=out_bytes, label=prim))
+            self._bind_outs(eqn.outvars, name)
+            return
+
+        # --- compute primitives ---
+        if prim == "dot_general":
+            dn = params["dimension_numbers"]
+            (lc, rc), (lb, rb) = dn
+            lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+            k = int(np.prod([lhs.shape[i] for i in lc])) or 1
+            b = int(np.prod([lhs.shape[i] for i in lb])) or 1
+            m = int(np.prod([s for i, s in enumerate(lhs.shape)
+                             if i not in lc and i not in lb])) or 1
+            n = int(np.prod([s for i, s in enumerate(rhs.shape)
+                             if i not in rc and i not in rb])) or 1
+            node = OpNode(self._fresh("dot_general"), "nn",
+                          {"m": m * b, "n": n, "k": k, "out_shape": out_shape,
+                           "repeat": scale},
+                          deps, out_bytes=out_bytes, in_bytes=in_bytes,
+                          param_bytes=_aval_bytes(rhs),
+                          flops=2 * b * m * n * k * scale, label="matmul")
+        elif prim == "conv_general_dilated":
+            lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+            out_elems = int(np.prod(out_shape))
+            k = int(np.prod(rhs.shape[:-1]))  # HWIO: kh*kw*cin
+            node = OpNode(self._fresh("conv"), "nn",
+                          {"m": out_elems // max(1, out_shape[-1]),
+                           "n": out_shape[-1] if out_shape else 1, "k": k,
+                           "out_shape": out_shape, "repeat": scale},
+                          deps, out_bytes=out_bytes, in_bytes=in_bytes,
+                          param_bytes=_aval_bytes(rhs),
+                          flops=2 * out_elems * k * scale, label="conv2d")
+        elif prim == "pallas_call":
+            kname = str(params.get("name", "") or
+                        getattr(params.get("name_and_src_info", ""), "name", ""))
+            kind, label = _classify_pallas(kname)
+            dims = {"out_shape": out_shape, "repeat": scale}
+            if kind == "vsa" and len(out_shape) >= 2:
+                dims["nvec"] = int(np.prod(out_shape[:-1]))
+                dims["d"] = int(out_shape[-1])
+                flops = 2 * dims["nvec"] * dims["d"] ** 2 * scale
+            else:
+                flops = 2 * int(np.prod(out_shape)) * scale
+            node = OpNode(self._fresh(label), kind, dims, deps,
+                          out_bytes=out_bytes, in_bytes=in_bytes,
+                          flops=flops, label=label)
+        elif prim in ("fft",):
+            n_el = int(np.prod(out_shape))
+            d = out_shape[-1] if out_shape else 1
+            node = OpNode(self._fresh("fft"), "vsa",
+                          {"nvec": n_el // max(1, d), "d": int(d),
+                           "out_shape": out_shape, "repeat": scale},
+                          deps, out_bytes=out_bytes, in_bytes=in_bytes,
+                          flops=int(5 * n_el * max(1, np.log2(max(2, d)))) * scale,
+                          label="fft")
+        elif prim in _REDUCE or prim in _ELEMWISE or prim.startswith("reduce_"):
+            elems = int(np.prod(out_shape)) if out_shape else 1
+            node = OpNode(self._fresh(prim), "simd",
+                          {"elems": elems, "out_shape": out_shape, "repeat": scale},
+                          deps, out_bytes=out_bytes, in_bytes=in_bytes,
+                          flops=elems * scale, label=prim)
+        elif prim in _MEM:
+            node = OpNode(self._fresh(prim), "mem",
+                          {"out_shape": out_shape, "repeat": scale}, deps,
+                          out_bytes=out_bytes, in_bytes=in_bytes, label=prim)
+        else:
+            elems = int(np.prod(out_shape)) if out_shape else 1
+            node = OpNode(self._fresh(prim), "simd",
+                          {"elems": elems, "out_shape": out_shape, "repeat": scale},
+                          deps, out_bytes=out_bytes, in_bytes=in_bytes,
+                          flops=elems * scale, label=prim)
+        self.graph.add(node)
+        self._bind_outs(eqn.outvars, node.name)
+
+
+def extract(fn, *example_args, **example_kwargs) -> OpGraph:
+    """Trace ``fn`` on example args (arrays or ShapeDtypeStructs) -> OpGraph."""
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    tracer = _Tracer()
+    tracer.walk(closed.jaxpr)
+    return tracer.graph

@@ -1,0 +1,3 @@
+from repro.data import raven, tokens
+
+__all__ = ["raven", "tokens"]

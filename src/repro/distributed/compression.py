@@ -1,0 +1,65 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At 1000+ nodes the pod-to-pod (DCN/ICI-bridge) axis is the scarce
+bandwidth; compressing the gradient all-reduce over that axis 4× (f32 ->
+int8 + per-tensor scale) with error feedback keeps convergence unchanged
+(the EF residual re-injects quantization error next step).
+
+``compressed_psum(g, axis)`` runs inside shard_map: all_gather of int8
+shards + local dequant-sum — 4× less data over ``axis`` than an f32 psum.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array):
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jax.Array, axis: str):
+    """int8 all-gather + local sum == psum at 1/4 the wire bytes.
+
+    Must be called inside shard_map with ``axis`` unmapped on g.
+    """
+    q, scale = quantize(g)
+    qs = jax.lax.all_gather(q, axis)          # (n, ...)  int8 on the wire
+    ss = jax.lax.all_gather(scale, axis)      # (n,)      f32 (negligible)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+
+
+def ef_compress_tree(grads, residuals):
+    """Error-feedback step: quantize (g + residual), return (quantized
+    payload tree, new residuals). Residuals live in f32 and are sharded
+    like the gradients."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize(x)
+        new_r = x - dequantize(q, s)
+        return (q, s), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+    new_res = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+    return payload, new_res
+
+
+def ef_decompress_tree(payload):
+    return jax.tree.map(lambda qs: dequantize(*qs), payload,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules (TP / FSDP / EP / SP).
+
+Every parameter spec carries logical axis names (repro.nn.init.P); these
+rules map them onto the production mesh. Defaults are megatron-style TP
+over ``model`` with optional FSDP of the remaining dim over ``data``
+(needed by deepseek-v3-scale cells), experts EP-sharded over ``model``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.nn import init as nninit
+
+# logical axis -> mesh axis (None = replicate)
+TP_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "heads_flat": "model",
+    "conv_out": None,
+    "conv_in": None,
+    "embed": None,
+    "embed2": None,
+    "qlora": None,
+    "kvlora": None,
+    "hd": None,
+    "layers": None,
+}
+
+FSDP_RULES = dict(TP_RULES, embed="data")
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = mesh.shape[axis] if not isinstance(axis, tuple) else \
+        int(np.prod([mesh.shape[a] for a in axis]))
+    return dim % size == 0 and dim >= size
+
+
+#: logical axes eligible as a TP fallback when the preferred axis does not
+#: divide the mesh (e.g. llama's 24 heads on a 16-way model axis -> shard
+#: the embed dim instead: row-parallel with a psum the block already pays).
+FALLBACK_TP_AXES = ("embed", "mlp", "heads_flat", "embed2", "qlora", "kvlora",
+                    "hd", "vocab")
+
+_MIN_SHARD_ELEMS = 1 << 20  # don't bother re-sharding small tensors
+
+
+def spec_to_pspec(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> PS:
+    """Build a PartitionSpec, dropping assignments that do not divide; if the
+    preferred TP axis does not divide, fall back to another large dim."""
+    assigned = []
+    used = set()
+    for ax_name, dim in zip(axes, shape):
+        mesh_axis = rules.get(ax_name)
+        if mesh_axis is not None and mesh_axis not in used and \
+                _divisible(dim, mesh, mesh_axis):
+            assigned.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            assigned.append(None)
+    if "model" not in used and int(np.prod(shape)) >= _MIN_SHARD_ELEMS:
+        for i, (ax_name, dim) in enumerate(zip(axes, shape)):
+            if assigned[i] is None and ax_name in FALLBACK_TP_AXES and \
+                    _divisible(dim, mesh, "model"):
+                assigned[i] = "model"
+                break
+    while assigned and assigned[-1] is None:
+        assigned.pop()
+    return PS(*assigned)
+
+
+def param_shardings(spec_tree, mesh: Mesh, fsdp: bool = False):
+    """Spec tree -> NamedSharding tree (same structure)."""
+    rules = FSDP_RULES if fsdp else TP_RULES
+    axes_tree = nninit.axes(spec_tree)
+    shapes_tree = nninit.shapes(spec_tree)
+
+    def one(axes, shp):
+        return NamedSharding(mesh, spec_to_pspec(axes, shp.shape, mesh, rules))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(a, (str, type(None))) for a in x))
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Mesh axes that carry the batch dimension (pod folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    return NamedSharding(mesh, PS(data_axes(mesh), *([None] * (ndim - 1))))
+
+
+def cache_pspec(shape: tuple, mesh: Mesh, kv_axis: int | None = None,
+                seq_axis: int | None = None, batch_axis: int = 0) -> PS:
+    """KV-cache sharding policy (SP):
+
+    - batch over the data axes when divisible,
+    - kv-heads over ``model`` when divisible, else the *sequence* dim over
+      ``model`` (sequence parallelism — the long_500k/batch-1 case),
+    - otherwise replicate.
+    """
+    spec: list = [None] * len(shape)
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    if shape[batch_axis] % dsize == 0 and shape[batch_axis] >= dsize:
+        spec[batch_axis] = daxes
+    msize = mesh.shape["model"]
+    if kv_axis is not None and shape[kv_axis] % msize == 0 and shape[kv_axis] >= msize:
+        spec[kv_axis] = "model"
+    elif seq_axis is not None and shape[seq_axis] % msize == 0:
+        spec[seq_axis] = "model"
+    while spec and spec[-1] is None:
+        spec.pop()
+    return PS(*spec)
+
+
+def tree_cache_shardings(shapes_tree, mesh: Mesh):
+    """Heuristic cache sharding: identify (B, S, KV, hd) / (B, S, r) /
+    (B, H, hd, hd) / stacked (L, ...) variants by rank and shard per policy."""
+
+    def one(s):
+        shape = s.shape
+        off = 0
+        # stacked layer dim heuristic: leading dim small & others large
+        if len(shape) >= 4 and shape[0] <= 128 and shape[1] <= 4096:
+            off = 1
+        rank = len(shape) - off
+        if rank == 4:   # (B, S, KV, hd)
+            return NamedSharding(mesh, cache_pspec(
+                shape, mesh, kv_axis=off + 2, seq_axis=off + 1, batch_axis=off))
+        if rank == 3:   # (B, S, r) MLA or (B, H, hd*) partial
+            return NamedSharding(mesh, cache_pspec(
+                shape, mesh, kv_axis=None, seq_axis=off + 1, batch_axis=off))
+        if rank == 2:   # (B, D) recurrent carries
+            return NamedSharding(mesh, cache_pspec(shape, mesh, batch_axis=off))
+        return NamedSharding(mesh, cache_pspec(shape, mesh, batch_axis=off))
+
+    return jax.tree.map(one, shapes_tree)

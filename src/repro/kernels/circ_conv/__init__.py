@@ -1,0 +1,3 @@
+from repro.kernels.circ_conv import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blockwise circular convolution / correlation.
+
+TPU adaptation of NSFlow's AdArray passing-register streaming (Sec IV-B).
+A TPU has no per-PE register muxes, so instead of skew-streaming the second
+operand we *materialize its circulant matrix in VMEM* with log2(d)
+roll-select steps (each roll is a static concatenate — VPU-friendly), then
+feed the MXU:
+
+    conv:  C[n, k] = y[(n-k) mod d]  ->  out = x @ C^T
+    corr:  C[n, k] = y[(n+k) mod d]  ->  out = x @ C^T
+
+Two grid layouts:
+- ``elem``  — pairwise binding of N (x_i, y_i) pairs: per-row circulants,
+  batched mat-vec. Low-reuse, the "symbolic stream" of the paper.
+- ``dict``  — N queries against M static dictionary entries: one circulant
+  per dictionary entry is reused by a whole (tile_n × d) MXU matmul. This is
+  the high-reuse path the TPU rewrite unlocks.
+
+``d`` must be a power of two (NVSA block dims are 256/512); ops.py falls
+back to the XLA gather reference otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _circulant(base: jax.Array, sign: int) -> jax.Array:
+    """base: (R, d) -> (R, d, d) with out[r, n, :] = roll(base[r], sign*n).
+
+    Binary-decomposition build: log2(d) static rolls + masked selects.
+    """
+    r, d = base.shape
+    m = jnp.broadcast_to(base[:, None, :], (r, d, d))
+    n_idx = jax.lax.broadcasted_iota(jnp.int32, (1, d, 1), 1)
+    shift = 1
+    while shift < d:
+        rolled = jnp.roll(m, sign * shift, axis=-1)
+        take = ((n_idx // shift) % 2) == 1
+        m = jnp.where(take, rolled, m)
+        shift *= 2
+    return m
+
+
+def _rev_fixed0(y: jax.Array) -> jax.Array:
+    """y_rev[k] = y[(-k) mod d]: reverse all but the 0th element."""
+    return jnp.concatenate([y[..., :1], jnp.flip(y[..., 1:], axis=-1)], axis=-1)
+
+
+def _elem_kernel(x_ref, y_ref, o_ref, *, mode: str):
+    x = x_ref[:, 0, :].astype(jnp.float32)  # (tn, d)
+    y = y_ref[:, 0, :].astype(jnp.float32)
+    base = _rev_fixed0(y) if mode == "conv" else y
+    c = _circulant(base, 1 if mode == "conv" else -1)  # (tn, d, d)
+    # out[r, n] = sum_k x[r, k] * c[r, n, k]  — batched matvec
+    out = jax.lax.dot_general(
+        c, x,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def _dict_kernel(x_ref, y_ref, o_ref, *, mode: str):
+    x = x_ref[:, 0, :].astype(jnp.float32)  # (tn, d)
+    y = y_ref[0, 0, :].astype(jnp.float32)  # (d,)
+    base = _rev_fixed0(y) if mode == "conv" else y
+    c = _circulant(base[None], 1 if mode == "conv" else -1)[0]  # (d, d)
+    # out[r, n] = sum_k x[r, k] * c[n, k]  — (tn, d) @ (d, d)^T  -> MXU
+    out = jax.lax.dot_general(
+        x, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[:, 0, 0, :] = out.astype(o_ref.dtype)
+
+
+def _elem_tile(d: int, vmem_budget: int = 6 * 1024 * 1024) -> int:
+    """Rows per tile such that the f32 circulant fits the VMEM budget."""
+    per_row = d * d * 4
+    return max(1, min(64, vmem_budget // (2 * per_row)))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret", "tile_n"))
+def circ_elem(x: jax.Array, y: jax.Array, *, mode: str = "conv",
+              interpret: bool = True, tile_n: int | None = None) -> jax.Array:
+    """Pairwise binding. x, y: (N, B, d) -> (N, B, d)."""
+    n, b, d = x.shape
+    tn = tile_n or _elem_tile(d)
+    pad = (-n) % tn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        y = jnp.pad(y, ((0, pad), (0, 0), (0, 0)))
+    grid = ((n + pad) // tn, b)
+    out = pl.pallas_call(
+        functools.partial(_elem_kernel, mode=mode),
+        name=f"circ_elem_{mode}",
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, 1, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tn, 1, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, b, d), x.dtype),
+        interpret=interpret,
+    )(x, y)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret", "tile_n"))
+def circ_dict(x: jax.Array, dictionary: jax.Array, *, mode: str = "conv",
+              interpret: bool = True, tile_n: int = 128) -> jax.Array:
+    """N queries against M dictionary entries.
+
+    x: (N, B, d), dictionary: (M, B, d) -> (N, B, M, d).
+    """
+    n, b, d = x.shape
+    m = dictionary.shape[0]
+    tn = min(tile_n, max(8, n))
+    pad = (-n) % tn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    grid = ((n + pad) // tn, b, m)
+    out = pl.pallas_call(
+        functools.partial(_dict_kernel, mode=mode),
+        name=f"circ_dict_{mode}",
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, 1, d), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, j, k: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, 1, 1, d), lambda i, j, k: (i, j, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, b, m, d), x.dtype),
+        interpret=interpret,
+    )(x, dictionary)
+    return out[:n]

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers for the circ_conv kernel with shape handling.
+
+Dispatch policy: Pallas kernel (interpret-mode on CPU, compiled on TPU) for
+power-of-two ``d``; exact XLA gather reference otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.circ_conv import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _is_pow2(d: int) -> bool:
+    return (d & (d - 1)) == 0
+
+
+def _circ_elem_dispatch(af: jax.Array, bf: jax.Array, mode: str) -> jax.Array:
+    d = af.shape[-1]
+    if _is_pow2(d) and d >= 8:
+        return kernel.circ_elem(af, bf, mode=mode, interpret=_interpret())
+    return ref.circ_elem_ref(af, bf, mode)
+
+
+# Custom VJPs so the Pallas kernels are trainable. Circular-conv calculus:
+#   z = conv(a, b):  da = corr(b, g),  db = corr(a, g)
+#   z = corr(a, b):  da = corr(g, b),  db = conv(g, a)
+# — the backward pass reuses the same kernels (stays on the MXU path).
+
+
+@jax.custom_vjp
+def _conv_flat(a: jax.Array, b: jax.Array) -> jax.Array:
+    return _circ_elem_dispatch(a, b, "conv")
+
+
+def _conv_fwd(a, b):
+    return _circ_elem_dispatch(a, b, "conv"), (a, b)
+
+
+def _conv_bwd(res, g):
+    a, b = res
+    return (_circ_elem_dispatch(b, g, "corr").astype(a.dtype),
+            _circ_elem_dispatch(a, g, "corr").astype(b.dtype))
+
+
+_conv_flat.defvjp(_conv_fwd, _conv_bwd)
+
+
+@jax.custom_vjp
+def _corr_flat(a: jax.Array, b: jax.Array) -> jax.Array:
+    return _circ_elem_dispatch(a, b, "corr")
+
+
+def _corr_fwd(a, b):
+    return _circ_elem_dispatch(a, b, "corr"), (a, b)
+
+
+def _corr_bwd(res, g):
+    a, b = res
+    return (_circ_elem_dispatch(g, b, "corr").astype(a.dtype),
+            _circ_elem_dispatch(g, a, "conv").astype(b.dtype))
+
+
+_corr_flat.defvjp(_corr_fwd, _corr_bwd)
+
+
+def circ_bind(a: jax.Array, b: jax.Array, mode: str = "conv") -> jax.Array:
+    """Elementwise blockwise circular conv/corr with leading-dim broadcast.
+
+    a, b: (..., blocks, d) -> (..., blocks, d). Differentiable (custom VJP).
+    """
+    a, b = jnp.broadcast_arrays(a, b)
+    lead = a.shape[:-2]
+    blocks, d = a.shape[-2:]
+    n = int(np.prod(lead)) if lead else 1
+    af = a.reshape(n, blocks, d)
+    bf = b.reshape(n, blocks, d)
+    out = _conv_flat(af, bf) if mode == "conv" else _corr_flat(af, bf)
+    return out.reshape(*lead, blocks, d)
+
+
+def circ_bind_dict(x: jax.Array, dictionary: jax.Array, mode: str = "conv") -> jax.Array:
+    """x: (N, blocks, d) vs dictionary: (M, blocks, d) -> (N, M, blocks, d)."""
+    if _is_pow2(x.shape[-1]) and x.shape[-1] >= 8:
+        out = kernel.circ_dict(x, dictionary, mode=mode, interpret=_interpret())
+    else:
+        out = ref.circ_dict_ref(x, dictionary, mode)
+    return jnp.swapaxes(out, 1, 2)  # (N, B, M, d) -> (N, M, B, d)

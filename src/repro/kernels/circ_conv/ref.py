@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the circ_conv kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def circ_elem_ref(x: jax.Array, y: jax.Array, mode: str = "conv") -> jax.Array:
+    """x, y: (N, B, d) -> (N, B, d). Exact gather formulation."""
+    d = x.shape[-1]
+    n = jnp.arange(d)[:, None]
+    k = jnp.arange(d)[None, :]
+    idx = (n - k) % d if mode == "conv" else (n + k) % d
+    ymat = y[..., idx]  # (N, B, d, d)
+    return jnp.einsum("...k,...nk->...n", x.astype(jnp.float32),
+                      ymat.astype(jnp.float32)).astype(x.dtype)
+
+
+def circ_dict_ref(x: jax.Array, dictionary: jax.Array, mode: str = "conv") -> jax.Array:
+    """x: (N, B, d), dictionary: (M, B, d) -> (N, B, M, d)."""
+    d = x.shape[-1]
+    n = jnp.arange(d)[:, None]
+    k = jnp.arange(d)[None, :]
+    idx = (n - k) % d if mode == "conv" else (n + k) % d
+    dmat = dictionary[..., idx]  # (M, B, d, d)
+    return jnp.einsum("xbk,mbnk->xbmn", x.astype(jnp.float32),
+                      dmat.astype(jnp.float32)).astype(x.dtype)

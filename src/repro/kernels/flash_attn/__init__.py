@@ -1,0 +1,3 @@
+from repro.kernels.flash_attn import ops, ref
+
+__all__ = ["ops", "ref"]

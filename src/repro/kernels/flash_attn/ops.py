@@ -1,0 +1,28 @@
+"""Public wrapper: flash attention over (B, S, H, hd) layouts with GQA."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,
+              causal: bool = True, use_kernel: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) (pre-repeated GQA groups)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    if use_kernel:
+        out = kernel.flash_attention(qf, kf, vf, scale=scale, causal=causal,
+                                     interpret=_interpret())
+    else:
+        out = ref.flash_attention_ref(qf, kf, vf, scale=scale, causal=causal)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

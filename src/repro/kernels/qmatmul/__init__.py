@@ -1,0 +1,3 @@
+from repro.kernels.qmatmul import ops, ref
+
+__all__ = ["ops", "ref"]

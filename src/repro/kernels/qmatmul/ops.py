@@ -1,0 +1,66 @@
+"""Public quantized-matmul API: quantize helpers + kernel dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_rows(x: jax.Array, bits: int = 8):
+    """Symmetric per-row quantization. x: (M, K) -> (q int8, scale (M,) f32)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def quantize_cols(w: jax.Array, bits: int = 8):
+    """Symmetric per-column quantization. w: (K, N) -> (q int8, scale (N,))."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale[0]
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(K, N) int8 values in [-8, 7] -> (K, ceil(N/2)) packed (low nibble first)."""
+    k, n = q.shape
+    if n % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1)))
+        n += 1
+    pairs = q.reshape(k, n // 2, 2)
+    low = pairs[..., 0] & 0x0F
+    high = jax.lax.shift_left(pairs[..., 1], jnp.int8(4))
+    return (low | high).astype(jnp.int8)
+
+
+def qmatmul(x_q, w_q, x_scale, w_scale, int4: bool = False, out_dtype=jnp.float32,
+            use_kernel: bool = True, **block_kw):
+    if use_kernel:
+        return kernel.qmatmul(x_q, w_q, x_scale, w_scale, int4=int4,
+                              interpret=_interpret(), out_dtype=out_dtype, **block_kw)
+    return ref.qmatmul_ref(x_q, w_q, x_scale, w_scale, int4=int4, out_dtype=out_dtype)
+
+
+def qdense(x: jax.Array, w: jax.Array, bits_x: int = 8, bits_w: int = 8,
+           out_dtype=jnp.bfloat16, use_kernel: bool = True) -> jax.Array:
+    """Quantize-on-the-fly dense layer: x (M, K) f, w (K, N) f -> (M, N)."""
+    n = w.shape[1]
+    x_q, x_s = quantize_rows(x, bits_x)
+    w_q, w_s = quantize_cols(w, bits_w)
+    int4 = bits_w == 4
+    if int4:
+        w_q = pack_int4(w_q)
+        if n % 2:
+            w_s = jnp.pad(w_s, (0, 1))
+    out = qmatmul(x_q, w_q, x_s, w_s, int4=int4, out_dtype=out_dtype,
+                  use_kernel=use_kernel)
+    return out[:, :n]

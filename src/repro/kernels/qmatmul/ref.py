@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the qmatmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_int4_ref(w: jax.Array) -> jax.Array:
+    low = jax.lax.shift_right_arithmetic(jax.lax.shift_left(w, jnp.int8(4)), jnp.int8(4))
+    high = jax.lax.shift_right_arithmetic(w, jnp.int8(4))
+    return jnp.stack([low, high], axis=-1).reshape(w.shape[0], w.shape[1] * 2)
+
+
+def qmatmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                w_scale: jax.Array, int4: bool = False,
+                out_dtype=jnp.float32) -> jax.Array:
+    if int4:
+        w_q = unpack_int4_ref(w_q)
+    acc = jax.lax.dot_general(
+        x_q, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]).astype(out_dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.simd_fused import ops, ref
+
+__all__ = ["ops", "ref"]

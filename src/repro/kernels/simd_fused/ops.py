@@ -1,0 +1,42 @@
+"""Public wrapper for the fused SIMD-unit kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.simd_fused import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _fused_kernel(q, dictionary, temp):
+    return kernel.fused_match_prob(q, dictionary, temp, interpret=_interpret())
+
+
+def _fused_fwd(q, dictionary, temp):
+    out = kernel.fused_match_prob(q, dictionary, temp, interpret=_interpret())
+    return out, (q, dictionary)
+
+
+def _fused_bwd(temp, res, g):
+    # backward through the (cheap) reference chain — forward stays fused
+    q, dictionary = res
+    _, vjp = jax.vjp(lambda qq, dd: ref.fused_match_prob_ref(qq, dd, temp),
+                     q, dictionary)
+    return vjp(g)
+
+
+_fused_kernel.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_match_prob(q: jax.Array, dictionary: jax.Array, temp: float = 1.0,
+                     use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return _fused_kernel(q, dictionary, temp)
+    return ref.fused_match_prob_ref(q, dictionary, temp)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused match_prob kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_match_prob_ref(q: jax.Array, dictionary: jax.Array,
+                         temp: float = 1.0) -> jax.Array:
+    qf = q.astype(jnp.float32)
+    df = dictionary.astype(jnp.float32)
+    qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-9)
+    dn = df / jnp.maximum(jnp.linalg.norm(df, axis=-1, keepdims=True), 1e-9)
+    sims = jnp.einsum("nbd,mbd->nm", qn, dn) / q.shape[-2]
+    return jax.nn.softmax(sims / temp, axis=-1)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 host placeholder devices, lowers the appropriate
+step (train_step incl. optimizer / prefill / decode) with full shardings,
+compiles, and records memory_analysis + cost_analysis + the parsed
+collective schedule to JSON for §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod-only]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs import base as cbase
+from repro.distributed import sharding_rules as rules
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, HW
+from repro.nn import init as nninit
+from repro.train import optimizer as opt
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _skip_reason(arch, shape) -> str | None:
+    if shape.name == "long_500k" and not arch.supports_long:
+        return ("skipped: pure full-attention arch at 524k context "
+                "(sub-quadratic required; see DESIGN.md §4)")
+    return None
+
+
+def _opt_state_shardings(state_shapes, param_shardings_tree, mesh):
+    """Moments inherit the parameter sharding; quantized blocks shard their
+    leading (blocks) dim over data when divisible, else replicate."""
+
+    def for_param(ps, mu):
+        if "m" in mu:  # fp32 moments: same sharding as the parameter
+            return {"m": ps, "v": ps}
+        # quantized moments: flat (blocks, qblock) — ZeRO-shard the block dim
+        # across as many mesh axes as divide it (data×model when possible)
+        nb = mu["m_q"].shape[0]
+        axes = [a for a in ("data", "model", "pod") if a in mesh.shape]
+        best: tuple = ()
+        size = 1
+        for a in axes:
+            if nb % (size * mesh.shape[a]) == 0:
+                best = best + (a,)
+                size *= mesh.shape[a]
+        spec = PS(best) if best else PS()
+        qs = NamedSharding(mesh, spec)
+        return {"m_q": qs, "m_s": qs, "v_q": qs, "v_s": qs}
+
+    mu = jax.tree.map(for_param, param_shardings_tree, state_shapes["mu"],
+                      is_leaf=lambda x: isinstance(x, NamedSharding))
+    return {"mu": mu, "step": NamedSharding(mesh, PS())}
+
+
+def _batch_shardings(batch_specs, mesh):
+    daxes = rules.data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def one(s):
+        # batch-1 (long_500k) cells replicate the batch dim (SP shards the
+        # cache sequence dim over the model axis instead)
+        lead = daxes if (s.shape and s.shape[0] % dsize == 0) else None
+        return NamedSharding(mesh, PS(lead, *([None] * (len(s.shape) - 1))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def _scale_config(arch, cfg, reps: int):
+    """Rebuild the arch config with the scanned body at ``reps`` repetitions
+    (calibration for XLA CPU cost_analysis, which counts while bodies once)."""
+    import dataclasses as dc
+    # scan_unroll >= reps removes the while loop entirely so cost_analysis
+    # sees every layer (XLA CPU neither multiplies nor even counts bodies).
+    if arch.kind == "vlm":
+        return dc.replace(cfg, lm=_scale_config_lm(cfg.lm, reps))
+    if arch.kind == "lm":
+        return _scale_config_lm(cfg, reps)
+    if arch.kind == "rwkv":
+        return dc.replace(cfg, n_layers=reps, scan_unroll=max(2, reps))
+    if arch.kind == "griffin":
+        unit, reps0, tail = cfg.plan()
+        return dc.replace(cfg, n_layers=len(unit) * reps + len(tail),
+                          scan_unroll=max(2, reps))
+    if arch.kind == "encdec":
+        return dc.replace(cfg, n_enc_layers=reps, n_dec_layers=reps,
+                          scan_unroll=max(2, reps))
+    return cfg
+
+
+def _scale_config_lm(cfg, reps: int):
+    import dataclasses as dc
+    from repro.models.lm import stage_plan
+    plan = stage_plan(cfg)
+    n = len(plan.prefix) + len(plan.unit) * reps + len(plan.tail)
+    return dc.replace(cfg, n_layers=n, scan_unroll=max(2, reps))
+
+
+def build_cell(arch_id: str, shape_name: str, multi_pod: bool, cfg=None):
+    """Returns (fn, example_args (SDS), in_shardings, out_shardings, meta)."""
+    arch = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    cfg = cfg or arch.make_full()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = cbase.model_spec(arch, cfg)
+    param_shapes = nninit.shapes(spec)
+    param_shard = rules.param_shardings(spec, mesh, fsdp=arch.fsdp)
+    meta = {
+        "params": nninit.param_count(spec),
+        "active_params": cbase.active_param_count(arch, cfg),
+        "param_bytes": nninit.param_bytes(spec),
+    }
+
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig(quantized_state=arch.opt_8bit)
+        state_shapes = opt.state_shapes(param_shapes, ocfg)
+        state_shard = _opt_state_shardings(state_shapes, param_shard, mesh)
+        batch_specs = cbase.train_batch_specs(arch, cfg, shape)
+        batch_shard = _batch_shardings(batch_specs, mesh)
+        loss = cbase.loss_fn(arch, cfg)
+
+        def train_step(params, state, batch):
+            lv, grads = jax.value_and_grad(loss)(params, batch)
+            params, state, metrics = opt.apply_updates(params, grads, state, ocfg)
+            return params, state, {"loss": lv, **metrics}
+
+        fn = train_step
+        args = (param_shapes, state_shapes, batch_specs)
+        in_sh = (param_shard, state_shard, batch_shard)
+        out_sh = (param_shard, state_shard,
+                  {"loss": NamedSharding(mesh, PS()),
+                   "grad_norm": NamedSharding(mesh, PS()),
+                   "lr": NamedSharding(mesh, PS())})
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = cbase.prefill_fn(arch, cfg)
+        inp = cbase.prefill_input_specs(arch, cfg, shape)
+        in_sh = (param_shard, *(_batch_shardings(i, mesh) for i in inp))
+        args = (param_shapes, *inp)
+        out_sh = None
+        donate = ()
+    else:  # decode
+        caches, token, pos = cbase.decode_state_specs(arch, cfg, shape)
+        cache_shard = rules.tree_cache_shardings(caches, mesh)
+        fn = cbase.decode_fn(arch, cfg)
+        args = (param_shapes, caches, token, pos)
+        in_sh = (param_shard, cache_shard,
+                 _batch_shardings(token, mesh), NamedSharding(mesh, PS()))
+        out_sh = (cache_shard, None)
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate, meta, mesh, cfg, arch, shape
+
+
+def _loop_trips(arch, cfg) -> int:
+    if arch.kind == "lm" or arch.kind == "vlm":
+        from repro.models.lm import stage_plan
+        return stage_plan(cfg.lm if arch.kind == "vlm" else cfg).repeats
+    if arch.kind == "rwkv":
+        return cfg.n_layers
+    if arch.kind == "griffin":
+        return cfg.plan()[1]
+    if arch.kind == "encdec":
+        return cfg.n_dec_layers
+    return 1
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path = RESULTS_DIR, verbose: bool = True,
+             cfg_transform=None, tag: str = "") -> dict:
+    """``cfg_transform``: optional fn(cfg) -> cfg applied to the full config
+    (perf hillclimbing A/B cells; results tagged with ``tag``)."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch_id}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{cell}.json"
+    arch, shape = ARCHS[arch_id], SHAPES[shape_name]
+    reason = _skip_reason(arch, shape)
+    record: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                    "status": "skip", "skip_reason": reason, "tag": tag}
+    if reason:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(record, indent=1))
+        if verbose:
+            print(f"[dryrun] {cell}: SKIP ({reason})")
+        return record
+    t0 = time.time()
+    try:
+        cfg0 = ARCHS[arch_id].make_full()
+        if cfg_transform is not None:
+            cfg0 = cfg_transform(cfg0)
+        fn, args, in_sh, out_sh, donate, meta, mesh, cfg, arch, shape = \
+            build_cell(arch_id, shape_name, multi_pod, cfg=cfg0)
+        chips = int(np.prod(list(mesh.shape.values())))
+        with jax.sharding.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        trips = _loop_trips(arch, cfg)
+        coll_bytes, coll_counts = rl.parse_collectives(hlo, default_trips=trips)
+        total_coll = sum(coll_bytes.values())
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        # XLA CPU cost_analysis counts while (scan) bodies ONCE — calibrate
+        # with reps=1 and reps=2 compiles and extrapolate (exact: every
+        # scanned quantity is linear in reps).
+        calibration = None
+        if trips > 1:
+            costs = []
+            for reps in (1, 2):
+                c_cfg = _scale_config(arch, cfg, reps)
+                f1, a1, i1, o1, d1, *_ = build_cell(arch_id, shape_name,
+                                                    multi_pod, cfg=c_cfg)
+                with jax.sharding.set_mesh(mesh):
+                    cal = jax.jit(f1, in_shardings=i1, out_shardings=o1,
+                                  donate_argnums=d1).lower(*a1).compile()
+                cc = cal.cost_analysis() or {}
+                costs.append((float(cc.get("flops", 0.0)),
+                              float(cc.get("bytes accessed", 0.0))))
+            df = costs[1][0] - costs[0][0]
+            db = costs[1][1] - costs[0][1]
+            # clamp at the rep1 measurement: a negative per-layer delta is
+            # CPU cost-analysis noise, not negative work
+            flops_dev = max(costs[0][0], costs[0][0] + df * (trips - 1))
+            bytes_dev = max(costs[0][1], costs[0][1] + db * (trips - 1))
+            calibration = {"rep1": costs[0], "rep2": costs[1], "trips": trips}
+        # MODEL_FLOPS: 6·N_active·D per step (train ≈ 3 passes -> 6ND; decode 2ND)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                       (shape.seq_len if shape.kind == "prefill" else 1))
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * meta["active_params"] * tokens
+        mem_fields = {}
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_fields[f] = int(v)
+        # memory-term floor: every argument is read at least once per step;
+        # XLA-CPU cost analysis misses scan-body (per-layer) param reads
+        bytes_dev = max(bytes_dev, float(mem_fields.get(
+            "argument_size_in_bytes", 0)))
+        terms = rl.roofline_terms(flops_dev, bytes_dev, total_coll * chips,
+                                  chips)
+        record.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "meta": meta,
+            "cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+            "memory_analysis": mem_fields,
+            "collective_bytes_per_device": {k: float(v) for k, v in coll_bytes.items()},
+            "collective_counts": coll_counts,
+            "calibration": calibration,
+            "loop_trips": trips,
+            "roofline": terms,
+            "model_flops_total": model_flops,
+            "model_flops_per_device": model_flops / chips,
+            "useful_flops_ratio": (model_flops / chips) / max(1.0, flops_dev),
+        })
+        if verbose:
+            print(f"[dryrun] {cell}: OK lower {t_lower:.0f}s compile "
+                  f"{t_compile:.0f}s | flops/dev {flops_dev:.3e} bytes/dev "
+                  f"{bytes_dev:.3e} coll/dev {total_coll:.3e} | "
+                  f"dominant={terms['dominant']} bound={terms['bound_s']*1e3:.2f}ms")
+            print("  memory_analysis:", mem_fields)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+        if verbose:
+            print(f"[dryrun] {cell}: ERROR {type(e).__name__}: {e}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_err = 0
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                p = out_dir / f"{a}__{s}__{mesh_name}.json"
+                if args.skip_existing and p.exists():
+                    st = json.loads(p.read_text()).get("status")
+                    if st in ("ok", "skip"):
+                        continue
+                rec = run_cell(a, s, mp, out_dir)
+                n_ok += rec["status"] in ("ok", "skip")
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok/skip, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing never touches jax
+device state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+    carries either extra data parallelism (default) or pipeline stages."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host CPU devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e, per chip
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw_per_link": 50e9,  # bytes/s/link (~ per direction)
+    "ici_links": 4,
+    "hbm_bytes": 16e9,
+    "vmem_bytes": 16 * 2 ** 20,  # usable VMEM planning budget per core
+}

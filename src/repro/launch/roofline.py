@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs / (chips × peak)        [cost_analysis]
+memory   = HLO_bytes / (chips × HBM bw)      [cost_analysis]
+collect. = Σ collective operand bytes / (chips × link bw × links)
+           [parsed from the partitioned HLO text; collectives inside while
+           (scan) bodies are multiplied by the known trip count]
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-_]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w\.\-_]+)")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, loop_trips: dict[str, int] | None = None,
+                      default_trips: int = 1):
+    """Returns {op_kind: bytes} with while-body collectives scaled by trips.
+
+    ``loop_trips`` maps while-body computation name -> trip count; bodies
+    not listed use ``default_trips``.
+    """
+    # map: computation name -> list of (kind, operand bytes)
+    per_comp: dict[str, list] = {}
+    body_names: set[str] = set()
+    current = "__entry__"
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            per_comp.setdefault(current, [])
+            continue
+        if "while(" in line or " while " in line:
+            for b in _BODY_RE.findall(line):
+                body_names.add(b)
+        for kind in _COLLECTIVES:
+            # match the op use site: "= TYPE[...] all-reduce(OPERANDS...)"
+            if f" {kind}(" in line or f"{kind}-start(" in line:
+                lhs, _, rhs = line.partition(f"{kind}")
+                operands = rhs.partition("(")[2]
+                operands = operands.rpartition(")")[0]
+                b = _shape_bytes(operands.split("),")[0] if kind ==
+                                 "all-to-all" else operands)
+                per_comp.setdefault(current, []).append((kind, b))
+                break
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for comp, items in per_comp.items():
+        trips = 1
+        if comp in body_names:
+            trips = (loop_trips or {}).get(comp, default_trips)
+        for kind, b in items:
+            out[kind] += b * trips
+            counts[kind] += trips
+    return out, counts
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_total: float, chips: int) -> dict:
+    """All three terms in seconds (per-device quantities in, seconds out)."""
+    compute = flops_per_device / HW["peak_flops_bf16"]
+    memory = bytes_per_device / HW["hbm_bw"]
+    collective = (collective_bytes_total / chips) / \
+        (HW["ici_bw_per_link"] * HW["ici_links"])
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": max(compute, memory, collective),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Report generation (EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+
+def summarize(dryrun_dir=None) -> str:
+    """Markdown roofline table from the dry-run JSONs (single-pod cells)."""
+    import json
+    import pathlib
+
+    d = pathlib.Path(dryrun_dir) if dryrun_dir else \
+        pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+    lines = [
+        "| arch | shape | dom | compute | memory | collective | "
+        "MODEL/HLO | coll. mix |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    multi = ["", "### Multi-pod (2×16×16) deltas", "",
+             "| arch | shape | status | compute | collective | note |",
+             "|---|---|---|---|---|---|"]
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag"):
+            continue  # perf A/B variants live in §Perf, not the baseline table
+        if r["status"] == "skip":
+            if r["mesh"] == "pod16x16":
+                lines.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — "
+                             f"| — | {r['skip_reason'][:40]}… |")
+            continue
+        if r["status"] != "ok":
+            tgt = lines if r["mesh"] == "pod16x16" else multi
+            tgt.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — "
+                       f"| {r.get('error','')[:50]} |")
+            continue
+        t = r["roofline"]
+        cb = r["collective_bytes_per_device"]
+        mix = ",".join(f"{k.split('-')[-1][:4]}:{v/1e9:.1f}G"
+                       for k, v in cb.items() if v > 0) or "none"
+        if r["mesh"] == "pod16x16":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | **{t['dominant'][:4]}** | "
+                f"{t['compute_s']*1e3:.1f}ms | {t['memory_s']*1e3:.1f}ms | "
+                f"{t['collective_s']*1e3:.2f}ms | "
+                f"{r['useful_flops_ratio']:.2f} | {mix} |")
+        else:
+            multi.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{t['compute_s']*1e3:.1f}ms | {t['collective_s']*1e3:.2f}ms | "
+                f"{t['dominant']} |")
+    return "\n".join(lines + multi)
+
+
+if __name__ == "__main__":
+    print(summarize())

@@ -1,0 +1,79 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real training loop on the local devices (CPU here; the identical
+program runs on a TPU slice — shardings come from the same rules as the
+dry-run). Includes checkpoint/restart and the synthetic token pipeline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import ARCHS
+from repro.configs import base as cbase
+from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
+from repro.nn import init as nninit
+from repro.train import optimizer as opt_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (full configs need a TPU slice)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args()
+
+    arch = ARCHS[args.arch]
+    if arch.kind not in ("lm", "rwkv", "griffin"):
+        raise SystemExit(f"{args.arch}: token-LM training only in this driver "
+                         "(vlm/encdec need modality batches — see examples/)")
+    cfg = arch.make_smoke() if args.smoke else arch.make_full()
+    spec = cbase.model_spec(arch, cfg)
+    params = nninit.materialize(spec, jax.random.PRNGKey(0))
+    n_params = nninit.param_count(spec)
+    print(f"[train] arch={args.arch} params={n_params/1e6:.2f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    loader = SyntheticTokens(TokenPipelineConfig(
+        vocab_size=cfg.vocab, seq_len=args.seq,
+        global_batch=args.batch * args.accum, seed=0))
+    trainer = Trainer(
+        loss_fn=cbase.loss_fn(arch, cfg), params=params,
+        tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 5),
+                           ckpt_dir=args.ckpt_dir, grad_accum=args.accum),
+        ocfg=opt_mod.AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                                 total_steps=args.steps,
+                                 quantized_state=arch.opt_8bit),
+        loader=loader)
+    if args.resume and trainer.try_restore():
+        print(f"[train] resumed from step {trainer.step}")
+    t0 = time.time()
+    hist = trainer.run()
+    dt = time.time() - t0
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"in {dt:.0f}s ({dt/len(hist):.2f}s/step)")
+    if args.metrics_out:
+        p = pathlib.Path(args.metrics_out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(hist, indent=1))
+    return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Seamless-M4T-v2-class encoder-decoder backbone (speech-to-text).
+
+Per the brief the speech frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S_src, D) as if the w2v-BERT conformer
+feature extractor had run. The backbone below is the full enc-dec
+transformer: bidirectional encoder + causal decoder with cross-attention.
+Decode shapes exercise the decoder with a self-attention cache plus static
+encoder K/V — the paper's "critical path between two streams" case
+(DESIGN.md §4): the serving schedule overlaps encode(batch i+1) with
+decode(batch i).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers
+from repro.models.lm import _xent, _stack_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    rope_base: float = 10000.0
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self) -> attn.AttnConfig:
+        return attn.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                               self.hd, rope_base=self.rope_base)
+
+
+def _enc_layer_spec(cfg: EncDecConfig):
+    return {
+        "ln1": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": attn.gqa_spec(cfg.attn_cfg(), cfg.param_dtype),
+        "ln2": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": layers.mlp_spec(cfg.d_model, cfg.d_ff, cfg.param_dtype, bias=True),
+    }
+
+
+def _dec_layer_spec(cfg: EncDecConfig):
+    spec = _enc_layer_spec(cfg)
+    spec["ln_x"] = layers.layernorm_spec(cfg.d_model, cfg.param_dtype)
+    spec["xattn"] = attn.gqa_spec(cfg.attn_cfg(), cfg.param_dtype)
+    return spec
+
+
+def encdec_spec(cfg: EncDecConfig):
+    return {
+        "embed": layers.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc": _stack_spec(_enc_layer_spec(cfg), cfg.n_enc_layers),
+        "dec": _stack_spec(_dec_layer_spec(cfg), cfg.n_dec_layers),
+        "enc_norm": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "dec_norm": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: EncDecConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, D) stub frontend embeddings -> encoder states."""
+    positions = jnp.arange(frames.shape[1])
+    acfg = cfg.attn_cfg()
+    x = frames.astype(cfg.compute_dtype)
+
+    def layer(x, p):
+        h = layers.layernorm(p["ln1"], x)
+        q, k, v = attn.gqa_project(p["attn"], acfg, h, positions,
+                                   cfg.compute_dtype)
+        groups = acfg.n_heads // acfg.n_kv_heads
+        k, v = attn._repeat_kv(k, groups), attn._repeat_kv(v, groups)
+        mask = jnp.ones((x.shape[1], x.shape[1]), bool)  # bidirectional
+        o = attn.attend_full(q, k, v, mask, acfg.scale)
+        x = x + jnp.einsum("bshe,hed->bsd", o,
+                           p["attn"]["wo"].astype(cfg.compute_dtype))
+        h = layers.layernorm(p["ln2"], x)
+        return x + layers.mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype), 0.0
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return layers.layernorm(params["enc_norm"], x)
+
+
+def decode_train(params, cfg: EncDecConfig, enc_out: jax.Array,
+                 tgt_tokens: jax.Array) -> jax.Array:
+    positions = jnp.arange(tgt_tokens.shape[1])
+    acfg = cfg.attn_cfg()
+    x = layers.embedding(params["embed"], tgt_tokens, cfg.compute_dtype)
+
+    def layer(x, p):
+        h = layers.layernorm(p["ln1"], x)
+        x = x + attn.attention(p["attn"], acfg, h, positions, cfg.compute_dtype)
+        h = layers.layernorm(p["ln_x"], x)
+        enc_kv = attn.encode_kv(p["xattn"], acfg, enc_out, cfg.compute_dtype)
+        x = x + attn.cross_attention(p["xattn"], acfg, h, enc_kv,
+                                     cfg.compute_dtype)
+        h = layers.layernorm(p["ln2"], x)
+        return x + layers.mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype), 0.0
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=cfg.scan_unroll)
+    return layers.layernorm(params["dec_norm"], x)
+
+
+def loss_fn(params, cfg: EncDecConfig, batch) -> jax.Array:
+    """batch: {frames (B,Ssrc,D), tgt_tokens (B,Stgt), tgt_targets}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden = decode_train(params, cfg, enc_out, batch["tgt_tokens"])
+    logits = layers.logits(params["embed"], hidden, cfg.compute_dtype)
+    return _xent(logits, batch["tgt_targets"])
+
+
+def cache_shapes(cfg: EncDecConfig, batch: int, max_len: int, src_len: int):
+    acfg = cfg.attn_cfg()
+    per_layer = {
+        "self": attn.kv_cache_shape(acfg, batch, max_len),
+        "cross": {
+            "k": jax.ShapeDtypeStruct((batch, src_len, cfg.n_kv_heads, cfg.hd),
+                                      jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct((batch, src_len, cfg.n_kv_heads, cfg.hd),
+                                      jnp.bfloat16),
+        },
+    }
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_dec_layers,) + s.shape, s.dtype),
+        per_layer)
+
+
+def init_caches(params, cfg: EncDecConfig, enc_out: jax.Array, max_len: int):
+    """Build decode caches: empty self-attn cache + precomputed cross K/V."""
+    acfg = cfg.attn_cfg()
+    b = enc_out.shape[0]
+
+    def per_layer(p, _):
+        kv = attn.encode_kv(p["xattn"], acfg, enc_out, cfg.compute_dtype)
+        return _, {"self": attn.init_kv_cache(acfg, b, max_len),
+                   "cross": jax.tree.map(lambda x: x.astype(jnp.bfloat16), kv)}
+
+    _, caches = jax.lax.scan(lambda c, p: per_layer(p, c), 0, params["dec"])
+    return caches
+
+
+def decode_step(params, cfg: EncDecConfig, caches, token: jax.Array,
+                pos: jax.Array):
+    acfg = cfg.attn_cfg()
+    x = layers.embedding(params["embed"], token, cfg.compute_dtype)
+
+    def layer(x, scanned):
+        p, c = scanned
+        h = layers.layernorm(p["ln1"], x)
+        self_c, a = attn.decode_step(p["attn"], acfg, c["self"], h, pos,
+                                     cfg.compute_dtype)
+        x = x + a
+        h = layers.layernorm(p["ln_x"], x)
+        xa = attn.cross_attention(p["xattn"], acfg, h[:, None, :], c["cross"],
+                                  cfg.compute_dtype)[:, 0]
+        x = x + xa
+        h = layers.layernorm(p["ln2"], x)
+        x = x + layers.mlp(p["mlp"], h[:, None, :],
+                           compute_dtype=cfg.compute_dtype)[:, 0]
+        return x, {"self": self_c, "cross": c["cross"]}
+
+    x, new_caches = jax.lax.scan(layer, x, (params["dec"], caches),
+                                 unroll=cfg.scan_unroll)
+    x = layers.layernorm(params["dec_norm"], x)
+    return new_caches, layers.logits(params["embed"], x, cfg.compute_dtype)

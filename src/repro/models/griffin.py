@@ -1,0 +1,218 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local attention, 1:2.
+
+Assigned arch ``recurrentgemma-9b``: 38L, d_model 4096, MQA (kv=1) window
+2048, d_ff 12288, vocab 256000; pattern (recurrent, recurrent, attention).
+Decode state: RG-LRU hidden (D,) + conv1d carry per recurrent layer, and a
+window-bounded ring KV cache per attention layer — sub-quadratic, so the
+``long_500k`` cell runs here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers, ssm
+from repro.models.lm import _xent, _stack_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    lru_width: int | None = None
+    window: int = 2048
+    conv_width: int = 4
+    pattern: tuple[str, ...] = ("rec", "rec", "attn")
+    rope_base: float = 10000.0
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: int = 1
+
+    @property
+    def rnn_d(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self) -> attn.AttnConfig:
+        return attn.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                               self.hd, rope_base=self.rope_base,
+                               window=self.window)
+
+    def lru(self) -> ssm.RGLRUConfig:
+        return ssm.RGLRUConfig(self.rnn_d)
+
+    def plan(self):
+        descs = tuple(self.pattern[i % len(self.pattern)]
+                      for i in range(self.n_layers))
+        u = len(self.pattern)
+        reps = self.n_layers // u
+        return descs[: reps * u][:u], reps, descs[reps * u:]
+
+
+def _rec_spec(cfg: GriffinConfig):
+    d, r = cfg.d_model, cfg.rnn_d
+    return {
+        "ln": layers.rmsnorm_spec(d, cfg.param_dtype),
+        "in_x": layers.dense_spec(d, r, ("embed", "mlp"), dtype=cfg.param_dtype),
+        "in_gate": layers.dense_spec(d, r, ("embed", "mlp"), dtype=cfg.param_dtype),
+        "conv": layers.conv1d_spec(r, cfg.conv_width, cfg.param_dtype),
+        "lru": ssm.rglru_spec(cfg.lru(), cfg.param_dtype),
+        "out": layers.dense_spec(r, d, ("mlp", "embed"), dtype=cfg.param_dtype),
+        "ln2": layers.rmsnorm_spec(d, cfg.param_dtype),
+        "mlp": layers.glu_mlp_spec(d, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _attn_spec(cfg: GriffinConfig):
+    return {
+        "ln": layers.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": attn.gqa_spec(cfg.attn_cfg(), cfg.param_dtype),
+        "ln2": layers.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": layers.glu_mlp_spec(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def griffin_spec(cfg: GriffinConfig):
+    unit, reps, tail = cfg.plan()
+    unit_spec = {f"u{i}": (_rec_spec(cfg) if k == "rec" else _attn_spec(cfg))
+                 for i, k in enumerate(unit)}
+    return {
+        "embed": layers.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": layers.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "body": _stack_spec(unit_spec, reps),
+        "tail": [(_rec_spec(cfg) if k == "rec" else _attn_spec(cfg))
+                 for k in tail],
+    }
+
+
+def _rec_fwd(cfg: GriffinConfig, p, x):
+    h = layers.rmsnorm(p["ln"], x)
+    gate = jax.nn.gelu(layers.dense(p["in_gate"], h, cfg.compute_dtype))
+    xr = layers.dense(p["in_x"], h, cfg.compute_dtype)
+    xr = layers.causal_conv1d(p["conv"], xr, cfg.compute_dtype)
+    hr, _ = ssm.rglru(p["lru"], cfg.lru(), xr)
+    x = x + layers.dense(p["out"], hr * gate, cfg.compute_dtype)
+    h = layers.rmsnorm(p["ln2"], x)
+    return x + layers.glu_mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype)
+
+
+def _attn_fwd(cfg: GriffinConfig, p, x, positions):
+    h = layers.rmsnorm(p["ln"], x)
+    x = x + attn.attention(p["attn"], cfg.attn_cfg(), h, positions,
+                           cfg.compute_dtype)
+    h = layers.rmsnorm(p["ln2"], x)
+    return x + layers.glu_mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype)
+
+
+def forward(params, cfg: GriffinConfig, tokens: jax.Array):
+    unit, reps, tail = cfg.plan()
+    positions = jnp.arange(tokens.shape[1])
+    x = layers.embedding(params["embed"], tokens, cfg.compute_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+
+    def unit_fwd(x, up):
+        for i, k in enumerate(unit):
+            x = _rec_fwd(cfg, up[f"u{i}"], x) if k == "rec" else \
+                _attn_fwd(cfg, up[f"u{i}"], x, positions)
+        return x, 0.0
+
+    body = jax.checkpoint(unit_fwd) if cfg.remat else unit_fwd
+    x, _ = jax.lax.scan(body, x, params["body"], unroll=cfg.scan_unroll)
+    for p, k in zip(params["tail"], tail):
+        x = _rec_fwd(cfg, p, x) if k == "rec" else _attn_fwd(cfg, p, x, positions)
+    return layers.rmsnorm(params["final_norm"], x)
+
+
+def loss_fn(params, cfg: GriffinConfig, batch) -> jax.Array:
+    hidden = forward(params, cfg, batch["tokens"])
+    logits = layers.logits(params["embed"], hidden, cfg.compute_dtype)
+    return _xent(logits, batch["targets"])
+
+
+def _rec_state(cfg: GriffinConfig, batch: int):
+    return {
+        "lru": jax.ShapeDtypeStruct((batch, cfg.rnn_d), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.rnn_d),
+                                     jnp.bfloat16),
+    }
+
+
+def state_shapes(cfg: GriffinConfig, batch: int, max_len: int):
+    unit, reps, tail = cfg.plan()
+    unit_state = {f"u{i}": (_rec_state(cfg, batch) if k == "rec"
+                            else attn.kv_cache_shape(cfg.attn_cfg(), batch, max_len))
+                  for i, k in enumerate(unit)}
+    return {
+        "body": jax.tree.map(lambda s: jax.ShapeDtypeStruct((reps,) + s.shape,
+                                                            s.dtype), unit_state),
+        "tail": [(_rec_state(cfg, batch) if k == "rec"
+                  else attn.kv_cache_shape(cfg.attn_cfg(), batch, max_len))
+                 for k in tail],
+    }
+
+
+def init_state(cfg: GriffinConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_shapes(cfg, batch, max_len))
+
+
+def decode_step(params, cfg: GriffinConfig, state, token: jax.Array,
+                pos: jax.Array):
+    unit, reps, tail = cfg.plan()
+    x = layers.embedding(params["embed"], token, cfg.compute_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+
+    def rec_step(p, st, x):
+        h = layers.rmsnorm(p["ln"], x)
+        gate = jax.nn.gelu(layers.dense(p["in_gate"], h, cfg.compute_dtype))
+        xr = layers.dense(p["in_x"], h, cfg.compute_dtype)
+        conv_st, xr = layers.causal_conv1d_step(p["conv"], st["conv"], xr)
+        lru_st, hr = ssm.rglru_step(p["lru"], cfg.lru(), st["lru"], xr)
+        x = x + layers.dense(p["out"], hr * gate, cfg.compute_dtype)
+        h = layers.rmsnorm(p["ln2"], x)
+        x = x + layers.glu_mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype)
+        return {"lru": lru_st, "conv": conv_st.astype(jnp.bfloat16)}, x
+
+    def attn_step(p, st, x):
+        h = layers.rmsnorm(p["ln"], x)
+        st, a = attn.decode_step(p["attn"], cfg.attn_cfg(), st, h, pos,
+                                 cfg.compute_dtype)
+        x = x + a
+        h = layers.rmsnorm(p["ln2"], x)
+        return st, x + layers.glu_mlp(p["mlp"], h, compute_dtype=cfg.compute_dtype)
+
+    def unit_step(x, scanned):
+        up, ust = scanned
+        new = {}
+        for i, k in enumerate(unit):
+            if k == "rec":
+                new[f"u{i}"], x = rec_step(up[f"u{i}"], ust[f"u{i}"], x)
+            else:
+                new[f"u{i}"], x = attn_step(up[f"u{i}"], ust[f"u{i}"], x)
+        return x, new
+
+    x, body_state = jax.lax.scan(unit_step, x, (params["body"], state["body"]),
+                                 unroll=cfg.scan_unroll)
+    new_tail = []
+    for p, st, k in zip(params["tail"], state["tail"], tail):
+        if k == "rec":
+            st, x = rec_step(p, st, x)
+        else:
+            st, x = attn_step(p, st, x)
+        new_tail.append(st)
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = layers.logits(params["embed"], x, cfg.compute_dtype)
+    return {"body": body_state, "tail": new_tail}, logits

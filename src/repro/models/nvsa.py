@@ -1,0 +1,258 @@
+"""NVSA — Neuro-Vector-Symbolic Architecture (Hersche et al. 2023), in JAX.
+
+Pipeline (paper Tab. I / Listing 1):
+  neuro:    ResNet frontend -> per-attribute PMFs over discrete values
+  symbolic: FPE block-code encoding -> VSA rule abduction (which RPM rule
+            explains rows 1-2?) -> rule execution on row 3 via circular
+            conv/corr (the paper's key kernels) -> candidate match_prob
+
+Mixed precision (paper Sec IV-D / Tab. IV): the NN stream runs fake-quant
+int8, the symbolic stream int4 — precision is a config knob so the Tab. IV
+sweep is one loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.raven import RavenConfig, N_RULES
+from repro.nn import init as nninit
+from repro.nn import layers, resnet
+from repro.vsa import fpe, ops as vsa
+
+
+@dataclasses.dataclass(frozen=True)
+class NVSAConfig:
+    raven: RavenConfig = RavenConfig()
+    blocks: int = 4
+    d: int = 256
+    cnn_width: int = 16
+    cnn_feat: int = 128
+    rule_temp: float = 0.1
+    answer_temp: float = 0.05
+    nn_precision: str = "fp32"    # fp32 | bf16 | int8 | int4
+    symb_precision: str = "fp32"  # fp32 | bf16 | int8 | int4
+
+
+# ---------------------------------------------------------------------------
+# Parameters (trained) and codebooks (static, seed-derived)
+# ---------------------------------------------------------------------------
+
+
+def nvsa_spec(cfg: NVSAConfig):
+    rcfg = resnet.ResNetConfig(in_channels=1, width=cfg.cnn_width,
+                               out_dim=cfg.cnn_feat)
+    heads = {
+        f"attr{i}": layers.dense_spec(cfg.cnn_feat, n, ("mlp", None), bias=True)
+        for i, n in enumerate(cfg.raven.attr_sizes)
+    }
+    return {"frontend": resnet.resnet_spec(rcfg), "heads": heads}
+
+
+def nvsa_codebooks(cfg: NVSAConfig, key: jax.Array):
+    """Static VSA memory: FPE codebooks per attribute + shift codes + roles."""
+    keys = jax.random.split(key, cfg.raven.n_attrs + 1)
+    books, shifts = [], []
+    for i, n in enumerate(cfg.raven.attr_sizes):
+        phase = fpe.fpe_base_phase(keys[i], cfg.blocks, cfg.d)
+        # values up to 2n-2 occur under arith_plus predictions
+        books.append(fpe.fpe_codebook(phase, 2 * n - 1, cfg.d))
+        shifts.append(fpe.fpe_encode(phase, jnp.array([1.0, -1.0]), cfg.d))
+    roles = vsa.random_codebook(keys[-1], cfg.raven.n_attrs, cfg.blocks, cfg.d)
+    return {"books": books, "shifts": shifts, "roles": roles}
+
+
+# ---------------------------------------------------------------------------
+# Precision emulation (Tab. IV)
+# ---------------------------------------------------------------------------
+
+_BITS = {"int8": 8, "int4": 4}
+
+
+def fake_quant(x: jax.Array, precision: str) -> jax.Array:
+    if precision == "fp32":
+        return x
+    if precision == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    bits = _BITS[precision]
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / qmax
+    return jnp.round(x / scale).clip(-qmax - 1, qmax) * scale
+
+
+def quant_tree(tree, precision: str):
+    return jax.tree.map(lambda x: fake_quant(x, precision)
+                        if x.dtype in (jnp.float32, jnp.bfloat16) else x, tree)
+
+
+def nvsa_memory_bytes(cfg: NVSAConfig, params) -> int:
+    """Model memory footprint at the configured mixed precision (Tab. IV)."""
+    bits_nn = {"fp32": 32, "bf16": 16, "int8": 8, "int4": 4}[cfg.nn_precision]
+    bits_sy = {"fp32": 32, "bf16": 16, "int8": 8, "int4": 4}[cfg.symb_precision]
+    nn_elems = sum(x.size for x in jax.tree.leaves(params))
+    sy_elems = sum((2 * n - 1) * cfg.blocks * cfg.d for n in cfg.raven.attr_sizes)
+    sy_elems += (2 * cfg.raven.n_attrs + cfg.raven.n_attrs) * cfg.blocks * cfg.d
+    return (nn_elems * bits_nn + sy_elems * bits_sy) // 8
+
+
+# ---------------------------------------------------------------------------
+# Neuro frontend
+# ---------------------------------------------------------------------------
+
+
+def frontend_pmfs(params, cfg: NVSAConfig, images: jax.Array, train: bool = True):
+    """images: (N, H, W, 1) -> list of (N, V_attr) PMFs (+ logits)."""
+    p = params
+    if cfg.nn_precision in _BITS:
+        p = quant_tree(params, cfg.nn_precision)
+    compute_dtype = jnp.bfloat16 if cfg.nn_precision == "bf16" else jnp.float32
+    rcfg = resnet.ResNetConfig(in_channels=1, width=cfg.cnn_width,
+                               out_dim=cfg.cnn_feat)
+    # train=True => stateless functional BN (batch statistics); the
+    # frontend is trained and evaluated the same way (no EMA state).
+    feats = resnet.resnet(p["frontend"], rcfg, images, train=train,
+                          compute_dtype=compute_dtype)
+    feats = jax.nn.relu(feats)
+    logits = [layers.dense(p["heads"][f"attr{i}"], feats, compute_dtype).astype(jnp.float32)
+              for i in range(cfg.raven.n_attrs)]
+    return [jax.nn.softmax(l, axis=-1) for l in logits], logits
+
+
+def frontend_loss(params, cfg: NVSAConfig, images: jax.Array, attrs: jax.Array):
+    """Supervised attribute CE (the NVSA frontend training objective)."""
+    _, logits = frontend_pmfs(params, cfg, images, train=True)
+    loss = 0.0
+    for i, l in enumerate(logits):
+        logp = jax.nn.log_softmax(l, axis=-1)
+        loss = loss - jnp.mean(jnp.take_along_axis(logp, attrs[:, i: i + 1], axis=1))
+    return loss / cfg.raven.n_attrs
+
+
+# ---------------------------------------------------------------------------
+# Symbolic reasoning (VSA)
+# ---------------------------------------------------------------------------
+
+
+def _pmf_to_code(pmf: jax.Array, book: jax.Array, n: int) -> jax.Array:
+    """Probability-weighted superposition: (N, V) × (Vbig, B, d) -> (N, B, d).
+    Only the first ``n`` book entries correspond to observable values."""
+    return jnp.einsum("nv,vbd->nbd", pmf, book[:n])
+
+
+def _rule_predict(rule_idx: int, c1: jax.Array, c2: jax.Array, shifts: jax.Array):
+    """Predict row's 3rd code from first two under each RPM rule (FPE algebra)."""
+    if rule_idx == 0:  # constant
+        return c2
+    if rule_idx == 1:  # progression +1
+        return vsa.bind(c2, shifts[0][None])
+    if rule_idx == 2:  # progression -1
+        return vsa.bind(c2, shifts[1][None])
+    if rule_idx == 3:  # arithmetic a3 = a1 + a2
+        return vsa.bind(c1, c2)
+    # arithmetic a3 = a1 - a2  (spectral conj subtraction)
+    return vsa.unbind(c2, c1)
+
+
+def reason(cfg: NVSAConfig, codebooks, ctx_pmfs, cand_pmfs):
+    """Symbolic stage.
+
+    ctx_pmfs:  list per attr of (N, 8, V) PMFs for the context panels
+    cand_pmfs: list per attr of (N, 8, V) PMFs for the candidate panels
+    Returns (answer_logprobs (N, 8), rule_probs (n_attr, N, R)).
+    """
+    n = ctx_pmfs[0].shape[0]
+    rule_probs_all = []
+    pred_codes = []  # per attr: (N, B, d) predicted 9th-panel code
+    for ai in range(cfg.raven.n_attrs):
+        book = codebooks["books"][ai]
+        shifts = codebooks["shifts"][ai]
+        n_vals = cfg.raven.attr_sizes[ai]
+        pmf = ctx_pmfs[ai]  # (N, 8, V)
+        codes = _pmf_to_code(pmf.reshape(n * 8, -1), book, n_vals)
+        codes = codes.reshape(n, 8, cfg.blocks, cfg.d)
+        # score each rule on the two complete rows
+        scores = []
+        for r in range(N_RULES):
+            s = 0.0
+            for r0 in (0, 3):
+                pred = _rule_predict(r, codes[:, r0], codes[:, r0 + 1], shifts)
+                s = s + vsa.similarity(pred, codes[:, r0 + 2])
+            scores.append(s / 2.0)
+        scores = jnp.stack(scores, axis=-1)  # (N, R)
+        rule_prob = jax.nn.softmax(scores / cfg.rule_temp, axis=-1)
+        rule_probs_all.append(rule_prob)
+        # execute all rules on row 3, mix by posterior
+        preds = jnp.stack(
+            [_rule_predict(r, codes[:, 6], codes[:, 7], shifts)
+             for r in range(N_RULES)], axis=1)  # (N, R, B, d)
+        pred_codes.append(jnp.einsum("nr,nrbd->nbd", rule_prob, preds))
+
+    # compose panel-level codes with attribute roles, compare to candidates
+    roles = codebooks["roles"]  # (A, B, d)
+    pred_panel = sum(
+        vsa.bind(pred_codes[ai], roles[ai][None])
+        for ai in range(cfg.raven.n_attrs))  # (N, B, d)
+    cand_codes = []
+    for ai in range(cfg.raven.n_attrs):
+        book = codebooks["books"][ai]
+        n_vals = cfg.raven.attr_sizes[ai]
+        c = _pmf_to_code(cand_pmfs[ai].reshape(n * 8, -1), book, n_vals)
+        cand_codes.append(vsa.bind(c.reshape(n, 8, cfg.blocks, cfg.d),
+                                   roles[ai][None, None]))
+    cand_panel = sum(cand_codes)  # (N, 8, B, d)
+
+    if cfg.symb_precision in _BITS:
+        pred_panel = fake_quant(pred_panel, cfg.symb_precision)
+        cand_panel = fake_quant(cand_panel, cfg.symb_precision)
+
+    sims = jax.vmap(lambda q, c: vsa.similarity(q[None], c))(pred_panel, cand_panel)
+    logp = jax.nn.log_softmax(sims / cfg.answer_temp, axis=-1)
+    return logp, jnp.stack(rule_probs_all)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def solve(params, codebooks, cfg: NVSAConfig, context: jax.Array,
+          candidates: jax.Array):
+    """context: (N, 8, H, W, 1); candidates: (N, 8, H, W, 1).
+
+    Returns (answer_logprobs (N, 8), rule_probs (A, N, R)).
+    """
+    n, _, h, w, c = context.shape
+    if cfg.symb_precision in _BITS:
+        codebooks = {
+            "books": [fake_quant(b, cfg.symb_precision) for b in codebooks["books"]],
+            "shifts": [fake_quant(s, cfg.symb_precision) for s in codebooks["shifts"]],
+            "roles": fake_quant(codebooks["roles"], cfg.symb_precision),
+        }
+    ctx_pmfs, _ = frontend_pmfs(params, cfg, context.reshape(n * 8, h, w, c))
+    cand_pmfs, _ = frontend_pmfs(params, cfg, candidates.reshape(n * 8, h, w, c))
+    ctx_pmfs = [p.reshape(n, 8, -1) for p in ctx_pmfs]
+    cand_pmfs = [p.reshape(n, 8, -1) for p in cand_pmfs]
+    return reason(cfg, codebooks, ctx_pmfs, cand_pmfs)
+
+
+def accuracy(params, codebooks, cfg: NVSAConfig, batch) -> tuple[float, float]:
+    """Returns (answer accuracy, rule accuracy)."""
+    logp, rule_probs = solve(params, codebooks, cfg,
+                             jnp.asarray(batch["context"]),
+                             jnp.asarray(batch["candidates"]))
+    ans_acc = jnp.mean(jnp.argmax(logp, -1) == jnp.asarray(batch["answer"]))
+    rules_pred = jnp.argmax(rule_probs, -1)  # (A, N)
+    rule_acc = jnp.mean(rules_pred.T == jnp.asarray(batch["rules"]))
+    return float(ans_acc), float(rule_acc)
+
+
+def oracle_pmfs(cfg: NVSAConfig, attrs: jax.Array):
+    """Ground-truth one-hot PMFs (symbolic-only upper bound, used in tests)."""
+    return [jax.nn.one_hot(attrs[..., i], n)
+            for i, n in enumerate(cfg.raven.attr_sizes)]

@@ -1,0 +1,105 @@
+"""PrAE — Probabilistic Abduction and Execution (Zhang et al., CVPR'21), in JAX.
+
+Unlike NVSA/LVRF, PrAE's symbolic engine operates directly on attribute
+*probability tables*: rules transform PMFs (progression = index shift,
+arithmetic = discrete [cross-]correlation of distributions), abduction
+scores rules by the likelihood they assign to the observed third panel, and
+execution produces the 9th-panel PMF. This gives the DAG a symbolic stream
+with a different op mix (scatter/shift/reduce — SIMD-unit shaped, no MXU)
+— exercising NSFlow's claim of generality across NSAI workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.raven import RavenConfig, N_RULES
+
+
+@dataclasses.dataclass(frozen=True)
+class PrAEConfig:
+    raven: RavenConfig = RavenConfig()
+    rule_temp: float = 0.1
+    answer_temp: float = 0.05
+    eps: float = 1e-6
+
+
+def _shift_pmf(p: jax.Array, delta: int) -> jax.Array:
+    """Progression: P(v) -> P(v - delta) with wraparound (matches generator)."""
+    return jnp.roll(p, delta, axis=-1)
+
+
+def _conv_pmf(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Arithmetic plus: distribution of a1 + a2 (mod n, matches generator)."""
+    n = p.shape[-1]
+    idx = (jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) % n  # (v, k): v-k
+    # out[v] = sum_k p[k] q[(v - k) % n]
+    return jnp.einsum("...k,...vk->...v", p, q[..., idx])
+
+
+def _corr_pmf(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Arithmetic minus: distribution of a1 - a2 (mod n)."""
+    n = p.shape[-1]
+    idx = (jnp.arange(n)[:, None] + jnp.arange(n)[None, :]) % n
+    # out[v] = sum_k q[k] p[(v + k) % n]
+    return jnp.einsum("...k,...vk->...v", q, p[..., idx])
+
+
+def rule_execute(rule_idx: int, p1: jax.Array, p2: jax.Array) -> jax.Array:
+    if rule_idx == 0:
+        return p2
+    if rule_idx == 1:
+        return _shift_pmf(p2, 1)
+    if rule_idx == 2:
+        return _shift_pmf(p2, -1)
+    if rule_idx == 3:
+        return _conv_pmf(p1, p2)
+    return _corr_pmf(p1, p2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def solve_from_pmfs(cfg: PrAEConfig, ctx_pmfs, cand_pmfs):
+    """Pure probabilistic abduction+execution.
+
+    ctx_pmfs / cand_pmfs: lists per attr of (N, 8, V).
+    Returns (answer logprobs (N, 8), rule posteriors (A, N, R)).
+    """
+    total = 0.0
+    posts = []
+    for ai in range(cfg.raven.n_attrs):
+        pm = ctx_pmfs[ai]
+        # abduction: likelihood of observed third panel under each rule
+        logits = []
+        for r in range(N_RULES):
+            ll = 0.0
+            for r0 in (0, 3):
+                pred = rule_execute(r, pm[:, r0], pm[:, r0 + 1])
+                # expected log-likelihood of observed PMF under prediction
+                ll = ll + jnp.sum(pm[:, r0 + 2] * jnp.log(pred + cfg.eps), axis=-1)
+            logits.append(ll / 2.0)
+        logits = jnp.stack(logits, axis=-1)  # (N, R)
+        post = jax.nn.softmax(logits / cfg.rule_temp, axis=-1)
+        posts.append(post)
+        # execution on row 3
+        preds = jnp.stack([rule_execute(r, pm[:, 6], pm[:, 7])
+                           for r in range(N_RULES)], axis=1)  # (N, R, V)
+        pred9 = jnp.einsum("nr,nrv->nv", post, preds)
+        pred9 = pred9 / jnp.maximum(pred9.sum(-1, keepdims=True), cfg.eps)
+        # candidate scoring: cross-entropy against predicted PMF
+        score = jnp.einsum("npv,nv->np", cand_pmfs[ai], jnp.log(pred9 + cfg.eps))
+        total = total + score
+    logp = jax.nn.log_softmax(total / cfg.answer_temp, axis=-1)
+    return logp, jnp.stack(posts)
+
+
+def accuracy(cfg: PrAEConfig, ctx_pmfs, cand_pmfs, answers, rules=None):
+    logp, posts = solve_from_pmfs(cfg, ctx_pmfs, cand_pmfs)
+    acc = float(jnp.mean(jnp.argmax(logp, -1) == answers))
+    racc = None
+    if rules is not None:
+        racc = float(jnp.mean(jnp.argmax(posts, -1).T == rules))
+    return acc, racc

@@ -1,0 +1,128 @@
+"""RWKV-6 (Finch) language model — attention-free, O(1)-state decode.
+
+Assigned arch ``rwkv6-7b``: 32L, d_model 4096, d_ff 14336, vocab 65536.
+The per-layer state is (heads, 64, 64) + token-shift carries, so the
+``long_500k`` decode cell runs with constant memory — the arch family the
+shape note directs long-context decode at.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as nninit
+from repro.nn import layers, ssm
+from repro.nn.init import P
+from repro.models.lm import _xent, _stack_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 64
+    chunk: int = 16
+    impl: str = "chunked"
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: int = 1
+
+    def tm(self) -> ssm.RWKV6Config:
+        return ssm.RWKV6Config(self.d_model, self.head_dim, chunk=self.chunk,
+                               impl=self.impl)
+
+
+def _layer_spec(cfg: RWKVConfig):
+    return {
+        "ln1": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "ln2": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "tm": ssm.timemix_spec(cfg.tm(), cfg.param_dtype),
+        "cm": ssm.channelmix_spec(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def rwkv_spec(cfg: RWKVConfig):
+    return {
+        "embed": layers.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "ln_in": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "final_norm": layers.layernorm_spec(cfg.d_model, cfg.param_dtype),
+        "body": _stack_spec(_layer_spec(cfg), cfg.n_layers),
+        "head": layers.dense_spec(cfg.d_model, cfg.vocab, ("embed", "vocab"),
+                                  dtype=cfg.param_dtype),
+    }
+
+
+def forward(params, cfg: RWKVConfig, tokens: jax.Array):
+    x = layers.embedding(params["embed"], tokens, cfg.compute_dtype)
+    x = layers.layernorm(params["ln_in"], x)
+
+    def layer_fwd(x, p):
+        h = layers.layernorm(p["ln1"], x)
+        x = x + ssm.timemix(p["tm"], cfg.tm(), h, cfg.compute_dtype)
+        h = layers.layernorm(p["ln2"], x)
+        x = x + ssm.channelmix(p["cm"], h, compute_dtype=cfg.compute_dtype)
+        return x, 0.0
+
+    body = layer_fwd
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["body"], unroll=cfg.scan_unroll)
+    x = layers.layernorm(params["final_norm"], x)
+    return x
+
+
+def loss_fn(params, cfg: RWKVConfig, batch) -> jax.Array:
+    hidden = forward(params, cfg, batch["tokens"])
+    logits = layers.dense(params["head"], hidden, cfg.compute_dtype)
+    return _xent(logits, batch["targets"])
+
+
+def state_shapes(cfg: RWKVConfig, batch: int):
+    tm = cfg.tm()
+    h, hd = tm.n_heads, tm.head_dim
+    per_layer = {
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "tm_x": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+        "cm_x": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+    }
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape,
+                                                       s.dtype), per_layer)
+
+
+def init_state(cfg: RWKVConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_shapes(cfg, batch))
+
+
+def decode_step(params, cfg: RWKVConfig, state, token: jax.Array, pos: jax.Array):
+    """O(1)-state decode. state: stacked per-layer recurrent carries."""
+    x = layers.embedding(params["embed"], token, cfg.compute_dtype)
+    x = layers.layernorm(params["ln_in"], x)
+
+    def layer_step(x, scanned):
+        p, st = scanned
+        h = layers.layernorm(p["ln1"], x)
+        tm_state = {"wkv": st["wkv"], "x_prev": st["tm_x"]}
+        tm_state, y = ssm.timemix_step(p["tm"], cfg.tm(), tm_state, h,
+                                       cfg.compute_dtype)
+        x = x + y
+        h = layers.layernorm(p["ln2"], x)
+        y = ssm.channelmix(p["cm"], h[:, None, :], st["cm_x"],
+                           compute_dtype=cfg.compute_dtype)[:, 0]
+        x = x + y
+        new_st = {"wkv": tm_state["wkv"], "tm_x": tm_state["x_prev"],
+                  "cm_x": h.astype(jnp.bfloat16)}
+        return x, new_st
+
+    x, new_state = jax.lax.scan(layer_step, x, (params["body"], state),
+                                unroll=cfg.scan_unroll)
+    x = layers.layernorm(params["final_norm"], x)
+    logits = layers.dense(params["head"], x, cfg.compute_dtype)
+    return new_state, logits

@@ -1,0 +1,75 @@
+"""InternVL2-style VLM backbone: LLM over [image patch embeds ‖ text tokens].
+
+Per the assignment brief the modality frontend is a STUB — ``input_specs``
+supplies precomputed patch embeddings (B, n_img, d_model) as if InternViT +
+the MLP projector had run; the assigned backbone (InternLM2-20B class) is
+the full transformer below. Training computes loss on text positions only;
+decode is standard LM decode over a cache whose prefix holds image tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    lm: lm.LMConfig
+    n_img_tokens: int = 1024
+
+
+def vlm_spec(cfg: VLMConfig):
+    return lm.lm_spec(cfg.lm)
+
+
+def forward(params, cfg: VLMConfig, patch_embeds: jax.Array, tokens: jax.Array):
+    """patch_embeds: (B, N_img, D) [stub frontend output]; tokens: (B, S)."""
+    c = cfg.lm
+    x_txt = layers.embedding(params["embed"], tokens, c.compute_dtype)
+    x = jnp.concatenate([patch_embeds.astype(c.compute_dtype), x_txt], axis=1)
+    # reuse the LM body on pre-built embeddings
+    plan = lm.stage_plan(c)
+    positions = jnp.arange(x.shape[1])
+    aux_total = 0.0
+    for p, (a, f) in zip(params["prefix"], plan.prefix):
+        x, aux = lm._layer_fwd(c, a, f, p, x, positions)
+        aux_total += aux
+    if plan.repeats:
+        def unit_fwd(x, up):
+            aux_u = 0.0
+            for i, (a, f) in enumerate(plan.unit):
+                x, aux = lm._layer_fwd(c, a, f, up[f"u{i}"], x, positions)
+                aux_u += aux
+            return x, aux_u
+        if c.remat:
+            unit_fwd = jax.checkpoint(unit_fwd)
+        x, auxs = jax.lax.scan(unit_fwd, x, params["body"], unroll=c.scan_unroll)
+        aux_total += jnp.sum(auxs)
+    for p, (a, f) in zip(params["tail"], plan.tail):
+        x, aux = lm._layer_fwd(c, a, f, p, x, positions)
+        aux_total += aux
+    x = layers.rmsnorm(params["final_norm"], x, offset=c.norm_offset)
+    return x, aux_total
+
+
+def loss_fn(params, cfg: VLMConfig, batch) -> jax.Array:
+    """batch: {patch_embeds, tokens, targets} — loss on text span only."""
+    hidden, aux = forward(params, cfg, batch["patch_embeds"], batch["tokens"])
+    text_hidden = hidden[:, cfg.n_img_tokens:, :]
+    logits = lm.lm_logits(params, cfg.lm, text_hidden)
+    return lm._xent(logits, batch["targets"]) + 0.01 * aux
+
+
+# decode: identical machinery to the text LM (image prefix lives in cache)
+cache_shapes = lambda cfg, batch, max_len: lm.cache_shapes(cfg.lm, batch, max_len)
+init_caches = lambda cfg, batch, max_len: lm.init_caches(cfg.lm, batch, max_len)
+
+
+def decode_step(params, cfg: VLMConfig, caches, token, pos):
+    return lm.decode_step(params, cfg.lm, caches, token, pos)

@@ -1,0 +1,4 @@
+from repro.nn import attention, layers, moe, resnet, ssm
+from repro.nn.init import P, materialize, shapes, axes
+
+__all__ = ["P", "materialize", "shapes", "axes", "layers", "attention", "moe", "ssm", "resnet"]

@@ -1,0 +1,396 @@
+"""Attention: GQA / MQA / MLA, full + sliding-window, train/prefill/decode.
+
+Memory-bounded prefill: long sequences use a chunked online-softmax
+(flash-attention-style) computed with ``lax.scan`` over KV blocks, so the
+32k-prefill dry-run cells never materialize an (S, S) score tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import P
+from repro.nn import layers
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_base: float = 10000.0
+    rotary_dim: int | None = None  # partial rotary if < head_dim
+    window: int | None = None  # sliding-window size (None = full)
+    qkv_bias: bool = False
+    softmax_scale: float | None = None
+    qk_norm: bool = False  # gemma3-style per-head RMS norm of q/k
+    shard_heads: bool = True  # constrain q/k/v head axis onto the model axis
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or 1.0 / math.sqrt(self.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: AttnConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": P((d, h, hd), ("embed", "heads", "hd"), dtype=dtype,
+                scale=1.0 / math.sqrt(d)),
+        "wk": P((d, kv, hd), ("embed", "kv", "hd"), dtype=dtype,
+                scale=1.0 / math.sqrt(d)),
+        "wv": P((d, kv, hd), ("embed", "kv", "hd"), dtype=dtype,
+                scale=1.0 / math.sqrt(d)),
+        "wo": P((h, hd, d), ("heads", "hd", "embed"), dtype=dtype,
+                scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((h, hd), ("heads", "hd"), init="zeros", dtype=dtype)
+        spec["bk"] = P((kv, hd), ("kv", "hd"), init="zeros", dtype=dtype)
+        spec["bv"] = P((kv, hd), ("kv", "hd"), init="zeros", dtype=dtype)
+    if cfg.qk_norm:
+        spec["qnorm"] = P((hd,), ("hd",), init="ones", dtype=dtype)
+        spec["knorm"] = P((hd,), ("hd",), init="ones", dtype=dtype)
+    return spec
+
+
+def _headwise_rms(x, scale, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale).astype(x.dtype)
+
+
+def gqa_project(params, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+                compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+    x = x.astype(compute_dtype)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(compute_dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    if cfg.qk_norm:
+        q = _headwise_rms(q, params["qnorm"].astype(jnp.float32))
+        k = _headwise_rms(k, params["knorm"].astype(jnp.float32))
+    q = layers.apply_rope(q, positions, cfg.rope_base, cfg.rotary_dim)
+    k = layers.apply_rope(k, positions, cfg.rope_base, cfg.rotary_dim)
+    if cfg.shard_heads:
+        # keep the (quadratic) attention math head-sharded over the model
+        # axis even when the weights fell back to row-parallel sharding —
+        # GSPMD pads uneven head counts. Without this the scores/AV einsums
+        # replicate across the whole model axis (16× waste at TP=16).
+        from repro.distributed import constraints as C
+
+        q, k, v = C.batch_seq_heads(q), C.batch_seq_heads(k), C.batch_seq_heads(v)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core attention computations
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)).reshape(
+        b, s, kv * groups, hd
+    )
+
+
+def causal_mask(sq: int, skv: int, q_offset: int = 0, window: int | None = None):
+    """(sq, skv) boolean mask — True = attendable."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def attend_full(q, k, v, mask, scale: float) -> jax.Array:
+    """Direct attention. q: (B,Sq,H,hd), k/v: (B,Skv,H,hd), mask: (Sq,Skv)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend_chunked(q, k, v, scale: float, q_offset: int = 0,
+                   window: int | None = None, kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks (flash-style).
+
+    Never materializes more than (B, H, Sq, kv_chunk) scores. Causal.
+    """
+    b, sq, h, hd = q.shape
+    vd = v.shape[-1]  # may differ from hd (MLA: qk 192 vs v 128)
+    skv = k.shape[1]
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, vd).transpose(1, 0, 2, 3, 4)
+
+    qpos = jnp.arange(sq) + q_offset  # absolute query positions
+
+    def step(carry, inp):
+        m, l, acc = carry  # (B,H,Sq), (B,H,Sq), (B,H,Sq,hd) fp32
+        ci, (kb, vb) = inp
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        valid = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < skv)
+        if window is not None:
+            valid = valid & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        jnp.zeros((b, h, sq, vd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+CHUNKED_THRESHOLD = 4096
+
+
+def attention(params, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+              compute_dtype=jnp.bfloat16, kv_chunk: int = 1024) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = gqa_project(params, cfg, x, positions, compute_dtype)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+    s = x.shape[1]
+    if s > CHUNKED_THRESHOLD:
+        out = attend_chunked(q, k, v, cfg.scale, window=cfg.window, kv_chunk=kv_chunk)
+    else:
+        mask = causal_mask(s, s, window=cfg.window)
+        out = attend_full(q, k, v, mask, cfg.scale)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_shape(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Returns ShapeDtypeStructs {k, v}. Sliding-window layers allocate only
+    the window (ring buffer) — this is the gemma3 long_500k memory saver."""
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    shp = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dtype),
+        "v": jax.ShapeDtypeStruct(shp, dtype),
+    }
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        kv_cache_shape(cfg, batch, max_len, dtype))
+
+
+def decode_step(params, cfg: AttnConfig, cache, x_t: jax.Array, pos: jax.Array,
+                compute_dtype=jnp.bfloat16):
+    """One-token decode. x_t: (B, D); pos: scalar int32 (tokens so far).
+
+    Returns (new_cache, out (B, D)). Ring-buffer update for windowed layers.
+    """
+    b, d = x_t.shape
+    q, k_t, v_t = gqa_project(params, cfg, x_t[:, None, :], pos[None], compute_dtype)
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len if cfg.window else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_t.astype(cache["k"].dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_t.astype(cache["v"].dtype),
+                                           (0, slot, 0, 0))
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k_cache.astype(compute_dtype), groups)
+    v = _repeat_kv(v_cache.astype(compute_dtype), groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * cfg.scale
+    kpos = jnp.arange(cache_len)
+    if cfg.window:
+        # ring buffer: entry i holds absolute position p with p % L == i, the
+        # latest such p <= pos. valid if within window.
+        age = (slot - kpos) % cache_len
+        valid = (age < jnp.minimum(pos + 1, cache_len))
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)[:, 0]
+    y = jnp.einsum("bhe,hed->bd", out, params["wo"].astype(compute_dtype))
+    return {"k": k_cache, "v": v_cache}, y
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3), with absorbed decode path
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.qk_nope_dim + self.qk_rope_dim)
+
+
+def mla_spec(cfg: MLAConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = lambda fan: 1.0 / math.sqrt(fan)
+    return {
+        "wq_a": P((d, r_q), ("embed", "qlora"), dtype=dtype, scale=s(d)),
+        "q_a_norm": P((r_q,), ("qlora",), init="ones", dtype=dtype),
+        "wq_b": P((r_q, h, dn + dr), ("qlora", "heads", "hd"), dtype=dtype, scale=s(r_q)),
+        "wkv_a": P((d, r_kv + dr), ("embed", "kvlora"), dtype=dtype, scale=s(d)),
+        "kv_a_norm": P((r_kv,), ("kvlora",), init="ones", dtype=dtype),
+        "wk_b": P((r_kv, h, dn), ("kvlora", "heads", "hd"), dtype=dtype, scale=s(r_kv)),
+        "wv_b": P((r_kv, h, dv), ("kvlora", "heads", "hd"), dtype=dtype, scale=s(r_kv)),
+        "wo": P((h, dv, d), ("heads", "hd", "embed"), dtype=dtype, scale=s(h * dv)),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mla_attention(params, cfg: MLAConfig, x: jax.Array, positions: jax.Array,
+                  compute_dtype=jnp.bfloat16, kv_chunk: int = 1024) -> jax.Array:
+    """Train/prefill MLA: decompress K/V per head, chunked causal attention."""
+    x = x.astype(compute_dtype)
+    b, s, _ = x.shape
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(compute_dtype)),
+              params["q_a_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["wq_b"].astype(compute_dtype))
+    q_nope, q_pe = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(compute_dtype))
+    c_kv = _rms(kv_a[..., : cfg.kv_lora_rank], params["kv_a_norm"])
+    k_pe = kv_a[..., cfg.kv_lora_rank:][:, :, None, :]  # (B,S,1,dr) shared head
+    q_pe = layers.apply_rope(q_pe, positions, cfg.rope_base)
+    k_pe = layers.apply_rope(k_pe, positions, cfg.rope_base)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["wk_b"].astype(compute_dtype))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, params["wv_b"].astype(compute_dtype))
+    k_pe_b = jnp.broadcast_to(k_pe, (b, s, cfg.n_heads, cfg.qk_rope_dim))
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    if s > CHUNKED_THRESHOLD:
+        out = attend_chunked(q_full, k_full, v, cfg.scale, kv_chunk=kv_chunk)
+    else:
+        out = attend_full(q_full, k_full, v, causal_mask(s, s), cfg.scale)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(compute_dtype))
+
+
+def mla_cache_shape(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Compressed cache: (c_kv ‖ k_pe) per token — the MLA memory win."""
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        mla_cache_shape(cfg, batch, max_len, dtype))
+
+
+def mla_decode_step(params, cfg: MLAConfig, cache, x_t: jax.Array, pos: jax.Array,
+                    compute_dtype=jnp.bfloat16):
+    """Absorbed decode: attention runs in the compressed (rank-512) space.
+
+    score = (q_nope @ W_kb)ᵀ c + q_peᵀ k_pe ; out = (attn @ c) @ W_vb.
+    """
+    x_t = x_t.astype(compute_dtype)
+    b, _ = x_t.shape
+    cq = _rms(jnp.einsum("bd,dr->br", x_t, params["wq_a"].astype(compute_dtype)),
+              params["q_a_norm"])
+    q = jnp.einsum("br,rhe->bhe", cq, params["wq_b"].astype(compute_dtype))
+    q_nope, q_pe = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_pe = layers.apply_rope(q_pe[:, None], pos[None], cfg.rope_base)[:, 0]
+
+    kv_a = jnp.einsum("bd,dr->br", x_t, params["wkv_a"].astype(compute_dtype))
+    c_t = _rms(kv_a[..., : cfg.kv_lora_rank], params["kv_a_norm"])
+    kpe_t = layers.apply_rope(kv_a[:, None, None, cfg.kv_lora_rank:], pos[None],
+                              cfg.rope_base)[:, 0, 0]
+
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_t[:, None].astype(cache["ckv"].dtype),
+                                       (0, pos, 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe_t[:, None].astype(cache["kpe"].dtype),
+                                       (0, pos, 0))
+
+    # absorb W_kb into the query: q_eff (B, H, r_kv)
+    q_eff = jnp.einsum("bhe,rhe->bhr", q_nope, params["wk_b"].astype(compute_dtype))
+    s_c = jnp.einsum("bhr,bsr->bhs", q_eff, ckv.astype(compute_dtype))
+    s_pe = jnp.einsum("bhe,bse->bhs", q_pe, kpe.astype(compute_dtype))
+    scores = (s_c + s_pe).astype(jnp.float32) * cfg.scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out_c = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(compute_dtype))
+    out = jnp.einsum("bhr,rhe->bhe", out_c, params["wv_b"].astype(compute_dtype))
+    y = jnp.einsum("bhe,hed->bd", out, params["wo"].astype(compute_dtype))
+    return {"ckv": ckv, "kpe": kpe}, y
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec, seamless-m4t)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(params, cfg: AttnConfig, x: jax.Array, enc_kv, compute_dtype=jnp.bfloat16):
+    """x: (B, Sq, D); enc_kv: precomputed {k, v}: (B, Skv, KV, hd)."""
+    x = x.astype(compute_dtype)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(compute_dtype))
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(enc_kv["k"].astype(compute_dtype), groups)
+    v = _repeat_kv(enc_kv["v"].astype(compute_dtype), groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * cfg.scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(compute_dtype))
+
+
+def encode_kv(params, cfg: AttnConfig, enc_out: jax.Array, compute_dtype=jnp.bfloat16):
+    enc_out = enc_out.astype(compute_dtype)
+    k = jnp.einsum("bsd,dhe->bshe", enc_out, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhe->bshe", enc_out, params["wv"].astype(compute_dtype))
+    return {"k": k, "v": v}

@@ -1,0 +1,107 @@
+"""Parameter spec system.
+
+Models declare their parameters ONCE as a pytree of :class:`P` specs
+(shape + logical axes + initializer).  From that single declaration we derive:
+
+- ``materialize(spec, key)``  -> actual parameter pytree (jnp arrays)
+- ``shapes(spec)``            -> ShapeDtypeStruct pytree (dry-run, no allocation)
+- ``axes(spec)``              -> logical-axis pytree (consumed by sharding rules)
+
+This is the substrate equivalent of flax's ``param`` + ``nn.logical_axes`` in
+~100 lines, with no tracing involved, so it is safe to call under
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` without allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A single parameter spec.
+
+    ``axes`` holds one *logical* axis name (or None) per shape dim, e.g.
+    ``("embed", "heads", "hd")``.  Sharding rules later map logical names to
+    mesh axes.
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | uniform | constant
+    scale: float | None = None  # stddev override for normal init
+    dtype: Any = jnp.float32
+    constant: float = 0.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+
+
+def _fan_in(shape: Sequence[int]) -> int:
+    # last axis is the output axis by convention (x @ W)
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def _materialize_one(spec: P, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.constant, spec.dtype)
+    if spec.init == "uniform":
+        lim = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+        return jax.random.uniform(key, spec.shape, spec.dtype, -lim, lim)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(1, _fan_in(spec.shape)))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def materialize(spec_tree, key: jax.Array):
+    """Build real parameters from a spec tree with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_materialize_one(leaf, jax.random.fold_in(key, i)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shapes(spec_tree):
+    """ShapeDtypeStruct tree — safe for .lower() without any allocation."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def axes(spec_tree):
+    """Logical-axis tree matching the spec tree structure."""
+    return jax.tree.map(lambda p: tuple(p.axes), spec_tree, is_leaf=_is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(spec_tree, is_leaf=_is_spec))
+
+
+def param_bytes(spec_tree) -> int:
+    return sum(
+        int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+        for p in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )
+
+
+def map_with_path(fn: Callable, spec_tree):
+    return jax.tree_util.tree_map_with_path(fn, spec_tree, is_leaf=_is_spec)

@@ -1,0 +1,270 @@
+"""Core pure-JAX layers: dense, embedding, norms, RoPE, conv, pooling.
+
+Every layer is a pair (``<name>_spec`` -> P tree, ``<name>`` apply fn). Specs
+carry logical axis names consumed by ``repro.distributed.sharding_rules``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import P
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    spec = {"w": P((d_in, d_out), axes, init="normal", scale=scale, dtype=dtype)}
+    if bias:
+        spec["b"] = P((d_out,), (axes[1],), init="zeros", dtype=dtype)
+    return spec
+
+
+def dense(params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = params["w"].astype(compute_dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def embedding_spec(vocab: int, d: int, dtype=jnp.float32):
+    return {"table": P((vocab, d), ("vocab", "embed"), init="normal", scale=0.02, dtype=dtype)}
+
+
+def embedding(params, ids: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def logits(params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Tied-embedding readout: x @ table.T"""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      params["table"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": P((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6, offset: float = 0.0) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (offset + params["scale"].astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layernorm_spec(d: int, dtype=jnp.float32):
+    return {
+        "scale": P((d,), ("embed",), init="ones", dtype=dtype),
+        "bias": P((d,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def groupnorm(x: jax.Array, num_groups: int, scale: jax.Array, bias: jax.Array,
+              eps: float = 64e-5) -> jax.Array:
+    """GroupNorm over the last axis (used by RWKV time-mix output)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    ``rotary_dim`` < head_dim applies partial rotary (StableLM-style).
+    """
+    head_dim = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else head_dim
+    xr, xp = x[..., :rd], x[..., rd:]
+    freqs = rope_freqs(rd, base)  # (rd//2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, rd//2)
+    angles = angles[..., None, :]  # (..., seq, 1, rd//2) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([rotated, xp], axis=-1) if rd < head_dim else rotated
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+def relu_sq(x: jax.Array) -> jax.Array:
+    return jnp.square(jax.nn.relu(x))
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+
+def glu_mlp_spec(d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "gate": dense_spec(d_model, d_ff, ("embed", "mlp"), dtype=dtype),
+        "up": dense_spec(d_model, d_ff, ("embed", "mlp"), dtype=dtype),
+        "down": dense_spec(d_ff, d_model, ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def glu_mlp(params, x: jax.Array, act=swiglu, compute_dtype=jnp.bfloat16) -> jax.Array:
+    g = dense(params["gate"], x, compute_dtype)
+    u = dense(params["up"], x, compute_dtype)
+    return dense(params["down"], act(g, u), compute_dtype)
+
+
+def mlp_spec(d_model: int, d_ff: int, dtype=jnp.float32, bias: bool = False):
+    return {
+        "up": dense_spec(d_model, d_ff, ("embed", "mlp"), bias=bias, dtype=dtype),
+        "down": dense_spec(d_ff, d_model, ("mlp", "embed"), bias=bias, dtype=dtype),
+    }
+
+
+def mlp(params, x: jax.Array, act=jax.nn.gelu, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return dense(params["down"], act(dense(params["up"], x, compute_dtype)), compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv / pooling (NSAI CNN frontends)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_spec(c_in: int, c_out: int, k: int, dtype=jnp.float32, bias: bool = False):
+    fan_in = c_in * k * k
+    spec = {
+        "w": P((k, k, c_in, c_out), (None, None, "conv_in", "conv_out"),
+               init="normal", scale=math.sqrt(2.0 / fan_in), dtype=dtype)
+    }
+    if bias:
+        spec["b"] = P((c_out,), ("conv_out",), init="zeros", dtype=dtype)
+    return spec
+
+
+def conv2d(params, x: jax.Array, stride: int = 1, padding: str = "SAME",
+           compute_dtype=jnp.bfloat16) -> jax.Array:
+    """x: (B, H, W, C)."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(compute_dtype),
+        params["w"].astype(compute_dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def batchnorm_spec(c: int, dtype=jnp.float32):
+    return {
+        "scale": P((c,), ("conv_out",), init="ones", dtype=dtype),
+        "bias": P((c,), ("conv_out",), init="zeros", dtype=dtype),
+        "mean": P((c,), ("conv_out",), init="zeros", dtype=dtype),
+        "var": P((c,), ("conv_out",), init="ones", dtype=dtype),
+    }
+
+
+def batchnorm(params, x: jax.Array, train: bool = False, eps: float = 1e-5):
+    """Inference-style BN; in train mode uses batch stats (stats update is the
+    caller's responsibility — the NSAI trainers use functional EMA updates)."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+        var = jnp.var(x.astype(jnp.float32), axis=axes)
+    else:
+        mean, var = params["mean"], params["var"]
+    inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps) * params["scale"].astype(jnp.float32)
+    y = (x.astype(jnp.float32) - mean) * inv + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def maxpool2d(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+
+
+def avgpool_global(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Temporal conv (RG-LRU block)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_spec(d: int, width: int = 4, dtype=jnp.float32):
+    return {
+        "w": P((width, d), (None, "embed"), init="normal",
+               scale=1.0 / math.sqrt(width), dtype=dtype),
+        "b": P((d,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def causal_conv1d(params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Depthwise causal temporal conv. x: (B, S, D)."""
+    w = params["w"].astype(compute_dtype)  # (K, D)
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(k))
+    return y + params["b"].astype(compute_dtype)
+
+
+def causal_conv1d_step(params, state: jax.Array, x_t: jax.Array):
+    """Single decode step. state: (B, K-1, D) trailing inputs; x_t: (B, D)."""
+    w = params["w"].astype(x_t.dtype)
+    k = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, D)
+    y = jnp.einsum("bkd,kd->bd", window, w) + params["b"].astype(x_t.dtype)
+    return window[:, 1:, :], y

@@ -1,0 +1,194 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Two execution paths share one parameter layout (E stacked experts, sharded
+over the ``model`` mesh axis = expert parallelism):
+
+- ``gather``  (default): tokens are TP-replicated across the model axis, so
+  each EP shard locally gathers the tokens routed to *its* experts
+  (capacity-bounded), computes them, scatter-adds into the output, and the
+  per-shard partial outputs merge in the block's existing TP all-reduce.
+  No all-to-all is needed — dispatch communication is zero by construction.
+  This is the TPU adaptation of NSFlow's "array folding": the heterogeneous
+  (router vs expert-matmul) kernels are spatially partitioned over the array.
+
+- ``dense``: one-hot einsum dispatch (Shazeer-style). O(T·E·C) memory — used
+  only by small smoke/equivalence tests, and as the oracle for the EP path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import P
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-on shared experts (DeepSeek)
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    impl: str = "gather"  # gather | dense
+    router_norm_topk: bool = True  # renormalize top-k probs
+    ep_constraint: bool = False  # REFUTED for scatter-built buffers (see §Perf)
+
+
+def moe_spec(cfg: MoEConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = lambda fan: 1.0 / math.sqrt(fan)
+    spec = {
+        "router": P((d, e), ("embed", "experts"), dtype=jnp.float32, scale=s(d)),
+        "gate": P((e, d, f), ("experts", "embed", "mlp"), dtype=dtype, scale=s(d)),
+        "up": P((e, d, f), ("experts", "embed", "mlp"), dtype=dtype, scale=s(d)),
+        "down": P((e, f, d), ("experts", "mlp", "embed"), dtype=dtype, scale=s(f)),
+    }
+    if cfg.n_shared:
+        sf = cfg.shared_d_ff or cfg.d_ff * cfg.n_shared
+        spec["shared"] = layers.glu_mlp_spec(d, sf, dtype=dtype)
+    return spec
+
+
+def route(params, cfg: MoEConfig, x: jax.Array):
+    """x: (T, D) -> (weights (T, k), idx (T, k), probs (T, E) fp32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_norm_topk:
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx, probs
+
+
+def aux_load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss (mean prob × mean assignment fraction)."""
+    me = jnp.mean(probs, axis=0)
+    assign = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum(axis=1)  # (T, E)
+    ce = jnp.mean(assign, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)
+
+
+def _expert_ffn(gate_w, up_w, down_w, xe: jax.Array, compute_dtype) -> jax.Array:
+    """xe: (E, C, D) -> (E, C, D), batched over experts (einsum -> MXU)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, gate_w.astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, up_w.astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, down_w.astype(compute_dtype))
+
+
+def moe_dense(params, cfg: MoEConfig, x: jax.Array, compute_dtype=jnp.bfloat16):
+    """One-hot dispatch oracle. x: (T, D)."""
+    t, d = x.shape
+    w, idx, probs = route(params, cfg, x)
+    cap = _capacity(cfg, t)
+    # position of each (token, slot) within its expert queue (sort-based —
+    # see moe_gather for why not a big cumsum)
+    flat_e = idx.reshape(-1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, cfg.n_experts, dtype=jnp.int32),
+                     axis=0)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - offsets[flat_e[order]]
+    pos_flat = jnp.zeros_like(flat_e).at[order].set(ranks)
+    pos = pos_flat.reshape(t, cfg.top_k)
+    keep = pos < cap
+    onehot_e = jax.nn.one_hot(idx, cfg.n_experts, dtype=compute_dtype)
+    onehot_c = jax.nn.one_hot(pos, cap, dtype=compute_dtype)
+    disp = (onehot_e[..., :, None] * onehot_c[..., None, :]
+            * keep[..., None, None].astype(compute_dtype))  # (T,k,E,C)
+    comb = disp * w[..., None, None].astype(compute_dtype)
+    xe = jnp.einsum("td,tkec->ecd", x.astype(compute_dtype), disp)
+    ye = _expert_ffn(params["gate"], params["up"], params["down"], xe, compute_dtype)
+    y = jnp.einsum("ecd,tkec->td", ye, comb)
+    if cfg.n_shared:
+        y = y + layers.glu_mlp(params["shared"], x, compute_dtype=compute_dtype)
+    return y, aux_load_balance_loss(probs, idx, cfg.n_experts)
+
+
+def moe_gather(params, cfg: MoEConfig, x: jax.Array, compute_dtype=jnp.bfloat16,
+               expert_shard: tuple[int, int] | None = None):
+    """Gather/scatter EP path. x: (T, D) local tokens (replicated over the
+    model axis under TP). ``expert_shard=(lo, n)`` restricts this device to
+    experts [lo, lo+n) — outputs are PARTIAL and must be psum'd over the
+    model axis by the caller (merged with the block's TP reduce).
+    """
+    t, d = x.shape
+    w, idx, probs = route(params, cfg, x)
+    lo, n_local = expert_shard if expert_shard is not None else (0, cfg.n_experts)
+    cap = _capacity(cfg, t)
+
+    # flatten (token, slot) pairs, keep those routed to local experts
+    flat_idx = idx.reshape(-1)  # (T*k,)
+    flat_w = w.reshape(-1)
+    local = (flat_idx >= lo) & (flat_idx < lo + n_local)
+    local_e = jnp.where(local, flat_idx - lo, n_local)  # n_local = overflow bin
+    # queue position within each local expert — sort-based. (A cumsum over
+    # the (T·k, E) one-hot is O(T²·E) under XLA's reduce-window costing and
+    # was the dominant "compute" of MoE cells; sort is O(T log T).)
+    n_pairs = flat_idx.shape[0]
+    counts = jnp.sum(jax.nn.one_hot(local_e, n_local + 1, dtype=jnp.int32),
+                     axis=0)  # (E_local+1,)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])  # tiny cumsum
+    order = jnp.argsort(local_e, stable=True)
+    ranks_sorted = jnp.arange(n_pairs, dtype=jnp.int32) - offsets[local_e[order]]
+    pos = jnp.zeros((n_pairs,), jnp.int32).at[order].set(ranks_sorted)
+    keep = local & (pos >= 0) & (pos < cap)
+    slot = jnp.where(keep, local_e * cap + pos, n_local * cap)  # overflow slot
+
+    token_of = jnp.arange(t * cfg.top_k) // cfg.top_k
+    # gather tokens into (n_local*cap + 1, D) slots
+    xe = jnp.zeros((n_local * cap + 1, d), compute_dtype)
+    xe = xe.at[slot].set(x.astype(compute_dtype)[token_of])
+    xe = xe[:-1].reshape(n_local, cap, d)
+
+    gate_w = jax.lax.dynamic_slice_in_dim(params["gate"], lo, n_local, 0)
+    up_w = jax.lax.dynamic_slice_in_dim(params["up"], lo, n_local, 0)
+    down_w = jax.lax.dynamic_slice_in_dim(params["down"], lo, n_local, 0)
+    if cfg.ep_constraint and expert_shard is None:
+        # EP: keep the per-expert token buffers sharded over the model axis
+        # like the expert weights — without this GSPMD replicates the
+        # (E, cap, D) buffers on every model shard (§Perf deepseek iter 1)
+        from repro.distributed import constraints as C
+
+        xe = C.maybe_constrain(xe, ("model", None, None))
+    ye = _expert_ffn(gate_w, up_w, down_w, xe, compute_dtype)  # (n_local, C, D)
+    if cfg.ep_constraint and expert_shard is None:
+        from repro.distributed import constraints as C
+
+        ye = C.maybe_constrain(ye, ("model", None, None))
+
+    # scatter-add back with combine weights
+    ye_flat = jnp.concatenate([ye.reshape(n_local * cap, d),
+                               jnp.zeros((1, d), compute_dtype)], axis=0)
+    contrib = ye_flat[slot] * (flat_w[:, None] * keep[:, None]).astype(compute_dtype)
+    y = jnp.zeros((t, d), compute_dtype).at[token_of].add(contrib)
+    if cfg.n_shared and (expert_shard is None or lo == 0):
+        # shared expert computed once (on shard 0 when partial; caller psums)
+        y = y + layers.glu_mlp(params["shared"], x, compute_dtype=compute_dtype)
+    return y, aux_load_balance_loss(probs, idx, cfg.n_experts)
+
+
+def moe_block(params, cfg: MoEConfig, x: jax.Array, compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> (y, aux_loss). Under pjit the expert axis sharding of
+    the stacked weights drives XLA SPMD to partition the expert loop."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    if cfg.impl == "dense":
+        y, aux = moe_dense(params, cfg, xf, compute_dtype)
+    else:
+        y, aux = moe_gather(params, cfg, xf, compute_dtype)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,313 @@
+"""Attention-free sequence mixers: RWKV-6 (Finch) time-mix and RG-LRU (Griffin).
+
+RWKV-6 ships two functionally-equivalent forward paths:
+
+- ``wkv6_scan``     token-level ``lax.scan`` — numerically exact; the oracle,
+                    and the per-token decode step.
+- ``wkv6_chunked``  chunk-parallel matmul form (flash-linear-attention style):
+                    O(S/C) sequential steps of MXU-shaped work instead of O(S).
+                    Intra-chunk decay products are computed in log-space fp32
+                    with a clamp at ``LOG_CLAMP`` — exact for realistic decay
+                    magnitudes (|log w| ≲ 60/chunk), the regime trained RWKV
+                    occupies.
+
+This heterogeneous (recurrence = memory-bound stream, channel-mix = MXU
+stream) structure is what makes RWKV the strongest LM-side analogue of the
+paper's neuro/symbolic kernel mix — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import P
+from repro.nn import layers
+
+LOG_CLAMP = 60.0
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    shift_lora: int = 32
+    decay_lora: int = 64
+    chunk: int = 16
+    impl: str = "chunked"  # chunked | scan
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def timemix_spec(cfg: RWKV6Config, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.head_dim
+    h = cfg.n_heads
+    s = lambda fan: 1.0 / math.sqrt(fan)
+    names = ["r", "k", "v", "w", "g"]
+    spec = {
+        # data-dependent token-shift: shared LoRA-A, per-stream B + static mu
+        "mu_x": P((d,), ("embed",), init="uniform", scale=0.5, dtype=dtype),
+        "shift_a": P((d, cfg.shift_lora), ("embed", None), dtype=dtype, scale=s(d)),
+        "shift_b": P((5, cfg.shift_lora, d), (None, None, "embed"), init="zeros", dtype=dtype),
+        "mu": P((5, d), (None, "embed"), init="uniform", scale=0.5, dtype=dtype),
+        # projections
+        "wr": P((d, d), ("embed", "heads_flat"), dtype=dtype, scale=s(d)),
+        "wk": P((d, d), ("embed", "heads_flat"), dtype=dtype, scale=s(d)),
+        "wv": P((d, d), ("embed", "heads_flat"), dtype=dtype, scale=s(d)),
+        "wg": P((d, d), ("embed", "heads_flat"), dtype=dtype, scale=s(d)),
+        "wo": P((d, d), ("heads_flat", "embed"), dtype=dtype, scale=s(d)),
+        # data-dependent decay
+        "w0": P((d,), ("embed",), init="constant", constant=-4.0, dtype=dtype),
+        "decay_a": P((d, cfg.decay_lora), ("embed", None), dtype=dtype, scale=s(d)),
+        "decay_b": P((cfg.decay_lora, d), (None, "embed"), init="zeros", dtype=dtype),
+        # per-(head, channel) bonus
+        "u": P((h, hd), ("heads", "hd"), init="uniform", scale=0.5, dtype=dtype),
+        # output groupnorm
+        "ln_scale": P((d,), ("embed",), init="ones", dtype=dtype),
+        "ln_bias": P((d,), ("embed",), init="zeros", dtype=dtype),
+    }
+    return spec
+
+
+def _shift(x: jax.Array) -> jax.Array:
+    """Previous-token shift along seq. x: (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def timemix_project(params, cfg: RWKV6Config, x: jax.Array, x_prev: jax.Array | None,
+                    compute_dtype=jnp.bfloat16):
+    """Compute r,k,v,g,logw from (B,S,D) input. ``x_prev``: (B,D) carry for
+    decode (last token of previous step), else None for full-sequence."""
+    x = x.astype(compute_dtype)
+    if x_prev is None:
+        sx = _shift(x) - x
+    else:
+        prev = jnp.concatenate([x_prev[:, None].astype(compute_dtype), x[:, :-1]], axis=1)
+        sx = prev - x
+    xr_base = x + sx * params["mu_x"].astype(compute_dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xr_base, params["shift_a"].astype(compute_dtype)))
+    deltas = jnp.einsum("bsr,nrd->nbsd", lora, params["shift_b"].astype(compute_dtype))
+    mixed = [x + sx * (params["mu"][i].astype(compute_dtype) + deltas[i]) for i in range(5)]
+    xr, xk, xv, xw, xg = mixed
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"].astype(compute_dtype))
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"].astype(compute_dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["wg"].astype(compute_dtype)))
+    dlora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, params["decay_a"].astype(compute_dtype)))
+    logw = -jnp.exp(
+        params["w0"].astype(jnp.float32)
+        + jnp.einsum("bsr,rd->bsd", dlora.astype(jnp.float32),
+                     params["decay_b"].astype(jnp.float32))
+    )  # (B, S, D) strictly negative
+    return r, k, v, g, logw
+
+
+def _to_heads(x: jax.Array, h: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, hd)
+
+
+def wkv6_scan(r, k, v, logw, u, state=None):
+    """Exact recurrence. r,k,v: (B,S,H,hd) f32; logw: (B,S,H,hd); u: (H,hd).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ ;  out_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    Returns (out (B,S,H,hd), final state (B,H,hd,hd)).
+    """
+    b, s, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp  # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = jnp.exp(lwt)[..., :, None] * S + kv
+        return S_new, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, logw))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def wkv6_chunked(r, k, v, logw, u, state=None, chunk: int = 16):
+    """Chunk-parallel WKV. Same signature/result as ``wkv6_scan``."""
+    b, s, h, hd = r.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    lw = logw.astype(f32).reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    # (nc, B, H, C, hd)
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), f32)
+
+    def chunk_step(S, inp):
+        rb, kb, vb, lwb = inp  # (B,H,C,hd)
+        L = jnp.cumsum(lwb, axis=2) - lwb  # exclusive cumsum: L_t = sum_{s<t}
+        Ltot = L[:, :, -1:, :] + lwb[:, :, -1:, :]  # (B,H,1,hd)
+        cl = lambda z: jnp.clip(z, -LOG_CLAMP, LOG_CLAMP)
+        r_dec = rb * jnp.exp(cl(L))                      # r̃_t
+        k_inc = kb * jnp.exp(cl(-(L + lwb)))             # k̃_s = k ⊘ P_{s+1}
+        k_out = kb * jnp.exp(cl(Ltot - L - lwb))         # k̂_s for state update
+        A = jnp.einsum("bhtd,bhsd->bhts", r_dec, k_inc)  # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+        diag = jnp.einsum("bhtd,bhtd->bht", rb, u[None, :, None, :] * kb)
+        A = A * tri + jnp.eye(chunk, dtype=f32)[None, None] * diag[..., None]
+        out = jnp.einsum("bhts,bhsd->bhtd", A, vb)
+        out = out + jnp.einsum("bhtd,bhdv->bhtv", r_dec, S)
+        S_new = jnp.exp(cl(Ltot))[..., 0, :, None] * S + jnp.einsum(
+            "bhsd,bhsv->bhdv", k_out, vb)
+        return S_new, out
+
+    state, out = jax.lax.scan(chunk_step, state, (rc, kc, vc, lw))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, h, hd)
+    return out[:, :s], state
+
+
+def timemix(params, cfg: RWKV6Config, x: jax.Array, compute_dtype=jnp.bfloat16):
+    """Full-sequence RWKV6 time mix. x: (B,S,D) -> (B,S,D)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    r, k, v, g, logw = timemix_project(params, cfg, x, None, compute_dtype)
+    rh, kh, vh = (_to_heads(a, h, hd) for a in (r, k, v))
+    lwh = _to_heads(logw, h, hd)
+    u = params["u"].astype(jnp.float32)
+    if cfg.impl == "scan":
+        out, _ = wkv6_scan(rh, kh, vh, lwh, u)
+    else:
+        out, _ = wkv6_chunked(rh, kh, vh, lwh, u, chunk=cfg.chunk)
+    b, s, _, _ = out.shape
+    out = layers.groupnorm(out.reshape(b, s, h * hd).astype(compute_dtype), h,
+                           params["ln_scale"], params["ln_bias"])
+    out = out * g
+    return jnp.einsum("bsd,de->bse", out, params["wo"].astype(compute_dtype))
+
+
+def timemix_state_shape(cfg: RWKV6Config, batch: int):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "x_prev": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def timemix_step(params, cfg: RWKV6Config, state, x_t: jax.Array,
+                 compute_dtype=jnp.bfloat16):
+    """One-token decode: O(1) state. x_t: (B,D)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    r, k, v, g, logw = timemix_project(
+        params, cfg, x_t[:, None], state["x_prev"], compute_dtype)
+    rh, kh, vh = (_to_heads(a, h, hd) for a in (r, k, v))
+    lwh = _to_heads(logw, h, hd)
+    out, wkv = wkv6_scan(rh, kh, vh, lwh, params["u"].astype(jnp.float32),
+                         state["wkv"])
+    b = x_t.shape[0]
+    y = layers.groupnorm(out.reshape(b, 1, h * hd).astype(compute_dtype), h,
+                         params["ln_scale"], params["ln_bias"])
+    y = (y * g)[:, 0]
+    y = jnp.einsum("bd,de->be", y, params["wo"].astype(compute_dtype))
+    return {"wkv": wkv, "x_prev": x_t.astype(jnp.bfloat16)}, y
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix
+# ---------------------------------------------------------------------------
+
+
+def channelmix_spec(d: int, d_ff: int, dtype=jnp.float32):
+    s = lambda fan: 1.0 / math.sqrt(fan)
+    return {
+        "mu_k": P((d,), ("embed",), init="uniform", scale=0.5, dtype=dtype),
+        "wk": P((d, d_ff), ("embed", "mlp"), dtype=dtype, scale=s(d)),
+        "wv": P((d_ff, d), ("mlp", "embed"), dtype=dtype, scale=s(d_ff)),
+    }
+
+
+def channelmix(params, x: jax.Array, x_prev: jax.Array | None = None,
+               compute_dtype=jnp.bfloat16):
+    x = x.astype(compute_dtype)
+    if x_prev is None:
+        sx = _shift(x) - x
+    else:
+        prev = jnp.concatenate([x_prev[:, None].astype(compute_dtype), x[:, :-1]], axis=1)
+        sx = prev - x
+    xk = x + sx * params["mu_k"].astype(compute_dtype)
+    h = layers.relu_sq(jnp.einsum("bsd,df->bsf", xk, params["wk"].astype(compute_dtype)))
+    return jnp.einsum("bsf,fd->bsd", h, params["wv"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    width: int
+    c: float = 8.0
+
+
+def rglru_spec(cfg: RGLRUConfig, dtype=jnp.float32):
+    d = cfg.width
+    s = 1.0 / math.sqrt(d)
+    return {
+        # Λ init so that a = exp(-c·softplus(Λ)) lands in [0.9, 0.999]
+        "lam": P((d,), ("embed",), init="uniform", scale=0.5, dtype=dtype),
+        "wa": P((d, d), ("embed", "embed2"), dtype=dtype, scale=s),
+        "ba": P((d,), ("embed",), init="zeros", dtype=dtype),
+        "wx": P((d, d), ("embed", "embed2"), dtype=dtype, scale=s),
+        "bx": P((d,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def _rglru_gates(params, cfg: RGLRUConfig, x: jax.Array):
+    f32 = jnp.float32
+    ra = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x.astype(f32),
+                                   params["wa"].astype(f32)) + params["ba"].astype(f32))
+    rx = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x.astype(f32),
+                                   params["wx"].astype(f32)) + params["bx"].astype(f32))
+    log_a = -cfg.c * jax.nn.softplus(params["lam"].astype(f32)) * ra
+    a = jnp.exp(log_a)
+    gated_x = rx * x.astype(f32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * gated_x
+
+
+def rglru(params, cfg: RGLRUConfig, x: jax.Array, h0: jax.Array | None = None):
+    """x: (B,S,D). First-order diagonal linear recurrence via associative scan.
+    h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (σ(gate_x)·x_t)."""
+    a, b = _rglru_gates(params, cfg, x)  # (B,S,D) f32 each
+    if h0 is not None:
+        # fold carry into the first element: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params, cfg: RGLRUConfig, h: jax.Array, x_t: jax.Array):
+    """One decode step. h: (B,D) f32; x_t: (B,D)."""
+    a, b = _rglru_gates(params, cfg, x_t)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new, h_new.astype(x_t.dtype)

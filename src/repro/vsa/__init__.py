@@ -1,0 +1,21 @@
+from repro.vsa.ops import (
+    bind,
+    unbind,
+    bundle,
+    similarity,
+    match_prob,
+    random_codebook,
+    circ_conv_ref,
+    circ_corr_ref,
+)
+
+__all__ = [
+    "bind",
+    "unbind",
+    "bundle",
+    "similarity",
+    "match_prob",
+    "random_codebook",
+    "circ_conv_ref",
+    "circ_corr_ref",
+]

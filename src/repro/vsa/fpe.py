@@ -1,0 +1,41 @@
+"""Fractional Power Encoding (FPE) over unitary block codes.
+
+NVSA-style attribute encoding: a base unitary vector ``u`` (per attribute)
+encodes value ``v`` as the v-th circular-convolution power ``u^v`` — computed
+in the spectral domain as phase scaling. Binding then *is* attribute
+arithmetic:
+
+    bind(u^a, u^b)   = u^(a+b)      (circular convolution adds phases)
+    unbind(u^a, u^b) = u^(b-a)      (correlation subtracts phases)
+
+which makes RAVEN rule execution (progression / arithmetic) a chain of the
+paper's circular-convolution kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fpe_base_phase(key: jax.Array, blocks: int, d: int) -> jax.Array:
+    """Random base phase φ: codes are irfft(exp(i·v·φ))."""
+    phase = jax.random.uniform(key, (blocks, d // 2 + 1), jnp.float32,
+                               -np.pi, np.pi)
+    phase = phase.at[..., 0].set(0.0)
+    if d % 2 == 0:
+        phase = phase.at[..., -1].set(0.0)
+    return phase
+
+
+def fpe_encode(phase: jax.Array, v, d: int) -> jax.Array:
+    """Encode value(s) ``v`` (scalar or (n,) array) -> (n, blocks, d)."""
+    v = jnp.atleast_1d(jnp.asarray(v, jnp.float32))
+    spec = jnp.exp(1j * v[:, None, None] * phase[None])
+    return jnp.fft.irfft(spec, n=d, axis=-1)
+
+
+def fpe_codebook(phase: jax.Array, n_values: int, d: int) -> jax.Array:
+    """Integer codebook for values 0..n_values-1 -> (n_values, blocks, d)."""
+    return fpe_encode(phase, jnp.arange(n_values), d)

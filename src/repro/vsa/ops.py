@@ -1,0 +1,185 @@
+"""Vector-Symbolic Architecture algebra on block codes.
+
+Vectors are *block codes*: shape ``(..., blocks, d)`` — NVSA-style VSAs use
+B blocks of dimension d (e.g. 4 × 256). The key kernel the paper accelerates
+(Sec II-A) is the **blockwise circular convolution**
+
+    C[n] = Σ_k A[k] · B[(n−k) mod d]            (binding)
+
+and its inverse, circular correlation (unbinding). Bundling is normalized
+superposition; similarity is the blockwise mean of dot products.
+
+Compute paths:
+- ``bind``/``unbind`` route through the Pallas circulant-matmul kernel (TPU
+  target; interpret-mode on CPU) for power-of-two ``d`` above a size
+  threshold, else through the exact gather reference below.
+- ``*_ref`` functions here are the pure-jnp oracles used by kernel tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Reference (oracle) implementations — exact gather formulation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def circ_conv_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Blockwise circular convolution. a, b: (..., blocks, d)."""
+    d = a.shape[-1]
+    n = jnp.arange(d)[:, None]
+    k = jnp.arange(d)[None, :]
+    idx = (n - k) % d  # (d, d): row n gathers b[(n-k) % d]
+    bmat = b[..., idx]  # (..., blocks, d, d)
+    return jnp.einsum("...k,...nk->...n", a, bmat)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def circ_corr_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Blockwise circular correlation (inverse binding): Σ_k a[k]·b[(n+k)%d]."""
+    d = a.shape[-1]
+    n = jnp.arange(d)[:, None]
+    k = jnp.arange(d)[None, :]
+    idx = (n + k) % d
+    bmat = b[..., idx]
+    return jnp.einsum("...k,...nk->...n", a, bmat)
+
+
+def circ_conv_fft(a: jax.Array, b: jax.Array) -> jax.Array:
+    """FFT oracle (float path — used for cross-validation in tests)."""
+    fa = jnp.fft.rfft(a.astype(jnp.float32), axis=-1)
+    fb = jnp.fft.rfft(b.astype(jnp.float32), axis=-1)
+    return jnp.fft.irfft(fa * fb, n=a.shape[-1], axis=-1).astype(a.dtype)
+
+
+def circ_corr_fft(a: jax.Array, b: jax.Array) -> jax.Array:
+    fa = jnp.fft.rfft(a.astype(jnp.float32), axis=-1)
+    fb = jnp.fft.rfft(b.astype(jnp.float32), axis=-1)
+    return jnp.fft.irfft(jnp.conj(fa) * fb, n=a.shape[-1], axis=-1).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public API (kernel-dispatching)
+# ---------------------------------------------------------------------------
+
+_KERNEL_MIN_D = 128  # below this the XLA gather reference is faster anyway
+
+
+def _use_kernel(a: jax.Array, use_kernel: bool | None) -> bool:
+    d = a.shape[-1]
+    if use_kernel is None:
+        return d >= _KERNEL_MIN_D and (d & (d - 1)) == 0
+    return use_kernel
+
+
+def bind(a: jax.Array, b: jax.Array, use_kernel: bool | None = None) -> jax.Array:
+    """Binding = blockwise circular convolution. Shapes broadcast on lead dims."""
+    if _use_kernel(a, use_kernel):
+        from repro.kernels.circ_conv import ops as k_ops
+
+        return k_ops.circ_bind(a, b, mode="conv")
+    return circ_conv_ref(a, b)
+
+
+def unbind(a: jax.Array, b: jax.Array, use_kernel: bool | None = None) -> jax.Array:
+    """Inverse binding = blockwise circular correlation of ``a`` against ``b``."""
+    if _use_kernel(a, use_kernel):
+        from repro.kernels.circ_conv import ops as k_ops
+
+        return k_ops.circ_bind(a, b, mode="corr")
+    return circ_corr_ref(a, b)
+
+
+def bundle(*vs: jax.Array, normalize: bool = True) -> jax.Array:
+    """Superposition of block codes."""
+    s = sum(vs[1:], start=vs[0])
+    if normalize:
+        s = s / jnp.maximum(jnp.linalg.norm(s, axis=-1, keepdims=True), 1e-9)
+    return s
+
+
+def normalize(v: jax.Array) -> jax.Array:
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+
+
+def similarity(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Blockwise cosine similarity, averaged over blocks.
+
+    a: (..., blocks, d), b: (..., blocks, d) -> (...)
+    """
+    an = normalize(a.astype(jnp.float32))
+    bn = normalize(b.astype(jnp.float32))
+    return jnp.mean(jnp.sum(an * bn, axis=-1), axis=-1)
+
+
+def similarity_matrix(q: jax.Array, dictionary: jax.Array) -> jax.Array:
+    """q: (n, blocks, d) vs dictionary: (m, blocks, d) -> (n, m)."""
+    qn = normalize(q.astype(jnp.float32))
+    dn = normalize(dictionary.astype(jnp.float32))
+    return jnp.einsum("nbd,mbd->nm", qn, dn) / q.shape[-2]
+
+
+def match_prob(q: jax.Array, dictionary: jax.Array, temp: float = 1.0,
+               use_kernel: bool | None = None) -> jax.Array:
+    """Paper Listing 1 ``match_prob_multi_batched``: probability that each
+    query matches each dictionary entry — softmax over scaled similarities.
+
+    q: (n, blocks, d), dictionary: (m, blocks, d) -> (n, m).
+    Routes through the fused SIMD-unit kernel when enabled.
+    """
+    d = q.shape[-1]
+    if use_kernel is None:
+        use_kernel = d >= _KERNEL_MIN_D
+    if use_kernel:
+        from repro.kernels.simd_fused import ops as k_ops
+
+        return k_ops.fused_match_prob(q, dictionary, temp)
+    sims = similarity_matrix(q, dictionary)
+    return jax.nn.softmax(sims / temp, axis=-1)
+
+
+def random_codebook(key: jax.Array, n: int, blocks: int, d: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """Random unit-norm block codes. Unbinding a binding with a random code
+    recovers the other factor in expectation (quasi-orthogonality)."""
+    v = jax.random.normal(key, (n, blocks, d), jnp.float32)
+    return normalize(v).astype(dtype)
+
+
+def unitary_codebook(key: jax.Array, n: int, blocks: int, d: int,
+                     dtype=jnp.float32) -> jax.Array:
+    """Unitary block codes (|FFT| = 1): binding is exactly invertible —
+    unbind(bind(a, u), u) == a. Used by NVSA-style reasoning."""
+    phase = jax.random.uniform(key, (n, blocks, d // 2 + 1), jnp.float32,
+                               -np.pi, np.pi)
+    # enforce real signal constraints: DC and Nyquist bins real (phase 0/π)
+    phase = phase.at[..., 0].set(0.0)
+    if d % 2 == 0:
+        phase = phase.at[..., -1].set(0.0)
+    spec = jnp.exp(1j * phase)
+    v = jnp.fft.irfft(spec, n=d, axis=-1)  # rfft(v) == spec, |spec| == 1
+    return v.astype(dtype)
+
+
+def codebook_circulant(dictionary: jax.Array, mode: str = "conv") -> jax.Array:
+    """Precompute the circulant expansion of a (static) codebook.
+
+    dictionary: (m, blocks, d) -> (m, blocks, d, d) such that
+    ``bind(x, dict_i) == einsum('bk,bnk->bn', x, out_i)``.
+
+    This is the TPU adaptation of the paper's passing-register streaming: a
+    one-time d× memory expansion of a *small static* codebook turns every
+    subsequent binding into an MXU matmul (see DESIGN.md §2).
+    """
+    d = dictionary.shape[-1]
+    n = jnp.arange(d)[:, None]
+    k = jnp.arange(d)[None, :]
+    idx = (n - k) % d if mode == "conv" else (n + k) % d
+    return dictionary[..., idx]

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced config, one train + decode step on
+CPU, asserting output shapes and finiteness (assignment requirement f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs import base as cbase
+from repro.nn import init as nninit
+
+
+def _smoke_batch(arch, cfg, key, batch=2, seq=16):
+    if arch.kind == "vlm":
+        return {
+            "patch_embeds": jax.random.normal(
+                key, (batch, cfg.n_img_tokens, cfg.lm.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(key, (batch, seq), 0, cfg.lm.vocab),
+            "targets": jax.random.randint(key, (batch, seq), 0, cfg.lm.vocab),
+        }
+    if arch.kind == "encdec":
+        return {
+            "frames": jax.random.normal(key, (batch, seq, cfg.d_model),
+                                        jnp.bfloat16),
+            "tgt_tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+            "tgt_targets": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+        }
+    return {
+        "tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+        "targets": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_train_step_smoke(arch_id):
+    arch = ARCHS[arch_id]
+    cfg = arch.make_smoke()
+    key = jax.random.PRNGKey(0)
+    params = nninit.materialize(cbase.model_spec(arch, cfg), key)
+    batch = _smoke_batch(arch, cfg, key)
+    loss_fn = cbase.loss_fn(arch, cfg)
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch_id} loss not finite"
+    gleaves = jax.tree.leaves(grads)
+    assert gleaves, f"{arch_id} no grads"
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in gleaves), f"{arch_id} non-finite grads"
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_decode_step_smoke(arch_id):
+    arch = ARCHS[arch_id]
+    cfg = arch.make_smoke()
+    key = jax.random.PRNGKey(0)
+    params = nninit.materialize(cbase.model_spec(arch, cfg), key)
+    from repro.configs.shapes import ShapeSpec
+    shape = ShapeSpec("smoke", "decode", 32, 2)
+    cache_specs, tok_spec, _ = cbase.decode_state_specs(arch, cfg, shape)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs)
+    token = jnp.zeros(tok_spec.shape, tok_spec.dtype)
+    step = cbase.decode_fn(arch, cfg)
+    new_caches, logits = step(params, caches, token, jnp.int32(0))
+    vocab = cfg.lm.vocab if arch.kind == "vlm" else cfg.vocab
+    assert logits.shape == (2, vocab), f"{arch_id}: {logits.shape}"
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache structure preserved
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+def test_prefill_smoke_lm():
+    arch = ARCHS["llama3.2-3b"]
+    cfg = arch.make_smoke()
+    params = nninit.materialize(cbase.model_spec(arch, cfg),
+                                jax.random.PRNGKey(0))
+    f = cbase.prefill_fn(arch, cfg)
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    logits = f(params, tokens)
+    assert logits.shape == (2, cfg.vocab)
+
+
+def test_full_config_dims_match_assignment():
+    """Spot-check the full configs against the assignment table."""
+    c = ARCHS["deepseek-v3-671b"].make_full()
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (61, 7168, 128, 129280)
+    assert c.moe.n_experts == 256 and c.moe.top_k == 8 and c.mtp
+    c = ARCHS["gemma3-12b"].make_full()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (48, 3840, 15360, 262144)
+    assert c.pattern.count("local") == 5 and c.pattern.count("global") == 1
+    c = ARCHS["rwkv6-7b"].make_full()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (32, 4096, 14336, 65536)
+    c = ARCHS["recurrentgemma-9b"].make_full()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (38, 4096, 12288, 256000)
+    assert c.n_kv_heads == 1
+    c = ARCHS["granite-moe-1b-a400m"].make_full()
+    assert c.moe.n_experts == 32 and c.moe.top_k == 8 and c.d_ff == 512
+    c = ARCHS["internvl2-26b"].make_full()
+    assert (c.lm.n_layers, c.lm.d_model, c.lm.n_heads) == (48, 6144, 48)
+    c = ARCHS["seamless-m4t-large-v2"].make_full()
+    assert (c.d_model, c.vocab) == (1024, 256206)

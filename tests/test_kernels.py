@@ -1,0 +1,228 @@
+"""Per-kernel allclose vs the pure-jnp oracles, with shape/dtype sweeps and
+hypothesis property tests on the VSA algebra invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.circ_conv import kernel as ck, ops as cops, ref as cref
+from repro.kernels.qmatmul import ops as qops, ref as qref
+from repro.kernels.simd_fused import kernel as sk, ref as sref
+from repro.vsa import fpe, ops as vsa
+
+
+# -- circ_conv ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [8, 16, 64, 128, 256])
+@pytest.mark.parametrize("mode", ["conv", "corr"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_circ_elem_matches_ref(d, mode, dtype):
+    key = jax.random.PRNGKey(d)
+    x = jax.random.normal(key, (5, 3, d)).astype(dtype)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (5, 3, d)).astype(dtype)
+    out = ck.circ_elem(x, y, mode=mode, interpret=True)
+    ref = cref.circ_elem_ref(x, y, mode)
+    tol = 1e-4 if dtype == jnp.float32 else 0.25
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n,m,d", [(4, 3, 32), (9, 7, 64), (130, 2, 128)])
+def test_circ_dict_matches_ref(n, m, d):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n, 2, d))
+    dic = jax.random.normal(jax.random.fold_in(key, 1), (m, 2, d))
+    out = ck.circ_dict(x, dic, mode="conv", interpret=True)
+    ref = cref.circ_dict_ref(x, dic, "conv")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_circ_conv_matches_fft():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4, 2, 128))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (4, 2, 128))
+    np.testing.assert_allclose(np.asarray(vsa.bind(a, b)),
+                               np.asarray(vsa.circ_conv_fft(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       d=st.sampled_from([16, 32, 64]),
+       blocks=st.integers(1, 4))
+def test_vsa_commutativity(seed, d, blocks):
+    """bind(a, b) == bind(b, a) — circular convolution commutes."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (2, blocks, d))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, blocks, d))
+    np.testing.assert_allclose(np.asarray(vsa.bind(a, b)),
+                               np.asarray(vsa.bind(b, a)), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([16, 64]))
+def test_vsa_associativity(seed, d):
+    key = jax.random.PRNGKey(seed)
+    a, b, c = (jax.random.normal(jax.random.fold_in(key, i), (1, 2, d))
+               for i in range(3))
+    left = vsa.bind(vsa.bind(a, b), c)
+    right = vsa.bind(a, vsa.bind(b, c))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_unitary_unbind_inverts_bind(seed):
+    key = jax.random.PRNGKey(seed)
+    a = vsa.random_codebook(key, 3, 2, 64)
+    u = vsa.unitary_codebook(jax.random.fold_in(key, 1), 3, 2, 64)
+    rec = vsa.unbind(u, vsa.bind(a, u))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(a), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       va=st.integers(0, 4), vb=st.integers(0, 4))
+def test_fpe_binding_adds_values(seed, va, vb):
+    """bind(u^a, u^b) == u^(a+b) — FPE phase arithmetic."""
+    phase = fpe.fpe_base_phase(jax.random.PRNGKey(seed), 2, 32)
+    book = fpe.fpe_codebook(phase, 10, 32)
+    out = vsa.bind(book[va][None], book[vb][None])[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(book[va + vb]),
+                               atol=1e-4)
+
+
+def test_bind_distributes_over_bundle():
+    key = jax.random.PRNGKey(0)
+    a, b, c = (jax.random.normal(jax.random.fold_in(key, i), (1, 2, 64))
+               for i in range(3))
+    left = vsa.bind(a, b + c)
+    right = vsa.bind(a, b) + vsa.bind(a, c)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), atol=1e-4)
+
+
+def test_circulant_precompute_equals_bind():
+    """codebook_circulant (the TPU static-dictionary trick) == bind."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (5, 2, 64))
+    dic = jax.random.normal(jax.random.fold_in(key, 1), (3, 2, 64))
+    cmat = vsa.codebook_circulant(dic, "conv")  # (3, 2, 64, 64)
+    via_mat = jnp.einsum("xbk,mbnk->xmbn", x, cmat)
+    via_kernel = cops.circ_bind_dict(x, dic, "conv")
+    np.testing.assert_allclose(np.asarray(via_mat), np.asarray(via_kernel),
+                               atol=1e-3, rtol=1e-3)
+
+
+# -- qmatmul ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 33, 11), (64, 128, 64), (130, 100, 53)])
+@pytest.mark.parametrize("int4", [False, True])
+def test_qmatmul_matches_ref(m, k, n, int4):
+    key = jax.random.PRNGKey(m * n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    xq, xs = qops.quantize_rows(x)
+    bits = 4 if int4 else 8
+    wq, ws = qops.quantize_cols(w, bits)
+    if int4:
+        wq = qops.pack_int4(wq)
+        if n % 2:
+            ws = jnp.pad(ws, (0, 1))
+    out_k = qops.qmatmul(xq, wq, xs, ws, int4=int4, bm=32, bn=32, bk=32)
+    out_r = qref.qmatmul_ref(xq, wq, xs, ws, int4=int4)
+    np.testing.assert_allclose(np.asarray(out_k)[:, :n],
+                               np.asarray(out_r)[:, :n], atol=1e-3, rtol=1e-3)
+
+
+def test_qdense_quantization_error_scales_with_bits():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32))
+    exact = np.asarray(x @ w)
+    err8 = np.abs(np.asarray(qops.qdense(x, w, bits_w=8), np.float32) - exact).mean()
+    err4 = np.abs(np.asarray(qops.qdense(x, w, bits_w=4), np.float32) - exact).mean()
+    assert err8 < err4 < 16 * err8 + 1e-3
+
+
+def test_pack_unpack_roundtrip_exhaustive():
+    vals = jnp.arange(-8, 8, dtype=jnp.int8)
+    q = jnp.tile(vals, (4, 2))  # (4, 32)
+    packed = qops.pack_int4(q)
+    unpacked = qref.unpack_int4_ref(packed)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(q))
+
+
+# -- simd_fused ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d,temp", [(5, 3, 32, 1.0), (40, 7, 128, 0.1),
+                                        (128, 16, 64, 0.5)])
+def test_fused_match_prob_matches_ref(n, m, d, temp):
+    key = jax.random.PRNGKey(n)
+    q = vsa.random_codebook(key, n, 4, d)
+    dic = vsa.random_codebook(jax.random.fold_in(key, 1), m, 4, d)
+    out = sk.fused_match_prob(q, dic, temp, interpret=True, tile_n=16)
+    ref = sref.fused_match_prob_ref(q, dic, temp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_fused_match_prob_rows_sum_to_one():
+    key = jax.random.PRNGKey(2)
+    q = vsa.random_codebook(key, 17, 2, 64)
+    dic = vsa.random_codebook(jax.random.fold_in(key, 1), 5, 2, 64)
+    out = np.asarray(sk.fused_match_prob(q, dic, 0.3, interpret=True, tile_n=8))
+    np.testing.assert_allclose(out.sum(-1), np.ones(17), atol=1e-5)
+
+
+def test_kernel_vjps_match_ref_autodiff():
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (3, 2, 32))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (3, 2, 32))
+    for f_k, f_r in [
+        (lambda a, b: vsa.bind(a, b, use_kernel=True), vsa.circ_conv_ref),
+        (lambda a, b: vsa.unbind(a, b, use_kernel=True), vsa.circ_corr_ref),
+    ]:
+        gk = jax.grad(lambda a, b: jnp.sum(jnp.cos(f_k(a, b))), (0, 1))(a, b)
+        gr = jax.grad(lambda a, b: jnp.sum(jnp.cos(f_r(a, b))), (0, 1))(a, b)
+        for x, y in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-4, rtol=1e-4)
+
+
+# -- flash attention ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq,skv,hd,bq,bk,causal",
+                         [(64, 64, 32, 16, 16, True),
+                          (40, 40, 16, 16, 16, True),
+                          (32, 40, 32, 16, 16, False),
+                          (128, 128, 64, 64, 32, True)])
+def test_flash_attention_matches_ref(sq, skv, hd, bq, bk, causal):
+    from repro.kernels.flash_attn import kernel as fk, ref as fr
+    key = jax.random.PRNGKey(sq)
+    q = jax.random.normal(key, (2, sq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, skv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, skv, hd))
+    o_k = fk.flash_attention(q, k, v, scale=0.2, causal=causal, bq=bq, bk=bk,
+                             interpret=True)
+    o_r = fr.flash_attention_ref(q, k, v, scale=0.2, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+
+
+def test_flash_mha_wrapper_matches_full_attention():
+    from repro.kernels.flash_attn import ops as fo
+    from repro.nn import attention as att
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (2, 48, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 48, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 48, 4, 16))
+    flash = fo.flash_mha(q, k, v, 0.25)
+    full = att.attend_full(q, k, v, att.causal_mask(48, 48), 0.25)
+    np.testing.assert_allclose(np.asarray(flash, np.float32),
+                               np.asarray(full, np.float32), atol=1e-3)

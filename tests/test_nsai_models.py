@@ -1,0 +1,149 @@
+"""NSAI workload tests: symbolic reasoning correctness, quantization
+degradation ordering, data-generator invariants, MIMONet superposition."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import raven
+from repro.models import lvrf, mimonet, nvsa, prae
+from repro.nn import init as nninit
+
+
+@pytest.fixture(scope="module")
+def problem_batch():
+    # d=128 keeps the Pallas kernel path active (d >= 128) at 4x less
+    # interpret-mode cost than the default 256
+    cfg = nvsa.NVSAConfig(d=128)
+    return cfg, raven.generate_batch(cfg.raven, seed=5, n=16)
+
+
+def _oracle(cfg, batch):
+    ctx = [jnp.asarray(x) for x in nvsa.oracle_pmfs(
+        cfg, jnp.asarray(batch["context_attrs"]))]
+    cand = [jnp.asarray(x) for x in nvsa.oracle_pmfs(
+        cfg, jnp.asarray(batch["candidate_attrs"]))]
+    return ctx, cand
+
+
+def test_generator_rules_consistent():
+    cfg = raven.RavenConfig()
+    for seed in range(20):
+        p = raven.generate_problem(cfg, seed)
+        grid = p["panel_attrs"].reshape(3, 3, 3)
+        for ai in range(3):
+            rule = int(p["rules"][ai])
+            n = cfg.attr_sizes[ai]
+            for row in range(3):
+                a1, a2, a3 = (int(v) for v in grid[row, :, ai])
+                assert raven.N_RULES
+                assert a3 == raven._apply_rule(rule, a1, a2, n), \
+                    (seed, ai, rule, grid[row, :, ai])
+        # answer present exactly once among candidates
+        matches = (p["candidate_attrs"] == p["panel_attrs"][8]).all(1).sum()
+        assert matches == 1
+        assert (p["candidate_attrs"][p["answer"]] == p["panel_attrs"][8]).all()
+
+
+def test_nvsa_oracle_reasoning_near_perfect(problem_batch):
+    cfg, batch = problem_batch
+    ctx, cand = _oracle(cfg, batch)
+    logp, rules = nvsa.reason(cfg, codebooks=nvsa.nvsa_codebooks(
+        cfg, jax.random.PRNGKey(1)), ctx_pmfs=ctx, cand_pmfs=cand)
+    acc = float(np.mean(np.argmax(np.asarray(logp), -1) == batch["answer"]))
+    assert acc >= 0.95, acc
+
+
+def test_prae_oracle_reasoning_near_perfect(problem_batch):
+    cfg, batch = problem_batch
+    ctx, cand = _oracle(cfg, batch)
+    acc, racc = prae.accuracy(prae.PrAEConfig(), ctx, cand,
+                              jnp.asarray(batch["answer"]), batch["rules"])
+    # 16-problem sample: allow one rule-ambiguous miss (e.g. a constant row
+    # that a PMF engine also explains as arith-minus with a2=0)
+    assert acc >= 0.90, acc
+    assert racc >= 0.8, racc
+
+
+def test_nvsa_quantization_monotone_degradation(problem_batch):
+    """Tab. IV ordering on the symbolic side: int8/mp ≈ fp32 >> int4-everything
+    degrades — with oracle perception so only precision varies."""
+    cfg0, batch = problem_batch
+    ctx, cand = _oracle(cfg0, batch)
+    accs = {}
+    for label, sy in [("fp32", "fp32"), ("int8", "int8"), ("int4", "int4")]:
+        cfg = dataclasses.replace(cfg0, symb_precision=sy)
+        books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
+        if sy in ("int8", "int4"):
+            books = {
+                "books": [nvsa.fake_quant(b, sy) for b in books["books"]],
+                "shifts": [nvsa.fake_quant(s, sy) for s in books["shifts"]],
+                "roles": nvsa.fake_quant(books["roles"], sy),
+            }
+        logp, _ = nvsa.reason(cfg, books, ctx, cand)
+        accs[label] = float(np.mean(np.argmax(np.asarray(logp), -1)
+                                    == batch["answer"]))
+    assert accs["fp32"] >= 0.95
+    assert accs["int8"] >= accs["fp32"] - 0.1   # int8 ~ lossless (Tab. IV)
+    assert accs["int4"] <= accs["int8"] + 1e-9  # int4 strictly no better
+
+
+def test_nvsa_memory_savings_ratio():
+    cfg_fp = nvsa.NVSAConfig()
+    cfg_mp = dataclasses.replace(cfg_fp, nn_precision="int8",
+                                 symb_precision="int4")
+    params = nninit.materialize(nvsa.nvsa_spec(cfg_fp), jax.random.PRNGKey(0))
+    r = nvsa.nvsa_memory_bytes(cfg_fp, params) / nvsa.nvsa_memory_bytes(cfg_mp, params)
+    assert 3.5 < r < 8.5  # paper: 5.8x
+
+
+def test_lvrf_learns_rules_quickly(problem_batch):
+    """A few hundred LVRF steps on oracle PMFs beat chance by a wide margin."""
+    cfg0, batch = problem_batch
+    ctx, cand = _oracle(cfg0, batch)
+    # d=64 keeps binds on the fast XLA ref path (kernel itself is
+    # covered by test_kernels.py); 60 full-batch steps stay CPU-cheap
+    lcfg = lvrf.LVRFConfig(d=64)
+    params = nninit.materialize(lvrf.lvrf_spec(lcfg), jax.random.PRNGKey(0))
+    books = lvrf.lvrf_codebooks(lcfg, jax.random.PRNGKey(1))
+    answers = jnp.asarray(batch["answer"])
+    loss_g = jax.jit(jax.value_and_grad(
+        lambda p: lvrf.loss_fn(p, books, lcfg, ctx, cand, answers)))
+    lr = 0.5
+    for _ in range(60):
+        loss, g = loss_g(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    acc = lvrf.accuracy(params, books, lcfg, ctx, cand, answers)
+    assert acc > 0.5, acc  # chance = 0.125
+
+
+def test_mimonet_unbinding_separates_channels():
+    """With unitary keys, unbinding the superposition recovers per-channel
+    codes (before the trunk): the core MIMONet property."""
+    cfg = mimonet.MIMONetConfig()
+    keys = mimonet.mimonet_keys(cfg, jax.random.PRNGKey(3))
+    from repro.vsa import ops as vsa
+    codes = vsa.random_codebook(jax.random.PRNGKey(4), cfg.n_channels,
+                                cfg.blocks, cfg.d)
+    bound = vsa.bind(codes, keys)
+    sup = jnp.sum(bound, axis=0, keepdims=True)
+    for c in range(cfg.n_channels):
+        rec = vsa.unbind(keys[c][None], sup)[0]
+        sims = [float(vsa.similarity(rec[None], codes[i][None])[0])
+                for i in range(cfg.n_channels)]
+        assert np.argmax(sims) == c
+        assert sims[c] > 0.6
+
+
+@settings(max_examples=10, deadline=None)
+@given(style=st.sampled_from(["raven", "iraven", "pgm"]),
+       seed=st.integers(0, 10_000))
+def test_generator_candidates_unique(style, seed):
+    cfg = raven.RavenConfig(style=style)
+    p = raven.generate_problem(cfg, seed)
+    cands = {tuple(c) for c in p["candidate_attrs"]}
+    assert len(cands) == 8
