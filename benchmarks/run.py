@@ -19,6 +19,7 @@ from benchmarks.bench_tables import (bench_fig1_characterization,
                                      bench_tab3_configs, bench_tab4_precision)
 from benchmarks.bench_kernels import bench_kernels
 from benchmarks.bench_roofline import bench_roofline
+from benchmarks.bench_serve import bench_serve
 
 SECTIONS = [
     ("tab2_searchspace", bench_tab2_searchspace),
@@ -29,6 +30,7 @@ SECTIONS = [
     ("fig6_scalability_ablation", bench_fig6_ablation),
     ("kernels_microbench", bench_kernels),
     ("roofline_from_dryrun", bench_roofline),
+    ("serve_continuous_batching", bench_serve),
 ]
 
 

@@ -1,8 +1,9 @@
-"""Batched LM serving with KV caches + the enc-dec overlap demo.
+"""Continuous-batching LM serving + the enc-dec overlap demo.
 
-Part 1: greedy batched generation from a smoke llama-family model —
-         prefill via scan-decode, then token-by-token with a ring of
-         request slots.
+Part 1: slot-based continuous batching on a smoke llama-family model —
+         8 ragged requests stream through a 4-slot KV pool; retired slots
+         are refilled from the queue mid-flight, decode runs in fused
+         lax.scan blocks, and sampling is temperature/top-k driven.
 Part 2: seamless-m4t-style enc-dec serving where encode(batch i+1) is
          issued alongside decode(batch i) — NSFlow's inter-loop overlap
          (paper Fig. 4 ③) mapped to serving.
@@ -18,29 +19,39 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.configs import base as cbase
-from repro.configs.shapes import ShapeSpec
 from repro.nn import init as nninit
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def serve_llama():
     arch = ARCHS["llama3.2-3b"]
     cfg = arch.make_smoke()
     params = nninit.materialize(cbase.model_spec(arch, cfg), jax.random.PRNGKey(0))
-    shape = ShapeSpec("serve", "decode", 128, 4)
+    step, init_caches = cbase.serve_fns(arch, cfg, max_len=64)
+    engine = Engine(step, init_caches,
+                    ServeConfig(max_new_tokens=16, max_slots=4, max_len=64,
+                                decode_block=8, temperature=0.7, top_k=32,
+                                eos_id=1, seed=0))
 
-    def init_caches(batch):
-        specs, _, _ = cbase.decode_state_specs(arch, cfg, shape)
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
-
-    engine = Engine(cbase.decode_fn(arch, cfg), init_caches,
-                    ServeConfig(max_new_tokens=16))
-    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (4, 12)).astype(np.int32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab, (int(rng.integers(4, 14)),)
+                                        ).astype(np.int32))
+            for i in range(8)]
     t0 = time.time()
-    out = engine.generate(params, prompts)
-    print(f"[serve_lm] llama-smoke: 4 requests x 16 tokens in "
-          f"{time.time()-t0:.1f}s -> {out.shape}")
-    print(f"[serve_lm] greedy continuations: {out[:, :8].tolist()}")
+    results = engine.run(params, reqs)
+    dt = time.time() - t0
+    done = sum(1 for r in results.values())
+    toks = sum(len(r.tokens) for r in results.values())
+    print(f"[serve_lm] llama-smoke: {done} requests ({toks} tokens) through "
+          f"a {engine.cfg.max_slots}-slot pool in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+    print(f"[serve_lm] slot utilization {engine.utilization():.0%}, "
+          f"requests per slot: {engine.stats['slots_served']}")
+    for uid in sorted(results)[:3]:
+        r = results[uid]
+        print(f"[serve_lm]   req {uid}: prompt {r.prompt_len} -> "
+              f"{r.tokens[:8].tolist()}{' (eos)' if r.finished_by_eos else ''}")
 
 
 def serve_encdec_overlap():

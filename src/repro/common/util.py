@@ -64,3 +64,33 @@ def human_flops(n: float) -> str:
 
 def round_up_pow2(n: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(1, n))))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    ``jax.sharding.set_mesh`` exists on newer jax; older releases use the
+    ``Mesh`` object itself as the context manager.
+    """
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+def shard_map_unreplicated(fn, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions.
+
+    The flag is ``check_vma`` on newer jax, ``check_rep`` before that; the
+    entry point moved from ``jax.experimental.shard_map`` to ``jax.shard_map``.
+    """
+    import inspect
+
+    try:
+        smap = jax.shard_map
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as smap  # type: ignore
+
+    flag = ("check_vma" if "check_vma" in inspect.signature(smap).parameters
+            else "check_rep")
+    return smap(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **{flag: False})

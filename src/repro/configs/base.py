@@ -150,6 +150,29 @@ def decode_state_specs(arch: ArchSpec, cfg, shape: ShapeSpec):
     return caches, token, pos
 
 
+def serve_fns(arch: ArchSpec, cfg, max_len: int):
+    """(decode_step, init_caches) pair for the continuous-batching Engine.
+
+    ``decode_step`` accepts a per-slot (B,) position vector (or a scalar);
+    ``init_caches(batch)`` allocates zeroed decode state with ``max_len``
+    KV capacity per slot. Stateful kinds (rwkv, griffin) carry O(1) or
+    windowed state and ignore/modulo the position as appropriate.
+    """
+    m = _mod(arch.kind)
+    step = decode_fn(arch, cfg)
+    if arch.kind == "lm":
+        init = lambda batch: m.init_caches(cfg, batch, max_len)
+    elif arch.kind == "rwkv":
+        init = lambda batch: m.init_state(cfg, batch)
+    elif arch.kind == "griffin":
+        init = lambda batch: m.init_state(cfg, batch, max_len)
+    else:
+        raise NotImplementedError(
+            f"{arch.kind}: serving needs non-token inputs (patch embeddings / "
+            "encoder frames) — use the model module's encode/decode directly")
+    return step, init
+
+
 def param_count(arch: ArchSpec, cfg) -> int:
     return nninit.param_count(model_spec(arch, cfg))
 

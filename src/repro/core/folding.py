@@ -16,12 +16,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
-
 from jax.sharding import PartitionSpec as PS
+
+from repro.common.util import shard_map_unreplicated as shard_map
 
 
 def make_folded_fn(mesh, axis: str, n_l: int, nn_fn: Callable,
@@ -62,6 +59,6 @@ def make_folded_fn(mesh, axis: str, n_l: int, nn_fn: Callable,
 
     def wrapped(nn_x, vsa_x):
         return shard_map(inner, mesh=mesh, in_specs=(PS(), PS()),
-                         out_specs=(PS(), PS()), check_vma=False)(nn_x, vsa_x)
+                         out_specs=(PS(), PS()))(nn_x, vsa_x)
 
     return wrapped

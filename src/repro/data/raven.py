@@ -55,6 +55,35 @@ def _apply_rule(rule: int, a1: int, a2: int, n: int) -> int:
     return (a1 - a2) % n
 
 
+def _rule_predicts(rule: int, a1: int, a2: int) -> int:
+    """Unwrapped 3rd value a rule abduction engine would predict from the
+    first two (no modulo: out-of-range predictions match nothing)."""
+    name = RULES[rule]
+    if name == "constant":
+        return a2
+    if name == "prog_plus":
+        return a2 + 1
+    if name == "prog_minus":
+        return a2 - 1
+    if name == "arith_plus":
+        return a1 + a2
+    return a1 - a2
+
+
+def _grid_ambiguous(rows: np.ndarray, rule: int) -> bool:
+    """True if some other rule also explains both complete rows yet predicts
+    a different 9th panel — unanswerable even for a perfect reasoner (e.g.
+    (3,0,3),(1,0,1): arith± coincide when a2 == 0 but diverge on row 3)."""
+    for r in range(N_RULES):
+        if r == rule:
+            continue
+        if all(_rule_predicts(r, rows[i, 0], rows[i, 1]) == rows[i, 2]
+               for i in (0, 1)):
+            if _rule_predicts(r, rows[2, 0], rows[2, 1]) != rows[2, 2]:
+                return True
+    return False
+
+
 def _row_values(rng: np.random.Generator, rule: int, n: int) -> tuple[int, int, int]:
     name = RULES[rule]
     for _ in range(64):
@@ -134,8 +163,11 @@ def generate_problem(cfg: RavenConfig, seed: int):
     rules = np.array([rng.integers(N_RULES) for _ in range(cfg.n_attrs)], np.int32)
     grid = np.zeros((3, 3, cfg.n_attrs), np.int32)
     for ai in range(cfg.n_attrs):
-        for row in range(3):
-            grid[row, :, ai] = _row_values(rng, int(rules[ai]), sizes[ai])
+        for _ in range(64):
+            for row in range(3):
+                grid[row, :, ai] = _row_values(rng, int(rules[ai]), sizes[ai])
+            if not _grid_ambiguous(grid[:, :, ai], int(rules[ai])):
+                break
     panel_attrs = grid.reshape(9, cfg.n_attrs)
     answer_attrs = panel_attrs[8]
 

@@ -20,10 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
-try:  # jax >= 0.7 exports shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.common.util import shard_map_unreplicated as shard_map
 
 
 def pipeline_fwd(stage_fn: Callable, n_stages: int, axis: str,
@@ -74,8 +71,8 @@ def make_pipelined_fn(stage_fn: Callable, n_stages: int, mesh,
 
     def wrapped(params_stacked, x_micro):
         in_specs = (jax.tree.map(lambda _: PS(axis), params_stacked), PS())
-        return shard_map(inner, mesh=mesh, in_specs=in_specs, out_specs=PS(),
-                         check_vma=False)(params_stacked, x_micro)
+        return shard_map(inner, mesh=mesh, in_specs=in_specs,
+                         out_specs=PS())(params_stacked, x_micro)
 
     return wrapped
 

@@ -30,6 +30,7 @@ from repro.configs import ARCHS, SHAPES
 from repro.configs import base as cbase
 from repro.distributed import sharding_rules as rules
 from repro.launch import roofline as rl
+from repro.common import util
 from repro.launch.mesh import make_production_mesh, HW
 from repro.nn import init as nninit
 from repro.train import optimizer as opt
@@ -207,7 +208,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         fn, args, in_sh, out_sh, donate, meta, mesh, cfg, arch, shape = \
             build_cell(arch_id, shape_name, multi_pod, cfg=cfg0)
         chips = int(np.prod(list(mesh.shape.values())))
-        with jax.sharding.set_mesh(mesh):
+        with util.mesh_context(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -232,7 +233,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                 c_cfg = _scale_config(arch, cfg, reps)
                 f1, a1, i1, o1, d1, *_ = build_cell(arch_id, shape_name,
                                                     multi_pod, cfg=c_cfg)
-                with jax.sharding.set_mesh(mesh):
+                with util.mesh_context(mesh):
                     cal = jax.jit(f1, in_shardings=i1, out_shardings=o1,
                                   donate_argnums=d1).lower(*a1).compile()
                 cc = cal.cost_analysis() or {}

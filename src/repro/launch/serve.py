@@ -1,6 +1,6 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Batched greedy generation with the continuous-batching engine (smoke-scale
+Continuous-batching generation with the slot-pool engine (smoke-scale
 models on CPU; the decode_step is the same function the dry-run lowers for
 the 256/512-chip meshes).
 """
@@ -11,52 +11,58 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
 from repro.configs import base as cbase
 from repro.nn import init as nninit
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b", choices=sorted(ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
     arch = ARCHS[args.arch]
-    if arch.kind == "vlm":
-        raise SystemExit("vlm serving requires patch-embedding inputs — "
-                         "see examples/serve_lm.py for the text-LM path")
     cfg = arch.make_smoke()
     params = nninit.materialize(cbase.model_spec(arch, cfg),
                                 jax.random.PRNGKey(0))
-    from repro.configs.shapes import ShapeSpec
-    shape = ShapeSpec("serve", "decode", args.cache_len, args.batch)
+    try:
+        step, init_caches = cbase.serve_fns(arch, cfg, max_len=args.cache_len)
+    except NotImplementedError as e:
+        raise SystemExit(str(e))
+    engine = Engine(step, init_caches, ServeConfig(
+        max_new_tokens=args.max_new, max_slots=args.slots,
+        max_len=args.cache_len, decode_block=args.decode_block,
+        temperature=args.temperature, top_k=args.top_k, eos_id=args.eos_id,
+        # recurrent state is cumulative: ragged pad steps would corrupt it
+        stateful_prefill=arch.kind in ("rwkv", "griffin")))
 
-    def init_caches(batch):
-        specs, _, _ = cbase.decode_state_specs(arch, cfg, shape)
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
-
-    step = cbase.decode_fn(arch, cfg)
-    engine = Engine(step, init_caches, ServeConfig(max_new_tokens=args.max_new))
-    vocab = cfg.lm.vocab if arch.kind == "vlm" else cfg.vocab
-    prompts = np.random.default_rng(0).integers(
-        0, vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    vocab = cfg.vocab  # serve_fns already rejected vlm/encdec kinds
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, vocab, (args.prompt_len,)).astype(np.int32))
+        for i in range(args.requests)]
     t0 = time.time()
-    out = engine.generate(params, prompts)
+    results = engine.run(params, reqs)
     dt = time.time() - t0
-    tok_s = args.batch * args.max_new / dt
-    print(f"[serve] arch={args.arch} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.max_new}")
-    print(f"[serve] {dt:.1f}s total, {tok_s:.1f} tok/s (CPU smoke config)")
-    print(f"[serve] sample output ids: {out[0][:12].tolist()}")
-    return out
+    toks = sum(len(r.tokens) for r in results.values())
+    print(f"[serve] arch={args.arch} requests={args.requests} "
+          f"slots={args.slots} prompt={args.prompt_len} new={args.max_new}")
+    print(f"[serve] {dt:.1f}s total, {toks/dt:.1f} tok/s, "
+          f"slot utilization {engine.utilization():.0%} (CPU smoke config)")
+    print(f"[serve] sample output ids: {results[0].tokens[:12].tolist()}")
+    return results
 
 
 if __name__ == "__main__":

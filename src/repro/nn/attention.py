@@ -218,18 +218,21 @@ def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16)
 
 def decode_step(params, cfg: AttnConfig, cache, x_t: jax.Array, pos: jax.Array,
                 compute_dtype=jnp.bfloat16):
-    """One-token decode. x_t: (B, D); pos: scalar int32 (tokens so far).
+    """One-token decode. x_t: (B, D); pos: scalar int32 or (B,) int32
+    per-slot positions (continuous batching: each slot may be at a
+    different depth).
 
     Returns (new_cache, out (B, D)). Ring-buffer update for windowed layers.
     """
     b, d = x_t.shape
-    q, k_t, v_t = gqa_project(params, cfg, x_t[:, None, :], pos[None], compute_dtype)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k_t, v_t = gqa_project(params, cfg, x_t[:, None, :], pos_b[:, None],
+                              compute_dtype)
     cache_len = cache["k"].shape[1]
-    slot = pos % cache_len if cfg.window else pos
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_t.astype(cache["k"].dtype),
-                                           (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_t.astype(cache["v"].dtype),
-                                           (0, slot, 0, 0))
+    slot = pos_b % cache_len if cfg.window else pos_b  # (B,)
+    rows = jnp.arange(b)
+    k_cache = cache["k"].at[rows, slot].set(k_t[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[rows, slot].set(v_t[:, 0].astype(cache["v"].dtype))
 
     groups = cfg.n_heads // cfg.n_kv_heads
     k = _repeat_kv(k_cache.astype(compute_dtype), groups)
@@ -239,11 +242,11 @@ def decode_step(params, cfg: AttnConfig, cache, x_t: jax.Array, pos: jax.Array,
     if cfg.window:
         # ring buffer: entry i holds absolute position p with p % L == i, the
         # latest such p <= pos. valid if within window.
-        age = (slot - kpos) % cache_len
-        valid = (age < jnp.minimum(pos + 1, cache_len))
+        age = (slot[:, None] - kpos[None, :]) % cache_len
+        valid = age < jnp.minimum(pos_b + 1, cache_len)[:, None]
     else:
-        valid = kpos <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = kpos[None, :] <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)[:, 0]
     y = jnp.einsum("bhe,hed->bd", out, params["wo"].astype(compute_dtype))
@@ -338,32 +341,34 @@ def mla_decode_step(params, cfg: MLAConfig, cache, x_t: jax.Array, pos: jax.Arra
     """Absorbed decode: attention runs in the compressed (rank-512) space.
 
     score = (q_nope @ W_kb)ᵀ c + q_peᵀ k_pe ; out = (attn @ c) @ W_vb.
+
+    ``pos`` may be a scalar or a (B,) vector of per-slot positions.
     """
     x_t = x_t.astype(compute_dtype)
     b, _ = x_t.shape
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     cq = _rms(jnp.einsum("bd,dr->br", x_t, params["wq_a"].astype(compute_dtype)),
               params["q_a_norm"])
     q = jnp.einsum("br,rhe->bhe", cq, params["wq_b"].astype(compute_dtype))
     q_nope, q_pe = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
-    q_pe = layers.apply_rope(q_pe[:, None], pos[None], cfg.rope_base)[:, 0]
+    q_pe = layers.apply_rope(q_pe[:, None], pos_b[:, None], cfg.rope_base)[:, 0]
 
     kv_a = jnp.einsum("bd,dr->br", x_t, params["wkv_a"].astype(compute_dtype))
     c_t = _rms(kv_a[..., : cfg.kv_lora_rank], params["kv_a_norm"])
-    kpe_t = layers.apply_rope(kv_a[:, None, None, cfg.kv_lora_rank:], pos[None],
-                              cfg.rope_base)[:, 0, 0]
+    kpe_t = layers.apply_rope(kv_a[:, None, None, cfg.kv_lora_rank:],
+                              pos_b[:, None], cfg.rope_base)[:, 0, 0]
 
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_t[:, None].astype(cache["ckv"].dtype),
-                                       (0, pos, 0))
-    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe_t[:, None].astype(cache["kpe"].dtype),
-                                       (0, pos, 0))
+    rows = jnp.arange(b)
+    ckv = cache["ckv"].at[rows, pos_b].set(c_t.astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[rows, pos_b].set(kpe_t.astype(cache["kpe"].dtype))
 
     # absorb W_kb into the query: q_eff (B, H, r_kv)
     q_eff = jnp.einsum("bhe,rhe->bhr", q_nope, params["wk_b"].astype(compute_dtype))
     s_c = jnp.einsum("bhr,bsr->bhs", q_eff, ckv.astype(compute_dtype))
     s_pe = jnp.einsum("bhe,bse->bhs", q_pe, kpe.astype(compute_dtype))
     scores = (s_c + s_pe).astype(jnp.float32) * cfg.scale
-    valid = jnp.arange(ckv.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    valid = jnp.arange(ckv.shape[1])[None, :] <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
     out_c = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(compute_dtype))
     out = jnp.einsum("bhr,rhe->bhe", out_c, params["wv_b"].astype(compute_dtype))

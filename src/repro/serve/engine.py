@@ -1,16 +1,30 @@
-"""Batched serving engine: prompt prefill (scan-decode) + generation loop
-with continuous-batching slots.
+"""Slot-based continuous-batching serving engine.
 
-The NSFlow inter-loop overlap shows up here for the enc-dec arch: the
-engine encodes request batch i+1 while decoding batch i (the encoder and
-decoder are disjoint weight streams — the paper's Fig. 4 ③ case mapped to
-serving).
+The engine owns a fixed pool of ``max_slots`` KV-cache slots sized for
+``max_len`` tokens each. Requests wait in a FIFO queue and are admitted the
+moment a slot frees up (continuous batching): admission runs a ragged,
+padding-masked prefill for the whole admission group at once, then the decode
+loop resumes with every live slot at its own position — the per-slot ``pos``
+vector is threaded through ``decode_step`` (see ``nn.attention.decode_step``).
+
+Decode dispatches ``decode_block`` tokens per XLA call via ``jax.lax.scan``
+(the seed engine paid one dispatch per token, which on CPU/accelerator alike
+is dominated by launch overhead). Inside the scan each slot samples with
+temperature / top-k from its own PRNG stream, emits EOS, retires early, and
+keeps emitting ``pad_id`` until the block ends; retired slots are refilled
+from the queue at the next block boundary.
+
+This is the NSFlow inter-loop overlap story mapped onto serving: admission
+(prefill) of waiting requests and decode of resident requests are disjoint
+compute streams scheduled back-to-back over one shared slot pool.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable
+import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +33,339 @@ import numpy as np
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_new_tokens: int = 32
-    temperature: float = 0.0  # 0 = greedy
-    eos_id: int | None = None
+    max_new_tokens: int = 32      # default per-request generation budget
+    temperature: float = 0.0      # 0 = greedy, > 0 = categorical sampling
+    top_k: int | None = None      # restrict sampling to the k best logits
+    eos_id: int | None = None     # stop + retire the slot when sampled
+    pad_id: int = 0               # emitted by retired slots after EOS
+    max_slots: int = 4            # KV slot pool size == decode batch
+    max_len: int = 128            # per-slot KV capacity (prompt + new tokens)
+    decode_block: int = 8         # tokens fused into one scan dispatch
+    prefill_bucket: int = 16      # pad prompt scans to a multiple of this
+    seed: int = 0                 # PRNG seed for sampling
+    # Positional KV caches tolerate ragged padded prefill (garbage K/V past a
+    # slot's length is never attended and is overwritten during decode), so
+    # one bucketed scan serves the whole admission group. Cumulative
+    # recurrent state (rwkv wkv, griffin lru/conv) would be corrupted by the
+    # extra pad steps — set True to prefill each distinct prompt length with
+    # an exact-length scan instead (more dispatches, state-safe).
+    stateful_prefill: bool = False
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int | None = None  # falls back to ServeConfig default
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray        # generated ids, EOS included when hit
+    prompt_len: int
+    finished_by_eos: bool
+    slot: int                 # which slot served the request
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    budget: int = 0
+    served: int = 0           # requests completed by this slot (reuse stat)
 
 
 class Engine:
-    """Wraps an arch adapter's decode_step into a batch generation loop."""
+    """Continuous-batching generation over an arch adapter's decode_step.
+
+    ``decode_step(params, caches, token (B,), pos (B,)) -> (caches, logits)``
+    must accept a per-slot position vector. ``init_caches(batch)`` allocates
+    a zeroed cache pytree whose leaves carry a batch axis; for positional KV
+    caches its per-slot capacity must be at least ``cfg.max_len`` (the engine
+    cannot see the length axis generically — ``configs.base.serve_fns`` takes
+    the same ``max_len``, pass one value to both).
+    """
+
+    def __init__(self, decode_step: Callable, init_caches: Callable,
+                 cfg: ServeConfig):
+        self.cfg = cfg
+        self.init_caches = init_caches
+        self._raw_decode_step = decode_step
+        # batch axis per cache leaf: the one axis whose size tracks `batch`
+        # (probed at 2 vs 1 so any max_slots >= 1 works)
+        big = jax.eval_shape(lambda: init_caches(2))
+        small = jax.eval_shape(lambda: init_caches(1))
+        self._batch_axes = jax.tree.map(
+            lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                              if x != y),
+            big, small)
+
+        self._decode_block = jax.jit(self._make_decode_block(),
+                                     donate_argnums=(1,))
+        self._prefill = jax.jit(self._make_prefill(), donate_argnums=(1,))
+        # donating the pool lets XLA update admitted rows in place instead of
+        # copying the whole KV pool per admission (leaves whose batch axis is
+        # not leading may still warn as non-donatable; that's benign)
+        self._merge = jax.jit(self._make_merge(), donate_argnums=(0,))
+        self._sample_jit = jax.jit(self._sample)
+        self.stats = {
+            "requests": 0, "tokens": 0, "decode_blocks": 0,
+            "slot_steps": 0, "active_slot_steps": 0, "prefills": 0,
+            "decode_time_s": 0.0, "wall_time_s": 0.0,
+            "slots_served": [0] * cfg.max_slots,
+        }
+
+    # -- device-side pieces -------------------------------------------------
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        """Greedy when temperature == 0, else top-k categorical."""
+        cfg = self.cfg
+        if cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / cfg.temperature
+        if cfg.top_k is not None:
+            k = min(cfg.top_k, scaled.shape[-1])
+            kth = jax.lax.top_k(scaled, k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+    def _make_prefill(self):
+        """Ragged-prompt prefill: (B, P) right-padded tokens + (B,) lengths.
+
+        Scans the prompt through decode_step to populate a scratch cache.
+        Pad steps past a slot's length write garbage K/V at positions
+        >= plen; those entries are never attended (validity mask is
+        kpos <= pos) and each is overwritten when decode reaches it.
+        Returns (caches, last-real-token logits per slot).
+        """
+        decode_step = self._raw_decode_step
+
+        def prefill(params, caches, tokens, plens):
+            def step(caches, inp):
+                tok_t, t = inp
+                caches, logits = decode_step(params, caches, tok_t, t)
+                return caches, logits
+
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+            caches, logits = jax.lax.scan(step, caches, (tokens.T, positions))
+            # logits: (P, B, V) -> last real prompt token's logits per slot
+            idx = jnp.clip(plens - 1, 0, tokens.shape[1] - 1)
+            last = jnp.take_along_axis(
+                logits, idx[None, :, None], axis=0)[0]
+            return caches, last
+
+        return prefill
+
+    def _make_merge(self):
+        """Copy admitted slots' rows from scratch caches into the pool."""
+        batch_axes = self._batch_axes
+
+        def merge(pool, scratch, admit_mask):
+            def one(axis, dst, src):
+                shape = [1] * dst.ndim
+                shape[axis] = dst.shape[axis]
+                return jnp.where(admit_mask.reshape(shape), src, dst)
+
+            return jax.tree.map(one, batch_axes, pool, scratch)
+
+        return merge
+
+    def _make_decode_block(self):
+        cfg = self.cfg
+        decode_step = self._raw_decode_step
+        eos = cfg.eos_id
+
+        def block(params, caches, tok, pos, active, budget, rng):
+            def step(carry, _):
+                caches, tok, pos, active, budget, rng = carry
+                caches, logits = decode_step(params, caches, tok, pos)
+                rng, sub = jax.random.split(rng)
+                nxt = self._sample(logits, sub)
+                emit = jnp.where(active, nxt, cfg.pad_id)
+                pos = jnp.where(active, pos + 1, pos)
+                budget = jnp.where(active, budget - 1, budget)
+                alive = active & (budget > 0) & (pos < cfg.max_len)
+                if eos is not None:
+                    alive = alive & (emit != eos)
+                return (caches, emit, pos, alive, budget, rng), (emit, active)
+
+            carry = (caches, tok, pos, active, budget, rng)
+            carry, (toks, valid) = jax.lax.scan(step, carry, None,
+                                                length=cfg.decode_block)
+            caches, tok, pos, active, budget, rng = carry
+            return caches, tok, pos, active, budget, rng, toks, valid
+
+        return block
+
+    # -- host-side scheduling ----------------------------------------------
+
+    def _budget(self, req: Request) -> int:
+        cfg = self.cfg
+        return (req.max_new_tokens if req.max_new_tokens is not None
+                else cfg.max_new_tokens)
+
+    def _validate(self, req: Request):
+        plen, budget = len(np.asarray(req.prompt).reshape(-1)), self._budget(req)
+        if plen == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if budget < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens must be >= 1")
+        if plen + budget > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {plen} + budget {budget} "
+                f"exceeds max_len {self.cfg.max_len}")
+
+    def _admit(self, params, caches, queue, slots, state):
+        """Fill free slots from the queue with one ragged batched prefill."""
+        cfg = self.cfg
+        free = [i for i, s in enumerate(slots) if s.request is None]
+        if not free or not queue:
+            return caches
+        group = []
+        while free and queue:
+            group.append((free.pop(0), queue.popleft()))
+        for slot_idx, req in group:
+            slots[slot_idx].request = req
+            slots[slot_idx].tokens = []
+            slots[slot_idx].budget = self._budget(req)
+
+        if cfg.stateful_prefill:
+            # one exact-length scan per distinct prompt length (state-safe)
+            by_len: dict[int, list] = {}
+            for slot_idx, req in group:
+                by_len.setdefault(len(req.prompt), []).append((slot_idx, req))
+            plan = [(items, length) for length, items in sorted(by_len.items())]
+        else:
+            plen_max = max(len(r.prompt) for _, r in group)
+            bucket = cfg.prefill_bucket
+            plan = [(group, -(-plen_max // bucket) * bucket)]
+
+        for items, padded in plan:
+            tokens = np.full((cfg.max_slots, padded), cfg.pad_id, np.int32)
+            plens = np.zeros((cfg.max_slots,), np.int32)
+            admit = np.zeros((cfg.max_slots,), bool)
+            for slot_idx, req in items:
+                p = np.asarray(req.prompt, np.int32).reshape(-1)
+                tokens[slot_idx, : len(p)] = p
+                plens[slot_idx] = len(p)
+                admit[slot_idx] = True
+
+            scratch = self.init_caches(cfg.max_slots)
+            scratch, last_logits = self._prefill(params, scratch,
+                                                 jnp.asarray(tokens),
+                                                 jnp.asarray(plens))
+            caches = self._merge(caches, scratch, jnp.asarray(admit))
+            self.stats["prefills"] += 1
+
+            state["rng"], sub = jax.random.split(state["rng"])
+            first = np.asarray(self._sample_jit(last_logits, sub))
+            for slot_idx, req in items:
+                state["tok"][slot_idx] = first[slot_idx]
+                state["pos"][slot_idx] = plens[slot_idx]
+                state["active"][slot_idx] = True
+                state["budget"][slot_idx] = slots[slot_idx].budget
+            # a first token can already finish the request (EOS / budget 1)
+            for slot_idx, req in items:
+                self._push_token(slots, state, slot_idx, int(first[slot_idx]))
+        return caches
+
+    def _push_token(self, slots, state, i, token):
+        """Record one generated token; retire the slot when done."""
+        cfg = self.cfg
+        slot = slots[i]
+        slot.tokens.append(token)
+        state["budget"][i] -= 1
+        hit_eos = cfg.eos_id is not None and token == cfg.eos_id
+        if hit_eos or state["budget"][i] <= 0:
+            req = slot.request
+            self._results[req.uid] = Result(
+                uid=req.uid, tokens=np.asarray(slot.tokens, np.int32),
+                prompt_len=len(req.prompt), finished_by_eos=hit_eos, slot=i)
+            self.stats["requests"] += 1
+            self.stats["tokens"] += len(slot.tokens)
+            self.stats["slots_served"][i] += 1
+            slot.served += 1
+            slot.request = None
+            state["active"][i] = False
+
+    def run(self, params, requests: Sequence[Request]) -> dict[int, Result]:
+        """Serve all requests to completion; returns {uid: Result}."""
+        cfg = self.cfg
+        for req in requests:  # fail fast, before any request is served
+            self._validate(req)
+        t_start = time.time()
+        queue = collections.deque(requests)
+        slots = [_Slot() for _ in range(cfg.max_slots)]
+        self._results: dict[int, Result] = {}
+        caches = self.init_caches(cfg.max_slots)
+        state = {
+            "tok": np.full((cfg.max_slots,), cfg.pad_id, np.int32),
+            "pos": np.zeros((cfg.max_slots,), np.int32),
+            "active": np.zeros((cfg.max_slots,), bool),
+            "budget": np.zeros((cfg.max_slots,), np.int32),
+            "rng": jax.random.PRNGKey(cfg.seed),
+        }
+
+        while queue or state["active"].any():
+            caches = self._admit(params, caches, queue, slots, state)
+            if not state["active"].any():
+                continue  # everything admitted retired on its first token
+            t0 = time.time()
+            (caches, tok, pos, active, budget, state["rng"], toks, valid) = \
+                self._decode_block(
+                    params, caches, jnp.asarray(state["tok"]),
+                    jnp.asarray(state["pos"]), jnp.asarray(state["active"]),
+                    jnp.asarray(state["budget"]), state["rng"])
+            toks, valid = np.asarray(toks), np.asarray(valid)
+            self.stats["decode_time_s"] += time.time() - t0
+            self.stats["decode_blocks"] += 1
+            self.stats["slot_steps"] += toks.size
+            self.stats["active_slot_steps"] += int(valid.sum())
+            state["tok"] = np.array(tok)  # copies: host mirrors stay writable
+            state["pos"] = np.array(pos)
+            # replay emissions on the host mirror (handles retirement)
+            for k in range(toks.shape[0]):
+                for i in np.nonzero(valid[k])[0]:
+                    if slots[i].request is not None:
+                        self._push_token(slots, state, int(i), int(toks[k, i]))
+
+        self.stats["wall_time_s"] += time.time() - t_start
+        return self._results
+
+    # -- convenience APIs ---------------------------------------------------
+
+    def generate(self, params, prompts, max_new_tokens: int | None = None
+                 ) -> np.ndarray:
+        """Batch API: prompts (B, P) array or list of ragged 1-D arrays.
+
+        Returns (B, max_new_tokens) int32, pad_id-filled after EOS.
+        """
+        cfg = self.cfg
+        budget = max_new_tokens if max_new_tokens is not None \
+            else cfg.max_new_tokens
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=budget)
+                for i, p in enumerate(prompts)]
+        results = self.run(params, reqs)
+        out = np.full((len(prompts), budget), cfg.pad_id, np.int32)
+        for uid, res in results.items():
+            out[uid, : len(res.tokens)] = res.tokens
+        return out
+
+    def utilization(self) -> float:
+        """Fraction of decode slot-steps spent on live requests."""
+        if not self.stats["slot_steps"]:
+            return 0.0
+        return self.stats["active_slot_steps"] / self.stats["slot_steps"]
+
+
+class LockstepEngine:
+    """The seed engine: one XLA dispatch per token, greedy, no EOS handling.
+
+    Kept as the benchmark baseline for ``benchmarks/bench_serve.py`` — do not
+    use for serving.
+    """
 
     def __init__(self, decode_step: Callable, init_caches: Callable,
                  cfg: ServeConfig):
@@ -34,29 +374,25 @@ class Engine:
         self.cfg = cfg
 
         def prefill_scan(params, caches, tokens):
-            """Feed the prompt token-by-token (scan) to fill caches."""
-            def step(carry, tok_t):
-                caches, _ = carry, None
-                pos = tok_t[1]
-                caches2, logits = decode_step(params, caches, tok_t[0], pos)
-                return caches2, logits
+            def step(caches, tok_t):
+                caches, logits = decode_step(params, caches, tok_t[0], tok_t[1])
+                return caches, logits
 
             positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
-            caches, logits = jax.lax.scan(
-                step, caches, (tokens.T, positions))
+            caches, logits = jax.lax.scan(step, caches, (tokens.T, positions))
             return caches, logits[-1]
 
         self._prefill = jax.jit(prefill_scan, donate_argnums=(1,))
 
-    def generate(self, params, prompts: np.ndarray, batch: int | None = None):
-        """prompts: (B, P) int32. Returns (B, max_new_tokens) int32."""
+    def generate(self, params, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, P) int32 (uniform length). Returns (B, new) int32."""
         b, p = prompts.shape
         caches = self.init_caches(b)
         caches, logits = self._prefill(params, caches, jnp.asarray(prompts))
         outs = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         pos = p
-        for i in range(self.cfg.max_new_tokens):
+        for _ in range(self.cfg.max_new_tokens):
             outs.append(tok)
             caches, logits = self.decode_step(params, caches, tok,
                                               jnp.int32(pos))

@@ -1,0 +1,103 @@
+"""Hypothesis shim: real hypothesis when installed, fixed samples otherwise.
+
+The tier-1 container does not ship ``hypothesis``; these tests still want
+property-style coverage. When the package is absent, ``@given`` expands each
+strategy into a small deterministic sample (seeded per test name) and routes
+it through ``pytest.mark.parametrize``, and ``@settings`` becomes a no-op.
+With hypothesis installed (the ``[test]`` extra) the real decorators are
+re-exported unchanged, so CI with the full env keeps true property testing.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    # number of deterministic samples drawn per @given test (kept small:
+    # tier-1 must finish fast; real hypothesis explores more in CI)
+    FALLBACK_EXAMPLES = 6
+
+    class _Strategy:
+        """A draw()-able stand-in for one hypothesis strategy."""
+
+        def __init__(self, draw, edge_cases=()):
+            self._draw = draw
+            self._edges = tuple(edge_cases)
+
+        def example(self, rng: random.Random, i: int):
+            # lead with edge cases (hypothesis shrinks toward these), then
+            # pseudo-random draws from the same seeded stream
+            if i < len(self._edges):
+                return self._edges[i]
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             edge_cases=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements),
+                             edge_cases=elements[:1])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             edge_cases=(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)),
+                             edge_cases=(False, True))
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """Ignored in fallback mode (sample count is fixed)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Expand keyword strategies into a fixed parametrize grid."""
+
+        names = sorted(strategies)
+
+        def deco(fn):
+            seed = zlib.adler32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            cases = [
+                tuple(strategies[k].example(rng, i) for k in names)
+                for i in range(FALLBACK_EXAMPLES)
+            ]
+            if len(names) == 1:  # pytest wants scalars for one argname
+                cases = [c[0] for c in cases]
+
+            @pytest.mark.parametrize(",".join(names), cases)
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                return fn(*args, **kwargs)
+
+            return wrapper
+
+        return deco

@@ -32,7 +32,17 @@ def _smoke_batch(arch, cfg, key, batch=2, seq=16):
     }
 
 
-@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+# compile-heavy architectures (MoE+MLA+MTP, deep local:global patterns,
+# recurrent hybrids) push a CPU value_and_grad compile to 5-20s each; their
+# train smoke runs under `-m slow` while decode smoke stays in tier-1
+_HEAVY = {"deepseek-v3-671b", "gemma3-12b", "recurrentgemma-9b", "rwkv6-7b",
+          "seamless-m4t-large-v2", "internvl2-26b", "granite-moe-1b-a400m"}
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+     for a in sorted(ARCHS)])
 def test_train_step_smoke(arch_id):
     arch = ARCHS[arch_id]
     cfg = arch.make_smoke()

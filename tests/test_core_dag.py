@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import analytical as ana
 from repro.core import dataflow as dfl
@@ -190,6 +190,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import folding
+from repro.common.util import mesh_context
 
 mesh = jax.make_mesh((8,), ("model",))
 n_l = 6
@@ -202,7 +203,7 @@ vsa_fn = lambda x: jnp.roll(x, 1, axis=-1) * 2.0
 
 f = folding.make_folded_fn(mesh, "model", n_l, nn_fn, vsa_fn,
                            (12, 16), (4, 16))
-with jax.sharding.set_mesh(mesh):
+with mesh_context(mesh):
     nn_out, vsa_out = jax.jit(f)(nn_x, vsa_x)
 e1 = float(jnp.max(jnp.abs(nn_out - nn_fn(nn_x))))
 e2 = float(jnp.max(jnp.abs(vsa_out - vsa_fn(vsa_x))))
@@ -216,5 +217,5 @@ def test_mesh_folding_subprocess():
     r = subprocess.run([sys.executable, "-c", FOLD_SCRIPT], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "FOLD_OK" in r.stdout, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"

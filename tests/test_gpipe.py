@@ -13,6 +13,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as PS
 from repro.distributed import gpipe
+from repro.common.util import mesh_context
 
 mesh = jax.make_mesh((4,), ("pod",))
 n_stages, n_micro, mb, d = 4, 8, 2, 16
@@ -32,7 +33,7 @@ for s in range(n_stages):
     ref = jnp.tanh(ref @ w[s] + b[s])
 
 piped = gpipe.make_pipelined_fn(stage_fn, n_stages, mesh, "pod")
-with jax.sharding.set_mesh(mesh):
+with mesh_context(mesh):
     out = jax.jit(piped)(params, x)
 err = float(jnp.max(jnp.abs(out - ref)))
 print("fwd err:", err)
@@ -48,7 +49,7 @@ def loss_ref(params, x):
         h = jnp.tanh(h @ params["w"][s] + params["b"][s])
     return jnp.sum(h ** 2)
 
-with jax.sharding.set_mesh(mesh):
+with mesh_context(mesh):
     g1 = jax.jit(jax.grad(loss))(params, x)
 g2 = jax.grad(loss_ref)(params, x)
 gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in
@@ -64,5 +65,5 @@ def test_gpipe_equivalence_subprocess():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "GPIPE_OK" in r.stdout, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"

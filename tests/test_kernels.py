@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.circ_conv import kernel as ck, ops as cops, ref as cref
 from repro.kernels.qmatmul import ops as qops, ref as qref
@@ -16,7 +16,8 @@ from repro.vsa import fpe, ops as vsa
 # -- circ_conv ----------------------------------------------------------------
 
 
-@pytest.mark.parametrize("d", [8, 16, 64, 128, 256])
+@pytest.mark.parametrize("d", [8, 16, 64, 128,
+                               pytest.param(256, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("mode", ["conv", "corr"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_circ_elem_matches_ref(d, mode, dtype):
@@ -30,7 +31,8 @@ def test_circ_elem_matches_ref(d, mode, dtype):
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
-@pytest.mark.parametrize("n,m,d", [(4, 3, 32), (9, 7, 64), (130, 2, 128)])
+@pytest.mark.parametrize("n,m,d", [(4, 3, 32), (9, 7, 64),
+                                   pytest.param(130, 2, 128, marks=pytest.mark.slow)])
 def test_circ_dict_matches_ref(n, m, d):
     key = jax.random.PRNGKey(n)
     x = jax.random.normal(key, (n, 2, d))
@@ -121,7 +123,8 @@ def test_circulant_precompute_equals_bind():
 # -- qmatmul ------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("m,k,n", [(7, 33, 11), (64, 128, 64), (130, 100, 53)])
+@pytest.mark.parametrize("m,k,n", [(7, 33, 11), (64, 128, 64),
+                                   pytest.param(130, 100, 53, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("int4", [False, True])
 def test_qmatmul_matches_ref(m, k, n, int4):
     key = jax.random.PRNGKey(m * n)
@@ -161,8 +164,9 @@ def test_pack_unpack_roundtrip_exhaustive():
 # -- simd_fused ---------------------------------------------------------------
 
 
-@pytest.mark.parametrize("n,m,d,temp", [(5, 3, 32, 1.0), (40, 7, 128, 0.1),
-                                        (128, 16, 64, 0.5)])
+@pytest.mark.parametrize("n,m,d,temp", [
+    (5, 3, 32, 1.0), (40, 7, 128, 0.1),
+    pytest.param(128, 16, 64, 0.5, marks=pytest.mark.slow)])
 def test_fused_match_prob_matches_ref(n, m, d, temp):
     key = jax.random.PRNGKey(n)
     q = vsa.random_codebook(key, n, 4, d)
@@ -202,7 +206,8 @@ def test_kernel_vjps_match_ref_autodiff():
                          [(64, 64, 32, 16, 16, True),
                           (40, 40, 16, 16, 16, True),
                           (32, 40, 32, 16, 16, False),
-                          (128, 128, 64, 64, 32, True)])
+                          pytest.param(128, 128, 64, 64, 32, True,
+                                       marks=pytest.mark.slow)])
 def test_flash_attention_matches_ref(sq, skv, hd, bq, bk, causal):
     from repro.kernels.flash_attn import kernel as fk, ref as fr
     key = jax.random.PRNGKey(sq)

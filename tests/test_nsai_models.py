@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import raven
 from repro.models import lvrf, mimonet, nvsa, prae
@@ -69,6 +69,7 @@ def test_prae_oracle_reasoning_near_perfect(problem_batch):
     assert racc >= 0.8, racc
 
 
+@pytest.mark.slow
 def test_nvsa_quantization_monotone_degradation(problem_batch):
     """Tab. IV ordering on the symbolic side: int8/mp ≈ fp32 >> int4-everything
     degrades — with oracle perception so only precision varies."""
@@ -101,6 +102,7 @@ def test_nvsa_memory_savings_ratio():
     assert 3.5 < r < 8.5  # paper: 5.8x
 
 
+@pytest.mark.slow
 def test_lvrf_learns_rules_quickly(problem_batch):
     """A few hundred LVRF steps on oracle PMFs beat chance by a wide margin."""
     cfg0, batch = problem_batch

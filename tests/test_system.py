@@ -31,10 +31,13 @@ def test_end_to_end_pipeline_on_traced_model():
     assert design.mem is not None and design.mem.total > 0
 
 
+@pytest.mark.slow
 def test_end_to_end_reasoning_with_kernels():
     """Full NVSA solve on rendered images (untrained frontend -> just checks
     the system runs end-to-end and produces a calibrated distribution)."""
-    cfg = nvsa.NVSAConfig(cnn_width=8, cnn_feat=32)
+    # d=128 keeps the Pallas kernel path active (d >= 128) at 4x less
+    # interpret-mode cost than the default 256
+    cfg = nvsa.NVSAConfig(cnn_width=8, cnn_feat=32, d=128)
     batch = raven.generate_batch(cfg.raven, seed=2, n=2)
     from repro.nn import init as nninit
     params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
@@ -95,6 +98,6 @@ def test_dryrun_cell_builder_shapes():
     r = subprocess.run([sys.executable, "-c", DRYRUN_SCRIPT],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "BUILD_CELL_OK" in r.stdout, \
         f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"

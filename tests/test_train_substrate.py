@@ -59,6 +59,7 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_restart_bitexact(tmp_path):
     """Uninterrupted run == failure-interrupted run with restarts."""
     ref = _make_trainer(tmp_path / "ref")
@@ -113,6 +114,7 @@ def test_grad_accum_equivalence(tmp_path):
         assert abs(a["loss"] - b["loss"]) < 2e-2, (a["loss"], b["loss"])
 
 
+@pytest.mark.slow
 def test_quantized_adam_close_to_fp32(tmp_path):
     t1 = _make_trainer(tmp_path / "a")
     t2 = _make_trainer(tmp_path / "b", quantized=True)
