@@ -55,7 +55,6 @@ def bench_serve():
     # fused scan blocks
     engine = Engine(step, init_caches, scfg)
     engine.generate(params, prompts)  # warm up compile
-    engine.stats["decode_blocks"] = 0
     out, dt_fused = _best_of(lambda: engine.generate(params, prompts))
     assert np.array_equal(out, ref), "fused decode diverged from lockstep"
     rows.append(("serve/fused_scan_4x32/tok_s", n_req * new / dt_fused,

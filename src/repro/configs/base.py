@@ -156,7 +156,11 @@ def serve_fns(arch: ArchSpec, cfg, max_len: int):
     ``decode_step`` accepts a per-slot (B,) position vector (or a scalar);
     ``init_caches(batch)`` allocates zeroed decode state with ``max_len``
     KV capacity per slot. Stateful kinds (rwkv, griffin) carry O(1) or
-    windowed state and ignore/modulo the position as appropriate.
+    windowed state and ignore/modulo the position as appropriate; their
+    cumulative state cannot absorb bucketed prefill pad steps, so
+    ``init_caches`` is tagged ``stateful_prefill = True`` and the Engine
+    forces exact-length prefill scans (no caller needs to re-derive the
+    arch kind).
     """
     m = _mod(arch.kind)
     step = decode_fn(arch, cfg)
@@ -170,6 +174,7 @@ def serve_fns(arch: ArchSpec, cfg, max_len: int):
         raise NotImplementedError(
             f"{arch.kind}: serving needs non-token inputs (patch embeddings / "
             "encoder frames) — use the model module's encode/decode directly")
+    init.stateful_prefill = arch.kind in ("rwkv", "griffin")
     return step, init
 
 

@@ -70,17 +70,25 @@ def _rule_predicts(rule: int, a1: int, a2: int) -> int:
     return a1 - a2
 
 
-def _grid_ambiguous(rows: np.ndarray, rule: int) -> bool:
+def _grid_ambiguous(rows: np.ndarray, rule: int, n: int) -> bool:
     """True if some other rule also explains both complete rows yet predicts
     a different 9th panel — unanswerable even for a perfect reasoner (e.g.
-    (3,0,3),(1,0,1): arith± coincide when a2 == 0 but diverge on row 3)."""
+    (3,0,3),(1,0,1): arith± coincide when a2 == 0 but diverge on row 3).
+
+    Checked under both unwrapped and modulo-wrapped rule semantics, so the
+    grid is unambiguous whether the abduction engine treats out-of-range
+    predictions as non-matches or wraps them mod n (e.g. prog_plus with
+    a2 == n-1 predicting 0 only via wrap-around)."""
+    predictors = (_rule_predicts,
+                  lambda r, a1, a2: _apply_rule(r, a1, a2, n))
     for r in range(N_RULES):
         if r == rule:
             continue
-        if all(_rule_predicts(r, rows[i, 0], rows[i, 1]) == rows[i, 2]
-               for i in (0, 1)):
-            if _rule_predicts(r, rows[2, 0], rows[2, 1]) != rows[2, 2]:
-                return True
+        for predict in predictors:
+            if all(predict(r, rows[i, 0], rows[i, 1]) == rows[i, 2]
+                   for i in (0, 1)):
+                if predict(r, rows[2, 0], rows[2, 1]) != rows[2, 2]:
+                    return True
     return False
 
 
@@ -166,7 +174,7 @@ def generate_problem(cfg: RavenConfig, seed: int):
         for _ in range(64):
             for row in range(3):
                 grid[row, :, ai] = _row_values(rng, int(rules[ai]), sizes[ai])
-            if not _grid_ambiguous(grid[:, :, ai], int(rules[ai])):
+            if not _grid_ambiguous(grid[:, :, ai], int(rules[ai]), sizes[ai]):
                 break
     panel_attrs = grid.reshape(9, cfg.n_attrs)
     answer_attrs = panel_attrs[8]

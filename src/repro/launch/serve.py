@@ -44,9 +44,8 @@ def main():
     engine = Engine(step, init_caches, ServeConfig(
         max_new_tokens=args.max_new, max_slots=args.slots,
         max_len=args.cache_len, decode_block=args.decode_block,
-        temperature=args.temperature, top_k=args.top_k, eos_id=args.eos_id,
-        # recurrent state is cumulative: ragged pad steps would corrupt it
-        stateful_prefill=arch.kind in ("rwkv", "griffin")))
+        temperature=args.temperature, top_k=args.top_k, eos_id=args.eos_id))
+    # (stateful_prefill for rwkv/griffin is forced by the serve_fns tag)
 
     vocab = cfg.vocab  # serve_fns already rejected vlm/encdec kinds
     rng = np.random.default_rng(0)

@@ -43,10 +43,12 @@ class ServeConfig:
     decode_block: int = 8         # tokens fused into one scan dispatch
     prefill_bucket: int = 16      # pad prompt scans to a multiple of this
     seed: int = 0                 # PRNG seed for sampling
-    # Positional KV caches tolerate ragged padded prefill (garbage K/V past a
-    # slot's length is never attended and is overwritten during decode), so
-    # one bucketed scan serves the whole admission group. Cumulative
-    # recurrent state (rwkv wkv, griffin lru/conv) would be corrupted by the
+    # Positional KV caches (linear and ring-buffer/windowed alike) tolerate
+    # ragged padded prefill: per-slot positions are clamped to the prompt
+    # length, so pad steps only rewrite the one entry at position plen,
+    # which the first decode step overwrites before attending. One bucketed
+    # scan therefore serves the whole admission group. Cumulative recurrent
+    # state (rwkv wkv, griffin lru/conv) would still be corrupted by the
     # extra pad steps — set True to prefill each distinct prompt length with
     # an exact-length scan instead (more dispatches, state-safe).
     stateful_prefill: bool = False
@@ -89,6 +91,12 @@ class Engine:
 
     def __init__(self, decode_step: Callable, init_caches: Callable,
                  cfg: ServeConfig):
+        # configs.base.serve_fns tags init_caches for archs whose cumulative
+        # recurrent state would be silently corrupted by bucketed pad steps —
+        # honor the tag so no caller has to remember to set the flag
+        if getattr(init_caches, "stateful_prefill", False) \
+                and not cfg.stateful_prefill:
+            cfg = dataclasses.replace(cfg, stateful_prefill=True)
         self.cfg = cfg
         self.init_caches = init_caches
         self._raw_decode_step = decode_step
@@ -96,10 +104,18 @@ class Engine:
         # (probed at 2 vs 1 so any max_slots >= 1 works)
         big = jax.eval_shape(lambda: init_caches(2))
         small = jax.eval_shape(lambda: init_caches(1))
-        self._batch_axes = jax.tree.map(
-            lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape, b.shape))
-                              if x != y),
-            big, small)
+
+        def batch_axis(path, a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise ValueError(
+                f"cache leaf {jax.tree_util.keystr(path)} has shape {a.shape} "
+                "at any batch size — every leaf needs an axis that tracks the "
+                "slot count (shared/global state is unsupported)")
+
+        self._batch_axes = jax.tree_util.tree_map_with_path(batch_axis,
+                                                            big, small)
 
         self._decode_block = jax.jit(self._make_decode_block(),
                                      donate_argnums=(1,))
@@ -134,17 +150,22 @@ class Engine:
         """Ragged-prompt prefill: (B, P) right-padded tokens + (B,) lengths.
 
         Scans the prompt through decode_step to populate a scratch cache.
-        Pad steps past a slot's length write garbage K/V at positions
-        >= plen; those entries are never attended (validity mask is
-        kpos <= pos) and each is overwritten when decode reaches it.
-        Returns (caches, last-real-token logits per slot).
+        Per-slot positions are clamped to the prompt length, so every pad
+        step past a slot's length rewrites the single cache entry at
+        position ``plen`` — the first decode step (also at ``plen``) then
+        overwrites it with real K/V before attending. Unclamped positions
+        would march past ``plen`` and, on ring-buffer (sliding-window) KV
+        caches, wrap around and clobber real entries whenever the padded
+        scan length exceeds the window. Returns (caches, last-real-token
+        logits per slot).
         """
         decode_step = self._raw_decode_step
 
         def prefill(params, caches, tokens, plens):
             def step(caches, inp):
                 tok_t, t = inp
-                caches, logits = decode_step(params, caches, tok_t, t)
+                pos = jnp.minimum(t, plens)  # (B,): freeze pad steps at plen
+                caches, logits = decode_step(params, caches, tok_t, pos)
                 return caches, logits
 
             positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
@@ -294,6 +315,11 @@ class Engine:
         cfg = self.cfg
         for req in requests:  # fail fast, before any request is served
             self._validate(req)
+        uids = [req.uid for req in requests]
+        if len(set(uids)) != len(uids):
+            dupes = sorted({u for u in uids if uids.count(u) > 1})
+            raise ValueError(f"duplicate request uids: {dupes} "
+                             "(results are keyed by uid)")
         t_start = time.time()
         queue = collections.deque(requests)
         slots = [_Slot() for _ in range(cfg.max_slots)]

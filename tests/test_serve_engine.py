@@ -127,6 +127,35 @@ def test_per_request_budget_and_validation(llama, greedy_engine):
             0, cfg.vocab, (MAX_LEN,)).astype(np.int32))])
 
 
+def test_duplicate_request_uids_rejected(llama, greedy_engine):
+    """_results is keyed by uid — a duplicate would silently drop a result."""
+    cfg, params, _, _ = llama
+    rng = np.random.default_rng(8)
+    reqs = [Request(uid=7, prompt=rng.integers(0, cfg.vocab, (5,)).astype(
+        np.int32)) for _ in range(2)]
+    with pytest.raises(ValueError, match="duplicate request uids"):
+        greedy_engine.run(params, reqs)
+
+
+def test_windowed_ring_cache_padded_prefill_matches_lockstep():
+    """Bucketed prefill must not corrupt ring-buffer (sliding-window) KV
+    caches: with window=16 a length-20 prompt pads to 32, and unclamped pad
+    positions would wrap the ring and clobber real prompt entries. The
+    lockstep reference scans exact lengths, so any corruption diverges."""
+    arch = ARCHS["starcoder2-3b"]
+    cfg = arch.make_smoke()  # window=16 < padded prefill length
+    params = nninit.materialize(cbase.model_spec(arch, cfg),
+                                jax.random.PRNGKey(0))
+    step, init_caches = cbase.serve_fns(arch, cfg, max_len=MAX_LEN)
+    scfg = ServeConfig(max_new_tokens=8, max_slots=2, max_len=MAX_LEN,
+                       decode_block=4, prefill_bucket=16)
+    prompts = np.random.default_rng(7).integers(
+        0, cfg.vocab, (2, 20)).astype(np.int32)
+    ref = LockstepEngine(step, init_caches, scfg).generate(params, prompts)
+    out = Engine(step, init_caches, scfg).generate(params, prompts)
+    np.testing.assert_array_equal(out, ref)
+
+
 def test_vector_pos_decode_matches_scalar(llama):
     """attention.decode_step with a uniform (B,) pos == scalar pos."""
     cfg, params, step, init_caches = llama
@@ -140,6 +169,24 @@ def test_vector_pos_decode_matches_scalar(llama):
     for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_serve_fns_tag_forces_stateful_prefill():
+    """rwkv/griffin served with a default ServeConfig must not silently run
+    bucketed pad steps through cumulative state: serve_fns tags init_caches
+    and the Engine flips the flag itself."""
+    arch = ARCHS["rwkv6-7b"]
+    step, init_caches = cbase.serve_fns(arch, arch.make_smoke(),
+                                        max_len=MAX_LEN)
+    assert init_caches.stateful_prefill
+    eng = Engine(step, init_caches, ServeConfig(max_len=MAX_LEN))
+    assert eng.cfg.stateful_prefill
+    arch = ARCHS["llama3.2-3b"]  # positional KV caches keep bucketed prefill
+    step, init_caches = cbase.serve_fns(arch, arch.make_smoke(),
+                                        max_len=MAX_LEN)
+    assert not init_caches.stateful_prefill
+    eng = Engine(step, init_caches, ServeConfig(max_len=MAX_LEN))
+    assert not eng.cfg.stateful_prefill
 
 
 @pytest.mark.slow
