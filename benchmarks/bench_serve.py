@@ -80,6 +80,20 @@ def bench_serve():
 
 
 if __name__ == "__main__":
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = bench_serve()
     print("name,value,derived")
-    for name, val, derived in bench_serve():
+    for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            [{"name": n, "value": v, "derived": str(d)}
+             for n, v, d in rows], indent=1))

@@ -18,6 +18,7 @@ from benchmarks.bench_tables import (bench_fig1_characterization,
                                      bench_tab2_searchspace,
                                      bench_tab3_configs, bench_tab4_precision)
 from benchmarks.bench_kernels import bench_kernels
+from benchmarks.bench_nsai import bench_nsai
 from benchmarks.bench_roofline import bench_roofline
 from benchmarks.bench_serve import bench_serve
 
@@ -31,6 +32,7 @@ SECTIONS = [
     ("kernels_microbench", bench_kernels),
     ("roofline_from_dryrun", bench_roofline),
     ("serve_continuous_batching", bench_serve),
+    ("serve_nsai_reasoning", bench_nsai),
 ]
 
 

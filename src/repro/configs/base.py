@@ -178,6 +178,67 @@ def serve_fns(arch: ArchSpec, cfg, max_len: int):
     return step, init
 
 
+# ---------------------------------------------------------------------------
+# NSAI reasoning traffic (serve.reason.ReasonEngine)
+# ---------------------------------------------------------------------------
+
+REASON_MODELS = ("nvsa", "prae")
+
+
+def reason_fns(model: str, cfg):
+    """(neural_fn, oracle_fn, symbolic_fn) for the two-stream ReasonEngine.
+
+    The serving analogue of ``serve_fns`` for reasoning traffic. ``cfg`` is
+    an ``NVSAConfig`` for both models — PrAE shares the CNN perception
+    frontend and only the symbolic stream differs (PMF-table abduction
+    instead of VSA algebra).
+
+    - ``neural_fn(params, ctx (N,8,H,W,1), cand (N,8,H,W,1))`` — frontend
+      perception, batched across the admission group; returns per-attribute
+      tuples of (N, 8, V) PMFs for context and candidate panels. Groups
+      context and candidate panels exactly like the offline
+      ``models.nvsa.solve`` so a full-set batch is bit-identical to it.
+    - ``oracle_fn(params, ctx_attrs (N,8,A), cand_attrs (N,8,A))`` — ground
+      truth one-hot PMFs (perception bypass: symbolic-stream-only serving
+      and the accuracy-1.0 conformance tests).
+    - ``symbolic_fn(codebooks, ctx_pmfs, cand_pmfs)`` — abduction +
+      execution; returns (answer logprobs (N, 8), rule posteriors (A,N,R)).
+      ``codebooks`` is the static VSA memory for nvsa, ignored for prae.
+    """
+    from repro.models import nvsa as nv
+
+    if model not in REASON_MODELS:
+        raise KeyError(f"unknown reasoning model {model!r}; "
+                       f"available: {REASON_MODELS}")
+
+    def neural(params, ctx, cand):
+        n, _, h, w, c = ctx.shape
+        ctx_p, _ = nv.frontend_pmfs(params, cfg, ctx.reshape(n * 8, h, w, c))
+        cand_p, _ = nv.frontend_pmfs(params, cfg, cand.reshape(n * 8, h, w, c))
+        return (tuple(p.reshape(n, 8, -1) for p in ctx_p),
+                tuple(p.reshape(n, 8, -1) for p in cand_p))
+
+    def oracle(params, ctx_attrs, cand_attrs):
+        del params
+        return (tuple(nv.oracle_pmfs(cfg, ctx_attrs)),
+                tuple(nv.oracle_pmfs(cfg, cand_attrs)))
+
+    if model == "nvsa":
+        def symbolic(codebooks, ctx_pmfs, cand_pmfs):
+            codebooks = nv.quantize_codebooks(cfg, codebooks)
+            return nv.reason(cfg, codebooks, list(ctx_pmfs), list(cand_pmfs))
+    else:  # prae
+        from repro.models import prae as pr
+
+        pcfg = pr.PrAEConfig(raven=cfg.raven)
+
+        def symbolic(codebooks, ctx_pmfs, cand_pmfs):
+            del codebooks  # PrAE's symbolic engine is PMF-native
+            return pr.solve_from_pmfs(pcfg, list(ctx_pmfs), list(cand_pmfs))
+
+    return neural, oracle, symbolic
+
+
 def param_count(arch: ArchSpec, cfg) -> int:
     return nninit.param_count(model_spec(arch, cfg))
 

@@ -1,8 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Continuous-batching generation with the slot-pool engine (smoke-scale
-models on CPU; the decode_step is the same function the dry-run lowers for
-the 256/512-chip meshes).
+Two traffic classes:
+- ``--workload lm`` (default): continuous-batching generation with the
+  slot-pool engine (smoke-scale models on CPU; the decode_step is the same
+  function the dry-run lowers for the 256/512-chip meshes).
+- ``--workload reason``: batched RAVEN reasoning through the two-stream
+  ReasonEngine (``--model nvsa|prae``), with the overlap/sequential
+  schedule and Tab. IV precision knobs exposed.
 """
 
 from __future__ import annotations
@@ -19,8 +23,42 @@ from repro.nn import init as nninit
 from repro.serve.engine import Engine, Request, ServeConfig
 
 
+def serve_reason(args):
+    from repro.data import raven
+    from repro.models import nvsa
+    from repro.serve.reason import (ReasonConfig, ReasonEngine,
+                                    requests_from_batch)
+
+    cfg = nvsa.NVSAConfig(d=args.d, nn_precision=args.nn_precision,
+                          symb_precision=args.symb_precision,
+                          use_qmatmul=args.nn_precision in ("int8", "int4"))
+    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
+    books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
+    neural, oracle, symbolic = cbase.reason_fns(args.model, cfg)
+    engine = ReasonEngine(
+        neural, symbolic,
+        ReasonConfig(batch_size=args.batch_size, schedule=args.schedule,
+                     perception="oracle" if args.oracle else "cnn"),
+        oracle_fn=oracle)
+
+    batch = raven.generate_batch(cfg.raven, seed=0, n=args.requests)
+    t0 = time.time()
+    results = engine.run(params, books, requests_from_batch(batch))
+    dt = time.time() - t0
+    acc = np.mean([results[i].answer == batch["answer"][i]
+                   for i in range(args.requests)])
+    print(f"[serve] model={args.model} schedule={args.schedule} "
+          f"perception={'oracle' if args.oracle else 'cnn'} "
+          f"precision=nn:{args.nn_precision}/symb:{args.symb_precision}")
+    print(f"[serve] {args.requests} problems in {dt:.1f}s "
+          f"({args.requests / dt:.1f} problems/s, "
+          f"{engine.stats['batches']} batches), accuracy {acc:.3f}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="lm", choices=("lm", "reason"))
     ap.add_argument("--arch", default="llama3.2-3b", choices=sorted(ARCHS))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -31,7 +69,22 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--eos-id", type=int, default=None)
+    # reasoning workload knobs
+    ap.add_argument("--model", default="nvsa", choices=cbase.REASON_MODELS)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--schedule", default="overlap",
+                    choices=("overlap", "sequential"))
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--nn-precision", default="fp32",
+                    choices=("fp32", "bf16", "int8", "int4"))
+    ap.add_argument("--symb-precision", default="fp32",
+                    choices=("fp32", "bf16", "int8", "int4"))
+    ap.add_argument("--oracle", action="store_true",
+                    help="ground-truth perception (symbolic stream only)")
     args = ap.parse_args()
+
+    if args.workload == "reason":
+        return serve_reason(args)
 
     arch = ARCHS[args.arch]
     cfg = arch.make_smoke()

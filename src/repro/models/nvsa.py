@@ -36,6 +36,10 @@ class NVSAConfig:
     answer_temp: float = 0.05
     nn_precision: str = "fp32"    # fp32 | bf16 | int8 | int4
     symb_precision: str = "fp32"  # fp32 | bf16 | int8 | int4
+    # Route the attribute heads through the Pallas quantized matmul
+    # (kernels/qmatmul) instead of fake-quant einsum when nn_precision is
+    # int8/int4 — the served mixed-precision path (Tab. IV on real kernels).
+    use_qmatmul: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +94,23 @@ def quant_tree(tree, precision: str):
                         if x.dtype in (jnp.float32, jnp.bfloat16) else x, tree)
 
 
+def quantize_codebooks(cfg: NVSAConfig, codebooks):
+    """Static VSA memory at cfg.symb_precision (no-op for fp32/bf16).
+
+    Shared by the offline ``solve`` path and the serving symbolic stream so
+    both quantize identically (the served-vs-offline equivalence tests rely
+    on this).
+    """
+    if cfg.symb_precision not in _BITS:
+        return codebooks
+    sy = cfg.symb_precision
+    return {
+        "books": [fake_quant(b, sy) for b in codebooks["books"]],
+        "shifts": [fake_quant(s, sy) for s in codebooks["shifts"]],
+        "roles": fake_quant(codebooks["roles"], sy),
+    }
+
+
 def nvsa_memory_bytes(cfg: NVSAConfig, params) -> int:
     """Model memory footprint at the configured mixed precision (Tab. IV)."""
     bits_nn = {"fp32": 32, "bf16": 16, "int8": 8, "int4": 4}[cfg.nn_precision]
@@ -118,8 +139,23 @@ def frontend_pmfs(params, cfg: NVSAConfig, images: jax.Array, train: bool = True
     feats = resnet.resnet(p["frontend"], rcfg, images, train=train,
                           compute_dtype=compute_dtype)
     feats = jax.nn.relu(feats)
-    logits = [layers.dense(p["heads"][f"attr{i}"], feats, compute_dtype).astype(jnp.float32)
-              for i in range(cfg.raven.n_attrs)]
+    if cfg.use_qmatmul and cfg.nn_precision in _BITS:
+        # heads on the Pallas qmatmul kernel: int8 activations (per-row
+        # scales) x int8/packed-int4 weights (per-column scales)
+        from repro.kernels.qmatmul import ops as qops
+
+        bits = _BITS[cfg.nn_precision]
+        logits = []
+        for i in range(cfg.raven.n_attrs):
+            h = p["heads"][f"attr{i}"]
+            y = qops.qdense(feats.astype(jnp.float32),
+                            h["w"].astype(jnp.float32), bits_w=bits,
+                            out_dtype=jnp.float32)
+            logits.append(y + h["b"].astype(jnp.float32))
+    else:
+        logits = [layers.dense(p["heads"][f"attr{i}"], feats,
+                               compute_dtype).astype(jnp.float32)
+                  for i in range(cfg.raven.n_attrs)]
     return [jax.nn.softmax(l, axis=-1) for l in logits], logits
 
 
@@ -228,12 +264,7 @@ def solve(params, codebooks, cfg: NVSAConfig, context: jax.Array,
     Returns (answer_logprobs (N, 8), rule_probs (A, N, R)).
     """
     n, _, h, w, c = context.shape
-    if cfg.symb_precision in _BITS:
-        codebooks = {
-            "books": [fake_quant(b, cfg.symb_precision) for b in codebooks["books"]],
-            "shifts": [fake_quant(s, cfg.symb_precision) for s in codebooks["shifts"]],
-            "roles": fake_quant(codebooks["roles"], cfg.symb_precision),
-        }
+    codebooks = quantize_codebooks(cfg, codebooks)
     ctx_pmfs, _ = frontend_pmfs(params, cfg, context.reshape(n * 8, h, w, c))
     cand_pmfs, _ = frontend_pmfs(params, cfg, candidates.reshape(n * 8, h, w, c))
     ctx_pmfs = [p.reshape(n, 8, -1) for p in ctx_pmfs]

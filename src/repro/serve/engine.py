@@ -42,7 +42,12 @@ class ServeConfig:
     max_len: int = 128            # per-slot KV capacity (prompt + new tokens)
     decode_block: int = 8         # tokens fused into one scan dispatch
     prefill_bucket: int = 16      # pad prompt scans to a multiple of this
-    seed: int = 0                 # PRNG seed for sampling
+    # Sampling PRNG: every request gets its own stream derived from
+    # (seed, uid), and each token folds in a per-request counter — so the
+    # tokens a request samples depend only on (seed, uid, prompt), never on
+    # which slot it landed in, which requests are co-resident, or the
+    # admission order. Engine.run is therefore submission-order invariant.
+    seed: int = 0
     # Positional KV caches (linear and ring-buffer/windowed alike) tolerate
     # ragged padded prefill: per-slot positions are clamped to the prompt
     # length, so pad steps only rewrite the one entry at position plen,
@@ -134,8 +139,12 @@ class Engine:
 
     # -- device-side pieces -------------------------------------------------
 
-    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
-        """Greedy when temperature == 0, else top-k categorical."""
+    def _sample(self, logits: jax.Array, keys: jax.Array) -> jax.Array:
+        """Greedy when temperature == 0, else per-slot top-k categorical.
+
+        ``keys``: (B, 2) uint32 — one PRNG key per slot, already folded with
+        the request's token counter (per-request streams, see ServeConfig).
+        """
         cfg = self.cfg
         if cfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -144,7 +153,18 @@ class Engine:
             k = min(cfg.top_k, scaled.shape[-1])
             kth = jax.lax.top_k(scaled, k)[0][..., -1:]
             scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+    def _request_key(self, uid: int) -> np.ndarray:
+        """Per-request PRNG stream root: fold the uid into the engine seed.
+
+        Folded in two 32-bit halves so uids differing anywhere in their low
+        64 bits (incl. the sign bit) get distinct streams.
+        """
+        key = jax.random.PRNGKey(self.cfg.seed)
+        key = jax.random.fold_in(key, np.uint32(uid & 0xFFFFFFFF))
+        return np.asarray(
+            jax.random.fold_in(key, np.uint32((uid >> 32) & 0xFFFFFFFF)))
 
     def _make_prefill(self):
         """Ragged-prompt prefill: (B, P) right-padded tokens + (B,) lengths.
@@ -197,25 +217,26 @@ class Engine:
         decode_step = self._raw_decode_step
         eos = cfg.eos_id
 
-        def block(params, caches, tok, pos, active, budget, rng):
+        def block(params, caches, tok, pos, active, budget, keys, gen):
             def step(carry, _):
-                caches, tok, pos, active, budget, rng = carry
+                caches, tok, pos, active, budget, gen = carry
                 caches, logits = decode_step(params, caches, tok, pos)
-                rng, sub = jax.random.split(rng)
+                sub = jax.vmap(jax.random.fold_in)(keys, gen)
                 nxt = self._sample(logits, sub)
                 emit = jnp.where(active, nxt, cfg.pad_id)
                 pos = jnp.where(active, pos + 1, pos)
+                gen = jnp.where(active, gen + 1, gen)
                 budget = jnp.where(active, budget - 1, budget)
                 alive = active & (budget > 0) & (pos < cfg.max_len)
                 if eos is not None:
                     alive = alive & (emit != eos)
-                return (caches, emit, pos, alive, budget, rng), (emit, active)
+                return (caches, emit, pos, alive, budget, gen), (emit, active)
 
-            carry = (caches, tok, pos, active, budget, rng)
+            carry = (caches, tok, pos, active, budget, gen)
             carry, (toks, valid) = jax.lax.scan(step, carry, None,
                                                 length=cfg.decode_block)
-            caches, tok, pos, active, budget, rng = carry
-            return caches, tok, pos, active, budget, rng, toks, valid
+            caches, tok, pos, active, budget, gen = carry
+            return caches, tok, pos, active, budget, gen, toks, valid
 
         return block
 
@@ -279,13 +300,20 @@ class Engine:
             caches = self._merge(caches, scratch, jnp.asarray(admit))
             self.stats["prefills"] += 1
 
-            state["rng"], sub = jax.random.split(state["rng"])
+            # first token: sample from each admitted request's own stream at
+            # counter 0 (non-admitted rows are computed but never read)
+            for slot_idx, req in items:
+                state["keys"][slot_idx] = self._request_key(req.uid)
+                state["gen"][slot_idx] = 0
+            sub = jax.vmap(jax.random.fold_in)(jnp.asarray(state["keys"]),
+                                               jnp.asarray(state["gen"]))
             first = np.asarray(self._sample_jit(last_logits, sub))
             for slot_idx, req in items:
                 state["tok"][slot_idx] = first[slot_idx]
                 state["pos"][slot_idx] = plens[slot_idx]
                 state["active"][slot_idx] = True
                 state["budget"][slot_idx] = slots[slot_idx].budget
+                state["gen"][slot_idx] = 1
             # a first token can already finish the request (EOS / budget 1)
             for slot_idx, req in items:
                 self._push_token(slots, state, slot_idx, int(first[slot_idx]))
@@ -330,7 +358,10 @@ class Engine:
             "pos": np.zeros((cfg.max_slots,), np.int32),
             "active": np.zeros((cfg.max_slots,), bool),
             "budget": np.zeros((cfg.max_slots,), np.int32),
-            "rng": jax.random.PRNGKey(cfg.seed),
+            # per-slot PRNG stream roots (keyed by the resident request's
+            # uid) + per-request token counters — see ServeConfig.seed
+            "keys": np.zeros((cfg.max_slots, 2), np.uint32),
+            "gen": np.zeros((cfg.max_slots,), np.int32),
         }
 
         while queue or state["active"].any():
@@ -338,11 +369,12 @@ class Engine:
             if not state["active"].any():
                 continue  # everything admitted retired on its first token
             t0 = time.time()
-            (caches, tok, pos, active, budget, state["rng"], toks, valid) = \
+            (caches, tok, pos, active, budget, gen, toks, valid) = \
                 self._decode_block(
                     params, caches, jnp.asarray(state["tok"]),
                     jnp.asarray(state["pos"]), jnp.asarray(state["active"]),
-                    jnp.asarray(state["budget"]), state["rng"])
+                    jnp.asarray(state["budget"]), jnp.asarray(state["keys"]),
+                    jnp.asarray(state["gen"]))
             toks, valid = np.asarray(toks), np.asarray(valid)
             self.stats["decode_time_s"] += time.time() - t0
             self.stats["decode_blocks"] += 1
@@ -350,6 +382,7 @@ class Engine:
             self.stats["active_slot_steps"] += int(valid.sum())
             state["tok"] = np.array(tok)  # copies: host mirrors stay writable
             state["pos"] = np.array(pos)
+            state["gen"] = np.array(gen)
             # replay emissions on the host mirror (handles retirement)
             for k in range(toks.shape[0]):
                 for i in np.nonzero(valid[k])[0]:

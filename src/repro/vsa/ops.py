@@ -72,10 +72,20 @@ def circ_corr_fft(a: jax.Array, b: jax.Array) -> jax.Array:
 _KERNEL_MIN_D = 128  # below this the XLA gather reference is faster anyway
 
 
+def dispatch_path(d: int) -> str:
+    """Which implementation ``bind``/``unbind`` route to for block dim ``d``.
+
+    "kernel" = Pallas circulant-matmul (power-of-two d at or above the size
+    threshold); "gather" = the exact XLA gather reference. Exposed so the
+    kernel-conformance tests can assert the routing, not just the numerics.
+    """
+    return "kernel" if (d >= _KERNEL_MIN_D and (d & (d - 1)) == 0) \
+        else "gather"
+
+
 def _use_kernel(a: jax.Array, use_kernel: bool | None) -> bool:
-    d = a.shape[-1]
     if use_kernel is None:
-        return d >= _KERNEL_MIN_D and (d & (d - 1)) == 0
+        return dispatch_path(a.shape[-1]) == "kernel"
     return use_kernel
 
 

@@ -156,6 +156,31 @@ def test_windowed_ring_cache_padded_prefill_matches_lockstep():
     np.testing.assert_array_equal(out, ref)
 
 
+def test_sampled_run_golden_deterministic_and_order_invariant(llama):
+    """Fixed seed + fixed request set => byte-identical token streams across
+    Engine.run invocations AND across submission orders: sampling is keyed
+    by (seed, uid, token index), so admission order, slot assignment, and
+    co-resident requests must not leak into any request's stream."""
+    cfg, params, _, _ = llama
+    rng = np.random.default_rng(9)
+    eng = _engine(llama, temperature=0.9, top_k=24, seed=21, max_slots=3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, (n,)).astype(np.int32),
+                    max_new_tokens=b)
+            for i, (n, b) in enumerate([(5, 8), (11, 4), (7, 6), (9, 8),
+                                        (4, 5), (13, 7), (6, 8)])]
+    golden = eng.run(params, reqs)
+    rerun = eng.run(params, reqs)
+    orders = [list(reversed(reqs)),
+              [reqs[i] for i in np.random.default_rng(0).permutation(7)]]
+    for results in [rerun] + [eng.run(params, order) for order in orders]:
+        assert sorted(results) == sorted(golden)
+        for uid in golden:
+            np.testing.assert_array_equal(results[uid].tokens,
+                                          golden[uid].tokens)
+            assert results[uid].finished_by_eos == golden[uid].finished_by_eos
+
+
 def test_vector_pos_decode_matches_scalar(llama):
     """attention.decode_step with a uniform (B,) pos == scalar pos."""
     cfg, params, step, init_caches = llama
