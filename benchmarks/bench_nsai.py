@@ -1,21 +1,24 @@
 """NSAI reasoning-traffic benchmark: the serving analogue of paper Fig. 9.
 
-Serves synthetic RAVEN problems through ``serve.reason.ReasonEngine`` and
-reports reasoning-problems/s for:
+Serves synthetic problems for any registered workload (``--model nvsa |
+prae | mimonet | lvrf`` — the list derives from
+``configs.base.REASON_WORKLOADS``) through the generic staged-pipeline
+engine and reports reasoning-problems/s for:
 
-  - the neural stream alone (perception -> PMFs, batched)
-  - the symbolic stream alone (abduction + execution on staged PMFs)
+  - each compiled pipeline stage in isolation (the per-stage timing
+    breakdown, paper Fig. 9's per-unit bars — stream tags included)
   - the naive sequential schedule (sync after every stage)
   - the overlapped double-buffered schedule (steady-state pipeline)
-  - the overlapped schedule under Tab. IV mixed precision
-    (nn int8 through the Pallas qmatmul kernel, symbolic int4)
+  - (nvsa) the symbolic-stream-only oracle variant and Tab. IV mixed
+    precision (nn int8 through the Pallas qmatmul kernel, symbolic int4)
 
 The request stream is a lazy generator — per-request rendering runs inside
 the pipeline, exactly the preprocessing a serving frontend would do — so
 the overlapped schedule's host/device overlap is measured, not idealized.
 
-Run:  PYTHONPATH=src python benchmarks/bench_nsai.py [--json out.json]
-          [--check-overlap] [--problems N] [--batch-size B] [--d D]
+Run:  PYTHONPATH=src python benchmarks/bench_nsai.py [--model nvsa]
+          [--json out.json] [--check-overlap] [--problems N]
+          [--batch-size B] [--d D]
 
 ``--check-overlap`` exits non-zero if the overlapped schedule does not beat
 the sequential one (the CI regression gate for the pipeline).
@@ -24,7 +27,6 @@ the sequential one (the CI regression gate for the pipeline).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import pathlib
 import sys
@@ -44,93 +46,97 @@ def _best_of(fn, iters: int = 3) -> float:
     return best
 
 
-def bench_nsai(problems: int = 32, batch_size: int = 4, d: int = 64,
-               iters: int = 3):
+def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
+               d: int = 64, iters: int = 3):
     from repro.configs import base as cbase
-    from repro.data import raven
-    from repro.models import nvsa
-    from repro.nn import init as nninit
-    from repro.serve.reason import (ReasonConfig, ReasonEngine, ReasonRequest)
-    from repro.vsa import ops as vsa_ops
+    from repro.serve.reason import ReasonConfig
 
-    cfg = nvsa.NVSAConfig(d=d)
-    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
-    books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
-    neural, oracle, symbolic = cbase.reason_fns("nvsa", cfg)
-    eng = ReasonEngine(neural, symbolic, ReasonConfig(batch_size=batch_size),
-                       oracle_fn=oracle)
-
-    truth: dict[int, int] = {}  # uid -> ground-truth answer, filled on pull
-
-    def stream(n, start=0):
-        # lazy: rendering happens on pull, inside the serving pipeline
-        for i in range(n):
-            p = raven.generate_problem(cfg.raven, seed=9000 + start + i)
-            truth[start + i] = int(p["answer"])
-            yield ReasonRequest(
-                uid=start + i, context=p["context"],
-                candidates=p["candidates"], context_attrs=p["context_attrs"],
-                candidate_attrs=p["candidate_attrs"])
+    entry = cbase.REASON_WORKLOADS[model]
+    cfg = entry.make_config(d=d)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    eng = cbase.reason_engine(model, cfg, ReasonConfig(batch_size=batch_size),
+                              consts=consts)
+    default = entry.variants[0]
+    sched = eng.schedules[default]
 
     rows = []
     n = problems
 
-    # warm both schedules' jit caches (shared engine instance)
-    eng.run(params, books, stream(batch_size), schedule="overlap")
-    eng.run(params, books, stream(batch_size), schedule="sequential")
+    def stream(count, start=0):
+        factory, _ = entry.make_requests(cfg, count, seed=9000 + start)
+        return factory()
 
-    # -- isolated streams (paper Fig. 9's per-unit bars) --------------------
-    staged = [eng._stage(b, "cnn")
-              for b in eng._batches(list(stream(n)), "cnn")]
-    dt = _best_of(lambda: [jax.block_until_ready(eng.jit_neural(params, c, a))
-                           for c, a in staged], iters)
-    rows.append(("nsai/neural_only/problems_s", n / dt,
-                 f"batches={len(staged)}"))
-    pmf_batches = [jax.block_until_ready(eng.jit_neural(params, c, a))
-                   for c, a in staged]
-    dt = _best_of(lambda: [jax.block_until_ready(eng.jit_symbolic(books, *p))
-                           for p in pmf_batches], iters)
-    rows.append(("nsai/symbolic_only/problems_s", n / dt,
-                 f"d={d} circ path={vsa_ops.dispatch_path(d)}"))
+    # warm both schedules' jit caches (shared engine instance)
+    eng.run(consts, stream(batch_size), schedule="overlap")
+    eng.run(consts, stream(batch_size), schedule="sequential")
+
+    # -- per-stage breakdown (paper Fig. 9's per-unit bars) -----------------
+    # time each compiled stage in isolation on pre-staged buffers
+    staged = [eng._stage(b, sched) for b in eng._batches(list(stream(n)))]
+    for si, (spec, fn) in enumerate(zip(sched.stages, sched.jit_stages)):
+        dt = _best_of(lambda: [jax.block_until_ready(fn(consts, b))
+                               for b in staged], iters)
+        rows.append((f"nsai/{model}/stage/{spec.name}/problems_s", n / dt,
+                     f"stream={spec.stream}"))
+        staged = [fn(consts, b) for b in staged]
+        jax.block_until_ready(staged)
 
     # -- schedules, end to end (ingest -> answer) ---------------------------
-    dt_seq = _best_of(lambda: eng.run(params, books, stream(n),
+    dt_seq = _best_of(lambda: eng.run(consts, stream(n),
                                       schedule="sequential"), iters)
-    rows.append(("nsai/sequential/problems_s", n / dt_seq,
+    rows.append((f"nsai/{model}/sequential/problems_s", n / dt_seq,
                  "sync after every stage"))
-    dt_ovl = _best_of(lambda: eng.run(params, books, stream(n),
+    dt_ovl = _best_of(lambda: eng.run(consts, stream(n),
                                       schedule="overlap"), iters)
-    rows.append(("nsai/overlap/problems_s", n / dt_ovl, "double-buffered"))
-    rows.append(("nsai/overlap_vs_sequential/speedup", dt_seq / dt_ovl,
-                 f"problems={n} batch={batch_size}"))
+    rows.append((f"nsai/{model}/overlap/problems_s", n / dt_ovl,
+                 "double-buffered"))
+    rows.append((f"nsai/{model}/overlap_vs_sequential/speedup",
+                 dt_seq / dt_ovl,
+                 f"problems={n} batch={batch_size} "
+                 f"pipeline={'->'.join(sched.stage_names)}"))
 
-    # -- symbolic-stream-only serving (oracle perception) -------------------
-    res = eng.run(params, books, stream(n), schedule="overlap",
-                  perception="oracle")
-    correct = sum(int(res[i].answer == truth[i]) for i in range(n))
-    dt = _best_of(lambda: eng.run(params, books, stream(n),
-                                  schedule="overlap", perception="oracle"),
-                  iters)
-    rows.append(("nsai/oracle_overlap/problems_s", n / dt,
-                 f"accuracy={correct / n:.3f}"))
+    if model == "nvsa":
+        rows.extend(_bench_nvsa_extras(cbase, entry, cfg, consts, eng,
+                                       stream, n, batch_size, d, iters))
+    return rows
 
-    # -- Tab. IV mixed precision through the qmatmul kernel -----------------
-    mp_cfg = dataclasses.replace(cfg, nn_precision="int8",
-                                 symb_precision="int4", use_qmatmul=True)
-    mp_neural, mp_oracle, mp_symbolic = cbase.reason_fns("nvsa", mp_cfg)
-    mp_eng = ReasonEngine(mp_neural, mp_symbolic,
-                          ReasonConfig(batch_size=batch_size),
-                          oracle_fn=mp_oracle)
-    mp_eng.run(params, books, stream(batch_size), schedule="overlap")
-    dt = _best_of(lambda: mp_eng.run(params, books, stream(n),
+
+def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
+                       batch_size, d, iters):
+    """NVSA-only rows: oracle variant + Tab. IV mixed precision."""
+    from repro.serve.reason import ReasonConfig
+    from repro.vsa import ops as vsa_ops
+
+    rows = []
+    # symbolic-stream-only serving (oracle variant)
+    factory, truth = entry.make_requests(cfg, n, seed=9000)
+    res = eng.run(consts, factory(), schedule="overlap", variant="oracle")
+    acc = entry.score(res, truth())
+    dt = _best_of(lambda: eng.run(consts, stream(n), schedule="overlap",
+                                  variant="oracle"), iters)
+    rows.append(("nsai/nvsa/oracle_overlap/problems_s", n / dt,
+                 f"accuracy={acc:.3f} circ path={vsa_ops.dispatch_path(d)}"))
+
+    # Tab. IV mixed precision through the qmatmul kernel
+    mp_cfg = entry.make_config(d=d, nn_precision="int8",
+                               symb_precision="int4")
+    mp_eng = cbase.reason_engine("nvsa", mp_cfg,
+                                 ReasonConfig(batch_size=batch_size),
+                                 consts=consts, variants=("cnn",))
+    mp_eng.run(consts, stream(batch_size), schedule="overlap")
+    dt = _best_of(lambda: mp_eng.run(consts, stream(n),
                                      schedule="overlap"), iters)
-    rows.append(("nsai/mixed_int8_int4_overlap/problems_s", n / dt,
+    rows.append(("nsai/nvsa/mixed_int8_int4_overlap/problems_s", n / dt,
                  "nn=int8 via qmatmul, symb=int4"))
     return rows
 
 
 def main():
+    from repro.configs import base as cbase
+
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="nvsa",
+                    choices=sorted(cbase.REASON_WORKLOADS))
     ap.add_argument("--problems", type=int, default=32)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--d", type=int, default=64,
@@ -143,8 +149,8 @@ def main():
                     help="exit 1 unless overlap beats sequential")
     args = ap.parse_args()
 
-    rows = bench_nsai(problems=args.problems, batch_size=args.batch_size,
-                      d=args.d, iters=args.iters)
+    rows = bench_nsai(model=args.model, problems=args.problems,
+                      batch_size=args.batch_size, d=args.d, iters=args.iters)
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
@@ -154,7 +160,7 @@ def main():
             [{"name": n, "value": v, "derived": str(x)}
              for n, v, x in rows], indent=1))
     if args.check_overlap:
-        key = "nsai/overlap_vs_sequential/speedup"
+        key = f"nsai/{args.model}/overlap_vs_sequential/speedup"
         speedup = {n: v for n, v, _ in rows}[key]
         if speedup < 1.0:
             # wall-clock races on shared CI runners are noisy — re-measure
@@ -162,15 +168,16 @@ def main():
             print(f"overlap gate: {speedup:.3f}x < 1.0x, remeasuring with "
                   f"{2 * args.problems} problems / best-of-{2 * args.iters}",
                   file=sys.stderr)
-            rows2 = bench_nsai(problems=2 * args.problems,
+            rows2 = bench_nsai(model=args.model, problems=2 * args.problems,
                                batch_size=args.batch_size, d=args.d,
                                iters=2 * args.iters)
             speedup = {n: v for n, v, _ in rows2}[key]
         if speedup < 1.0:
-            print(f"FAIL: overlapped schedule slower than sequential "
-                  f"({speedup:.3f}x)", file=sys.stderr)
+            print(f"FAIL: {args.model} overlapped schedule slower than "
+                  f"sequential ({speedup:.3f}x)", file=sys.stderr)
             return 1
-        print(f"overlap gate OK: {speedup:.3f}x over sequential")
+        print(f"overlap gate OK ({args.model}): {speedup:.3f}x over "
+              f"sequential")
     return 0
 
 

@@ -1,104 +1,102 @@
-"""Serving neuro-symbolic reasoning traffic — the NSFlow two-stream demo.
+"""Serving neuro-symbolic reasoning traffic — the NSFlow pipeline demo.
 
-Part 1: NVSA RAVEN serving through the double-buffered ReasonEngine —
-        a lazy request stream (problems are rendered as the pipeline pulls
-        them) flows through the neural stage (ResNet -> attribute PMFs)
-        and the symbolic stage (FPE codes -> VSA rule abduction -> rule
-        execution by circular convolution), overlap vs sequential.
-Part 2: symbolic-stream-only serving (oracle perception) — the engine's
-        answer accuracy on unambiguous RAVEN grids is 1.0 by construction.
-Part 3: PrAE on the same traffic — a different symbolic op mix
-        (PMF-table shifts/correlations, no VSA algebra) behind the same
-        engine interface, plus Tab. IV mixed precision on NVSA (nn int8
-        through the Pallas qmatmul kernel, symbolic int4).
+Every workload in ``configs.base.REASON_WORKLOADS`` serves through the SAME
+generic engine: its pipeline is compiled from declared stage functions into
+a ``StagedSchedule`` (``serve.schedule``), and ``ReasonEngine`` executes
+the schedule double-buffered so host ingest/staging of batch i+1 overlaps
+batch i on the device.
+
+Part 1: NVSA RAVEN serving — a lazy request stream flows through the
+        compiled two-stage pipeline (ResNet frontend -> attribute PMFs;
+        FPE codes -> VSA rule abduction -> circ-conv rule execution),
+        overlap vs sequential + per-stage timing breakdown.
+Part 2: symbolic-stream-only serving (oracle variant) — accuracy 1.0 on
+        unambiguous RAVEN grids by construction.
+Part 3: every registered workload through the same path — PrAE (PMF-table
+        symbolic stream), MIMONet (bind -> shared NN trunk -> unbind/
+        classify, K inputs per request), LVRF (learned-rule posterior ->
+        posterior-weighted execution) — the model list derives from the
+        registry, so a new workload shows up here by registration alone.
+Part 4: Tab. IV mixed precision on NVSA (nn int8 through the Pallas
+        qmatmul kernel, symbolic int4) behind the same engine.
 
 Run:  PYTHONPATH=src python examples/serve_reason.py
 """
 
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import base as cbase
-from repro.data import raven
 from repro.models import nvsa
-from repro.nn import init as nninit
-from repro.serve.reason import ReasonConfig, ReasonEngine, ReasonRequest
+from repro.serve.reason import ReasonConfig
 
 D = 64          # VSA block dim; >= 128 (pow2) would engage the Pallas kernel
 N_PROBLEMS = 16
 BATCH = 4
 
 
-def request_stream(cfg, n, start=0):
-    """Lazy request source: rendering runs inside the serving pipeline."""
-    for i in range(n):
-        p = raven.generate_problem(cfg.raven, seed=100 + start + i)
-        yield ReasonRequest(
-            uid=start + i, context=p["context"], candidates=p["candidates"],
-            context_attrs=p["context_attrs"],
-            candidate_attrs=p["candidate_attrs"])
-
-
-def answers(cfg, n, start=0):
-    return [raven.generate_problem(cfg.raven, seed=100 + start + i)["answer"]
-            for i in range(n)]
-
-
 def main():
-    cfg = nvsa.NVSAConfig(d=D)
-    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
-    books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
-    neural, oracle, symbolic = cbase.reason_fns("nvsa", cfg)
-    engine = ReasonEngine(neural, symbolic, ReasonConfig(batch_size=BATCH),
-                          oracle_fn=oracle)
+    entry = cbase.REASON_WORKLOADS["nvsa"]
+    cfg = entry.make_config(d=D)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    engine = cbase.reason_engine("nvsa", cfg, ReasonConfig(batch_size=BATCH),
+                                 consts=consts)
 
-    # Part 1 — two-stream NVSA serving, overlap vs sequential
-    engine.run(params, books, request_stream(cfg, BATCH))  # warm up compile
-    engine.run(params, books, request_stream(cfg, BATCH),
-               schedule="sequential")
+    # Part 1 — compiled NVSA pipeline, overlap vs sequential
+    print(f"[serve_reason] nvsa pipeline: "
+          f"{engine.schedules['cnn'].describe()}")
+    stream, truth = entry.make_requests(cfg, N_PROBLEMS, seed=100)
+    warm, _ = entry.make_requests(cfg, BATCH, seed=0)
+    engine.run(consts, warm())  # warm up compile
+    engine.run(consts, warm(), schedule="sequential")
     for sched in ("sequential", "overlap"):
         t0 = time.time()
-        res = engine.run(params, books, request_stream(cfg, N_PROBLEMS),
-                         schedule=sched)
+        res = engine.run(consts, stream(), schedule=sched)
         dt = time.time() - t0
         print(f"[serve_reason] nvsa/{sched}: {N_PROBLEMS} problems in "
               f"{dt:.2f}s ({N_PROBLEMS / dt:.1f} problems/s)")
+    for name, t in engine.stats["stage_time_s"].items():
+        print(f"[serve_reason]   stage {name:10s} {t:.3f}s (sequential)")
     first = res[0]
     print(f"[serve_reason]   e.g. uid 0 (batch {first.batch}): answer "
           f"panel {first.answer}, logp {first.answer_logprobs.round(2)}")
 
-    # Part 2 — symbolic stream only: oracle perception, accuracy 1.0
-    res = engine.run(params, books, request_stream(cfg, N_PROBLEMS),
-                     perception="oracle")
-    acc = np.mean([res[i].answer == a
-                   for i, a in enumerate(answers(cfg, N_PROBLEMS))])
-    print(f"[serve_reason] oracle perception (symbolic stream only): "
-          f"accuracy {acc:.3f}")
+    # Part 2 — symbolic stream only: oracle variant, accuracy 1.0
+    res = engine.run(consts, stream(), variant="oracle")
+    print(f"[serve_reason] oracle variant (symbolic stream only): "
+          f"accuracy {entry.score(res, truth()):.3f}")
 
-    # Part 3 — PrAE traffic + NVSA mixed precision on the same engine API
-    pn, po, ps = cbase.reason_fns("prae", cfg)
-    prae_eng = ReasonEngine(pn, ps, ReasonConfig(batch_size=BATCH),
-                            oracle_fn=po)
-    res = prae_eng.run(params, None, request_stream(cfg, N_PROBLEMS),
-                       perception="oracle")
-    acc = np.mean([res[i].answer == a
-                   for i, a in enumerate(answers(cfg, N_PROBLEMS))])
-    print(f"[serve_reason] prae (PMF-table symbolic stream): "
-          f"accuracy {acc:.3f}")
+    # Part 3 — every registered workload through the same generic engine
+    for model, e in cbase.REASON_WORKLOADS.items():
+        if model == "nvsa":
+            continue
+        mcfg = e.make_config(d=D)
+        mconsts = e.make_consts(mcfg, jax.random.PRNGKey(0))
+        variant = "oracle" if "oracle" in e.variants else e.variants[0]
+        eng = cbase.reason_engine(model, mcfg, ReasonConfig(batch_size=BATCH),
+                                  consts=mconsts, variants=(variant,))
+        mstream, mtruth = e.make_requests(mcfg, N_PROBLEMS, seed=100)
+        t0 = time.time()
+        res = eng.run(mconsts, mstream())
+        dt = time.time() - t0
+        print(f"[serve_reason] {model}/{variant}: "
+              f"{eng.schedules[variant].describe()}")
+        print(f"[serve_reason]   {N_PROBLEMS} problems in {dt:.2f}s "
+              f"({N_PROBLEMS / dt:.1f} problems/s), accuracy "
+              f"{e.score(res, mtruth()):.3f}")
 
-    mp_cfg = dataclasses.replace(cfg, nn_precision="int8",
-                                 symb_precision="int4", use_qmatmul=True)
-    mn, mo, ms = cbase.reason_fns("nvsa", mp_cfg)
-    mp_eng = ReasonEngine(mn, ms, ReasonConfig(batch_size=BATCH),
-                          oracle_fn=mo)
+    # Part 4 — Tab. IV mixed precision on the same engine API
+    mp_cfg = entry.make_config(d=D, nn_precision="int8",
+                               symb_precision="int4")
+    mp_eng = cbase.reason_engine("nvsa", mp_cfg,
+                                 ReasonConfig(batch_size=BATCH),
+                                 consts=consts, variants=("cnn",))
     t0 = time.time()
-    mp_eng.run(params, books, request_stream(cfg, N_PROBLEMS))
+    mp_eng.run(consts, stream())
     print(f"[serve_reason] mixed precision nn=int8(qmatmul)/symb=int4: "
-          f"{N_PROBLEMS} problems in {time.time() - t0:.2f}s "
-          f"(memory {nvsa.nvsa_memory_bytes(cfg, params) / nvsa.nvsa_memory_bytes(mp_cfg, params):.1f}x smaller)")
+          f"{N_PROBLEMS} problems in {time.time() - t0:.2f}s (memory "
+          f"{nvsa.nvsa_memory_bytes(cfg, consts['params']) / nvsa.nvsa_memory_bytes(mp_cfg, consts['params']):.1f}x smaller)")
 
 
 if __name__ == "__main__":

@@ -35,8 +35,12 @@ def train_frontend(cfg: nvsa.NVSAConfig, steps: int, n_problems: int,
 
     @jax.jit
     def step_fn(params, state, bi, bl):
-        loss, grads = jax.value_and_grad(nvsa.frontend_loss)(params, cfg, bi, bl)
+        (loss, bn_stats), grads = jax.value_and_grad(
+            nvsa.frontend_loss, has_aux=True)(params, cfg, bi, bl)
         params, state, m = opt_mod.apply_updates(params, grads, state, ocfg)
+        # fold this step's BN batch statistics into the running stats so
+        # eval-mode BN (serving, nvsa.solve) sees trained statistics
+        params = nvsa.frontend_apply_bn_stats(params, bn_stats, momentum=0.9)
         return params, state, loss
 
     rng = np.random.default_rng(0)

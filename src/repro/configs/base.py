@@ -179,64 +179,475 @@ def serve_fns(arch: ArchSpec, cfg, max_len: int):
 
 
 # ---------------------------------------------------------------------------
-# NSAI reasoning traffic (serve.reason.ReasonEngine)
+# NSAI reasoning traffic: the workload registry
+# (serve.schedule.compile_schedule -> serve.reason.ReasonEngine)
 # ---------------------------------------------------------------------------
+#
+# Each entry declares how a workload serves: its pipeline *stage functions*
+# (jax-traceable, with nn/vsa/simd stream tags), the staged-batch input
+# specs, the constants every stage receives, request ingest/collect
+# adapters, and a synthetic-traffic generator.  ``compile_reason_schedule``
+# lowers an entry to an executable ``StagedSchedule`` (tracing the composed
+# stages with ``core.trace`` into the same DataflowGraph the DSE consumes),
+# and the generic ``ReasonEngine`` runs it.  Adding a workload = one
+# registry entry; the engine, launcher, examples and benchmarks all derive
+# their model lists from ``REASON_WORKLOADS``.
 
-REASON_MODELS = ("nvsa", "prae")
 
+@dataclasses.dataclass(frozen=True)
+class ReasonWorkload:
+    """Registry entry: everything a workload contributes to the serving path.
 
-def reason_fns(model: str, cfg):
-    """(neural_fn, oracle_fn, symbolic_fn) for the two-stream ReasonEngine.
-
-    The serving analogue of ``serve_fns`` for reasoning traffic. ``cfg`` is
-    an ``NVSAConfig`` for both models — PrAE shares the CNN perception
-    frontend and only the symbolic stream differs (PMF-table abduction
-    instead of VSA algebra).
-
-    - ``neural_fn(params, ctx (N,8,H,W,1), cand (N,8,H,W,1))`` — frontend
-      perception, batched across the admission group; returns per-attribute
-      tuples of (N, 8, V) PMFs for context and candidate panels. Groups
-      context and candidate panels exactly like the offline
-      ``models.nvsa.solve`` so a full-set batch is bit-identical to it.
-    - ``oracle_fn(params, ctx_attrs (N,8,A), cand_attrs (N,8,A))`` — ground
-      truth one-hot PMFs (perception bypass: symbolic-stream-only serving
-      and the accuracy-1.0 conformance tests).
-    - ``symbolic_fn(codebooks, ctx_pmfs, cand_pmfs)`` — abduction +
-      execution; returns (answer logprobs (N, 8), rule posteriors (A,N,R)).
-      ``codebooks`` is the static VSA memory for nvsa, ignored for prae.
+    - ``variants``: named pipeline variants (first = default).  RAVEN
+      reasoners expose ``cnn`` (neural perception) and ``oracle``
+      (ground-truth PMFs: symbolic-stream-only serving).
+    - ``make_config(**kw)``: config from generic launcher knobs (``d``,
+      ``nn_precision``, ``symb_precision``); inapplicable knobs ignored.
+    - ``make_consts(cfg, key)``: the constant pytree handed to every stage
+      (params / codebooks / binding keys).
+    - ``stage_specs(cfg, variant)``: ordered ``StageSpec`` tuple.
+    - ``input_specs(cfg, batch_size, variant)``: ShapeDtypeStruct pytree of
+      one staged batch (stage 0's input).
+    - ``ingest(cfg, variant)``: per-request host adapter -> input pytree.
+    - ``collect(cfg)``: ``(host_out, i) -> ReasonResult fields`` adapter.
+    - ``paper_graph()``: the published-scale ``OpGraph`` from
+      ``core.workloads`` (None -> trace only), for the analytic side.
+    - ``make_requests(cfg, n, seed)``: ``(stream_factory, truth)`` where
+      ``stream_factory()`` yields requests lazily (rendering runs inside
+      the pipeline) and ``truth()`` lazily materializes ground truth.
+    - ``score(results, truth_values)``: serving accuracy.
     """
+
+    name: str
+    describe: str
+    variants: tuple[str, ...]
+    make_config: Callable[..., Any]
+    make_consts: Callable[[Any, jax.Array], Any]
+    stage_specs: Callable[[Any, str], tuple]
+    input_specs: Callable[[Any, int, str], Any]
+    ingest: Callable[[Any, str], Callable]
+    collect: Callable[[Any], Callable]
+    make_requests: Callable[[Any, int, int], tuple]
+    score: Callable[[dict, Any], float]
+    paper_graph: Callable[[], Any] | None = None
+
+
+def _require(req, field: str):
+    val = getattr(req, field)
+    if val is None:
+        raise ValueError(f"needs ReasonRequest.{field}")
+    return val
+
+
+def _raven_ingest(cfg, variant: str) -> Callable:
+    import numpy as np
+
+    if variant == "oracle":
+        return lambda r: (
+            np.asarray(_require(r, "context_attrs"), np.int32),
+            np.asarray(_require(r, "candidate_attrs"), np.int32))
+    return lambda r: (
+        np.asarray(_require(r, "context"), np.float32),
+        np.asarray(_require(r, "candidates"), np.float32))
+
+
+def _raven_collect(cfg) -> Callable:
+    import numpy as np
+
+    def collect(host_out, i):
+        logp, posts = host_out  # (B, 8), (A, B, R)
+        return {"answer": int(np.argmax(logp[i])), "answer_logprobs": logp[i],
+                "rule_posteriors": posts[:, i]}
+
+    return collect
+
+
+def _raven_input_specs(cfg, batch_size: int, variant: str):
+    hw = cfg.raven.image_size
+    a = cfg.raven.n_attrs
+    if variant == "oracle":
+        spec = jax.ShapeDtypeStruct((batch_size, 8, a), jnp.int32)
+    else:
+        spec = jax.ShapeDtypeStruct((batch_size, 8, hw, hw, 1), jnp.float32)
+    return (spec, spec)
+
+
+def _raven_requests(cfg, n: int, seed: int):
+    """Lazy RAVEN request stream + lazily-materialized answers.  Answers
+    are captured as the stream is pulled, so scoring after a serve run
+    costs no second render pass."""
+    import numpy as np
+
+    from repro.data import raven
+
+    answers: dict[int, int] = {}
+
+    def factory():
+        from repro.serve.reason import ReasonRequest
+
+        for i in range(n):
+            p = raven.generate_problem(cfg.raven, seed=seed + i)
+            answers[i] = int(p["answer"])
+            yield ReasonRequest(
+                uid=i, context=p["context"], candidates=p["candidates"],
+                context_attrs=p["context_attrs"],
+                candidate_attrs=p["candidate_attrs"])
+
+    def truth():
+        for i in range(n):  # only re-render what was never pulled
+            if i not in answers:
+                answers[i] = int(raven.generate_problem(
+                    cfg.raven, seed=seed + i)["answer"])
+        return np.array([answers[i] for i in range(n)])
+
+    return factory, truth
+
+
+def _mean_match_score(results: dict, truth_values) -> float:
+    """Mean answer==truth (elementwise for per-channel answer arrays)."""
+    import numpy as np
+
+    return float(np.mean([results[i].answer == truth_values[i]
+                          for i in range(len(truth_values))]))
+
+
+def _nvsa_frontend_stage(cfg, consts_key: str = "params"):
+    """Shared CNN perception stage (NVSA frontend; eval-mode BN, so a
+    request's PMFs are independent of its admission group).  ``consts_key``
+    selects the frontend params in the workload's consts pytree (LVRF
+    carries them under ``"frontend"`` beside its learned rules)."""
     from repro.models import nvsa as nv
+    from repro.serve.schedule import StageSpec
 
-    if model not in REASON_MODELS:
-        raise KeyError(f"unknown reasoning model {model!r}; "
-                       f"available: {REASON_MODELS}")
-
-    def neural(params, ctx, cand):
+    def frontend(consts, bufs):
+        ctx, cand = bufs
         n, _, h, w, c = ctx.shape
-        ctx_p, _ = nv.frontend_pmfs(params, cfg, ctx.reshape(n * 8, h, w, c))
-        cand_p, _ = nv.frontend_pmfs(params, cfg, cand.reshape(n * 8, h, w, c))
-        return (tuple(p.reshape(n, 8, -1) for p in ctx_p),
-                tuple(p.reshape(n, 8, -1) for p in cand_p))
+        p = consts[consts_key]
+        ctx_p, _ = nv.frontend_pmfs(p, cfg, ctx.reshape(n * 8, h, w, c))
+        cand_p, _ = nv.frontend_pmfs(p, cfg, cand.reshape(n * 8, h, w, c))
+        return (tuple(x.reshape(n, 8, -1) for x in ctx_p),
+                tuple(x.reshape(n, 8, -1) for x in cand_p))
 
-    def oracle(params, ctx_attrs, cand_attrs):
-        del params
+    return StageSpec("frontend", "nn", frontend)
+
+
+def _oracle_stage(cfg):
+    """Ground-truth one-hot PMFs (perception bypass: symbolic-only serving)."""
+    from repro.models import nvsa as nv
+    from repro.serve.schedule import StageSpec
+
+    def oracle(consts, bufs):
+        ctx_attrs, cand_attrs = bufs
         return (tuple(nv.oracle_pmfs(cfg, ctx_attrs)),
                 tuple(nv.oracle_pmfs(cfg, cand_attrs)))
 
-    if model == "nvsa":
-        def symbolic(codebooks, ctx_pmfs, cand_pmfs):
-            codebooks = nv.quantize_codebooks(cfg, codebooks)
-            return nv.reason(cfg, codebooks, list(ctx_pmfs), list(cand_pmfs))
-    else:  # prae
-        from repro.models import prae as pr
+    return StageSpec("oracle", "simd", oracle)
 
-        pcfg = pr.PrAEConfig(raven=cfg.raven)
 
-        def symbolic(codebooks, ctx_pmfs, cand_pmfs):
-            del codebooks  # PrAE's symbolic engine is PMF-native
-            return pr.solve_from_pmfs(pcfg, list(ctx_pmfs), list(cand_pmfs))
+# -- nvsa -------------------------------------------------------------------
 
-    return neural, oracle, symbolic
+
+def _nvsa_config(d: int = 128, nn_precision: str = "fp32",
+                 symb_precision: str = "fp32", **_):
+    from repro.models import nvsa as nv
+
+    return nv.NVSAConfig(d=d, nn_precision=nn_precision,
+                         symb_precision=symb_precision,
+                         use_qmatmul=nn_precision in ("int8", "int4"))
+
+
+def _nvsa_consts(cfg, key):
+    from repro.models import nvsa as nv
+    from repro.nn import init as nninit
+
+    k1, k2 = jax.random.split(key)
+    return {"params": nninit.materialize(nv.nvsa_spec(cfg), k1),
+            "books": nv.nvsa_codebooks(cfg, k2)}
+
+
+def _nvsa_stages(cfg, variant: str):
+    from repro.models import nvsa as nv
+    from repro.serve.schedule import StageSpec
+
+    def symbolic(consts, bufs):
+        ctx_pmfs, cand_pmfs = bufs
+        books = nv.quantize_codebooks(cfg, consts["books"])
+        return nv.reason(cfg, books, list(ctx_pmfs), list(cand_pmfs))
+
+    first = _oracle_stage(cfg) if variant == "oracle" \
+        else _nvsa_frontend_stage(cfg)
+    return (first, StageSpec("symbolic", "vsa", symbolic))
+
+
+# -- prae -------------------------------------------------------------------
+
+
+def _prae_stages(cfg, variant: str):
+    # PrAE shares the CNN perception frontend (cfg is an NVSAConfig); its
+    # symbolic engine is PMF-native — scatter/shift/reduce, SIMD-shaped
+    from repro.models import prae as pr
+    from repro.serve.schedule import StageSpec
+
+    pcfg = pr.PrAEConfig(raven=cfg.raven)
+
+    def symbolic(consts, bufs):
+        ctx_pmfs, cand_pmfs = bufs
+        return pr.solve_from_pmfs(pcfg, list(ctx_pmfs), list(cand_pmfs))
+
+    first = _oracle_stage(cfg) if variant == "oracle" \
+        else _nvsa_frontend_stage(cfg)
+    return (first, StageSpec("symbolic", "simd", symbolic))
+
+
+# -- mimonet ----------------------------------------------------------------
+
+
+def _mimonet_config(d: int = 128, **_):
+    from repro.models import mimonet as mm
+
+    return mm.MIMONetConfig(d=d)
+
+
+def _mimonet_consts(cfg, key):
+    from repro.models import mimonet as mm
+    from repro.nn import init as nninit
+
+    k1, k2 = jax.random.split(key)
+    return {"params": nninit.materialize(mm.mimonet_spec(cfg), k1),
+            "keys": mm.mimonet_keys(cfg, k2)}
+
+
+def _mimonet_stages(cfg, variant: str):
+    from repro.models import mimonet as mm
+    from repro.serve.schedule import StageSpec
+
+    return (
+        StageSpec("encode", "nn",
+                  lambda c, images: mm.encode(c["params"], cfg, images)),
+        StageSpec("superpose", "vsa",
+                  lambda c, codes: mm.superpose(c["keys"], codes)),
+        StageSpec("trunk", "nn",
+                  lambda c, x: mm.trunk(c["params"], x)),
+        StageSpec("unbind", "vsa",
+                  lambda c, x: mm.unbind(c["keys"], cfg, x)),
+        StageSpec("classify", "simd",
+                  lambda c, u: mm.classify(c["params"], u)),
+    )
+
+
+def _mimonet_input_specs(cfg, batch_size: int, variant: str):
+    hw = cfg.raven.image_size
+    return jax.ShapeDtypeStruct(
+        (batch_size, cfg.n_channels, hw, hw, 1), jnp.float32)
+
+
+def _mimonet_ingest(cfg, variant: str):
+    import numpy as np
+
+    return lambda r: np.asarray(_require(r, "images"), np.float32)
+
+
+def _mimonet_collect(cfg):
+    import numpy as np
+
+    def collect(host_out, i):
+        logits = host_out[i]  # (K, n_classes)
+        shifted = logits - logits.max(-1, keepdims=True)
+        logp = shifted - np.log(np.exp(shifted).sum(-1, keepdims=True))
+        return {"answer": np.argmax(logits, -1), "answer_logprobs": logp,
+                "rule_posteriors": None}
+
+    return collect
+
+
+def _mimonet_requests(cfg, n: int, seed: int):
+    """K-channel superposed-classification traffic from rendered RAVEN
+    panels; truth = per-channel shape-type labels, captured alongside the
+    rendered panels (no second render pass at scoring time)."""
+    from repro.data import raven
+
+    k = cfg.n_channels
+    cache: dict = {}
+
+    def _panels():
+        if not cache:
+            # 16 rendered panels per problem (8 ctx + 8 cand)
+            probs = (n * k + 15) // 16
+            cache["imgs"], cache["attrs"] = raven.panel_dataset(
+                cfg.raven, seed=seed, n_problems=probs)
+        return cache["imgs"], cache["attrs"]
+
+    def factory():
+        from repro.serve.reason import ReasonRequest
+
+        imgs, _ = _panels()
+        for i in range(n):
+            yield ReasonRequest(uid=i, images=imgs[i * k:(i + 1) * k])
+
+    def truth():
+        _, attrs = _panels()
+        return attrs[: n * k, 0].reshape(n, k)  # attr 0 = shape type
+
+    return factory, truth
+
+
+# -- lvrf -------------------------------------------------------------------
+
+
+def _lvrf_config(d: int = 128, **_):
+    from repro.models import lvrf as lv
+
+    return lv.LVRFConfig(d=d)
+
+
+def _lvrf_frontend_cfg(cfg):
+    """NVSA-frontend config for LVRF's CNN perception (shared ResNet
+    frontend; the symbolic side is LVRF's learned rules)."""
+    from repro.models import nvsa as nv
+
+    return nv.NVSAConfig(raven=cfg.raven)
+
+
+def _lvrf_consts(cfg, key):
+    from repro.models import lvrf as lv
+    from repro.models import nvsa as nv
+    from repro.nn import init as nninit
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    fcfg = _lvrf_frontend_cfg(cfg)
+    return {"params": nninit.materialize(lv.lvrf_spec(cfg), k1),
+            "books": lv.lvrf_codebooks(cfg, k2),
+            "frontend": nninit.materialize(nv.nvsa_spec(fcfg), k3)}
+
+
+def _lvrf_stages(cfg, variant: str):
+    from repro.models import lvrf as lv
+    from repro.serve.schedule import StageSpec
+
+    def abduce(consts, bufs):
+        ctx_pmfs, cand_pmfs = bufs
+        codes = lv.encode_codes(consts["books"], cfg, list(ctx_pmfs))
+        posts = lv.abduce(consts["params"], cfg, codes)
+        return (codes, posts, cand_pmfs)
+
+    def execute(consts, bufs):
+        codes, posts, cand_pmfs = bufs
+        logp = lv.execute(consts["params"], consts["books"], cfg, codes,
+                          posts, list(cand_pmfs))
+        return (logp, posts)
+
+    first = _oracle_stage(cfg) if variant == "oracle" \
+        else _nvsa_frontend_stage(_lvrf_frontend_cfg(cfg),
+                                  consts_key="frontend")
+    return (first, StageSpec("abduce", "vsa", abduce),
+            StageSpec("execute", "vsa", execute))
+
+
+def _paper_graph(name: str):
+    def build():
+        from repro.core import workloads
+
+        return workloads.WORKLOADS[name]()
+
+    return build
+
+
+REASON_WORKLOADS: dict[str, ReasonWorkload] = {
+    "nvsa": ReasonWorkload(
+        name="nvsa",
+        describe="NVSA: ResNet perception -> FPE/VSA rule abduction -> "
+                 "circ-conv rule execution (RAVEN)",
+        variants=("cnn", "oracle"),
+        make_config=_nvsa_config, make_consts=_nvsa_consts,
+        stage_specs=_nvsa_stages, input_specs=_raven_input_specs,
+        ingest=_raven_ingest, collect=_raven_collect,
+        make_requests=_raven_requests, score=_mean_match_score,
+        paper_graph=_paper_graph("nvsa")),
+    "prae": ReasonWorkload(
+        name="prae",
+        describe="PrAE: shared CNN perception -> PMF-table abduction/"
+                 "execution (SIMD-shaped symbolic stream)",
+        variants=("cnn", "oracle"),
+        make_config=_nvsa_config, make_consts=_nvsa_consts,
+        stage_specs=_prae_stages, input_specs=_raven_input_specs,
+        ingest=_raven_ingest, collect=_raven_collect,
+        make_requests=_raven_requests, score=_mean_match_score),
+    "mimonet": ReasonWorkload(
+        name="mimonet",
+        describe="MIMONet: K-channel superposed classification — bind -> "
+                 "shared NN trunk -> unbind/classify",
+        variants=("default",),
+        make_config=_mimonet_config, make_consts=_mimonet_consts,
+        stage_specs=_mimonet_stages, input_specs=_mimonet_input_specs,
+        ingest=_mimonet_ingest, collect=_mimonet_collect,
+        make_requests=_mimonet_requests, score=_mean_match_score,
+        paper_graph=_paper_graph("mimonet")),
+    "lvrf": ReasonWorkload(
+        name="lvrf",
+        describe="LVRF: frontend -> learned-rule posterior -> posterior-"
+                 "weighted circ-conv execution (RAVEN)",
+        variants=("cnn", "oracle"),
+        make_config=_lvrf_config, make_consts=_lvrf_consts,
+        stage_specs=_lvrf_stages, input_specs=_raven_input_specs,
+        ingest=_raven_ingest, collect=_raven_collect,
+        make_requests=_raven_requests, score=_mean_match_score,
+        paper_graph=_paper_graph("lvrf")),
+}
+
+# model lists everywhere (launcher --model choices, examples, benchmarks)
+# derive from the registry — adding a workload is one entry above
+REASON_MODELS = tuple(REASON_WORKLOADS)
+
+
+def compile_reason_schedule(model: str, cfg, variant: str | None = None,
+                            consts=None, batch_size: int = 4,
+                            trace_graph: bool = True):
+    """Lower one registry entry to an executable ``StagedSchedule``.
+
+    ``consts`` may be the real constant pytree (params/codebooks) or None —
+    then the entry's ``make_consts`` is abstractly evaluated for shapes
+    only (nothing is materialized).  The compiled schedule carries the
+    inter-stage buffer specs and the DataflowGraph traced from the composed
+    stages (``trace_graph=False`` skips tracing for fast construction).
+    """
+    from repro.serve import schedule as sch
+
+    if model not in REASON_WORKLOADS:
+        raise KeyError(f"unknown reasoning workload {model!r}; "
+                       f"available: {tuple(REASON_WORKLOADS)}")
+    entry = REASON_WORKLOADS[model]
+    variant = variant or entry.variants[0]
+    if variant not in entry.variants:
+        raise KeyError(f"{model}: unknown variant {variant!r}; "
+                       f"available: {entry.variants}")
+    if consts is None:
+        consts = jax.eval_shape(lambda k: entry.make_consts(cfg, k),
+                                jax.random.PRNGKey(0))
+    return sch.compile_schedule(
+        model, entry.stage_specs(cfg, variant),
+        entry.ingest(cfg, variant), entry.collect(cfg), variant=variant,
+        consts=consts, input_specs=entry.input_specs(cfg, batch_size, variant),
+        trace_graph=trace_graph)
+
+
+def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
+                  variants: tuple[str, ...] | None = None,
+                  trace_graph: bool = True):
+    """Compile all (or the given) variants of a workload and wrap them in
+    the generic N-stage ``ReasonEngine``."""
+    from repro.serve.reason import ReasonConfig, ReasonEngine
+
+    entry = REASON_WORKLOADS.get(model)
+    if entry is None:
+        raise KeyError(f"unknown reasoning workload {model!r}; "
+                       f"available: {tuple(REASON_WORKLOADS)}")
+    reason_cfg = reason_cfg or ReasonConfig()
+    schedules = {
+        v: compile_reason_schedule(model, cfg, variant=v, consts=consts,
+                                   batch_size=reason_cfg.batch_size,
+                                   trace_graph=trace_graph)
+        for v in (variants or entry.variants)}
+    return ReasonEngine(schedules, reason_cfg)
 
 
 def param_count(arch: ArchSpec, cfg) -> int:

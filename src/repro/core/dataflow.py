@@ -11,6 +11,16 @@ Steps (paper numbering):
                                     symbolic tail
   ④ runtime functions             — attached per node via analytical.py
   ⑤ memory cost                   — per-node bytes for the memory planner
+
+Graph -> schedule correspondence: the same DataflowGraph that drives the
+DSE also drives *execution*.  ``serve.schedule.compile_schedule`` lowers a
+workload's stage list into an executable ``StagedSchedule`` and traces the
+composed pipeline back into this IR (``core.trace`` on the jaxpr): stage
+boundaries land on the nn/vsa/simd stream transitions modeled here, the
+per-stage buffer specs realize step ⑤, and the serving engine's
+double-buffered overlap of consecutive admission batches is the host/device
+realization of step ③ — ``interloop_overlap`` predicts the speedup that
+``benchmarks/bench_nsai.py`` measures on real traffic.
 """
 
 from __future__ import annotations
@@ -42,7 +52,12 @@ class DataflowGraph:
 def _node_weight(n: OpNode) -> int:
     """Unit-array runtime estimate used only to pick the critical path."""
     if n.kind == "nn":
-        return analytical.t_layer(32, 32, 1, n.dims["m"], n.dims["n"], n.dims["k"])
+        if all(k in n.dims for k in ("m", "n", "k")):
+            return analytical.t_layer(32, 32, 1, n.dims["m"], n.dims["n"],
+                                      n.dims["k"])
+        # matmul-class kernel node (e.g. traced Pallas qmatmul) without
+        # factored dims: fall back to MACs over a 32x32 array
+        return analytical.cdiv(n.flops, 2 * 32 * 32) or 1
     if n.kind == "vsa":
         return analytical.t_vsa_node(32, 32, 1, n)
     if n.kind == "simd":

@@ -4,9 +4,13 @@ Two traffic classes:
 - ``--workload lm`` (default): continuous-batching generation with the
   slot-pool engine (smoke-scale models on CPU; the decode_step is the same
   function the dry-run lowers for the 256/512-chip meshes).
-- ``--workload reason``: batched RAVEN reasoning through the two-stream
-  ReasonEngine (``--model nvsa|prae``), with the overlap/sequential
-  schedule and Tab. IV precision knobs exposed.
+- ``--workload reason``: batched NSAI reasoning through the generic
+  N-stage ReasonEngine.  ``--model`` choices derive from the workload
+  registry (``configs.base.REASON_WORKLOADS``: nvsa, prae, mimonet, lvrf
+  — adding a workload is one registry entry); the pipeline is compiled
+  from the workload's dataflow graph by ``serve.schedule``, with the
+  overlap/sequential schedule and Tab. IV precision knobs exposed, and a
+  per-stage timing breakdown printed for the sequential schedule.
 """
 
 from __future__ import annotations
@@ -24,35 +28,45 @@ from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def serve_reason(args):
-    from repro.data import raven
-    from repro.models import nvsa
-    from repro.serve.reason import (ReasonConfig, ReasonEngine,
-                                    requests_from_batch)
+    from repro.serve.reason import ReasonConfig
 
-    cfg = nvsa.NVSAConfig(d=args.d, nn_precision=args.nn_precision,
-                          symb_precision=args.symb_precision,
-                          use_qmatmul=args.nn_precision in ("int8", "int4"))
-    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
-    books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
-    neural, oracle, symbolic = cbase.reason_fns(args.model, cfg)
-    engine = ReasonEngine(
-        neural, symbolic,
+    entry = cbase.REASON_WORKLOADS[args.model]
+    cfg = entry.make_config(d=args.d, nn_precision=args.nn_precision,
+                            symb_precision=args.symb_precision)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    variant = "oracle" if args.oracle else entry.variants[0]
+    if variant not in entry.variants:
+        raise SystemExit(f"{args.model} has no {variant!r} variant "
+                         f"(available: {entry.variants})")
+    engine = cbase.reason_engine(
+        args.model, cfg,
         ReasonConfig(batch_size=args.batch_size, schedule=args.schedule,
-                     perception="oracle" if args.oracle else "cnn"),
-        oracle_fn=oracle)
+                     variant=variant),
+        consts=consts, variants=(variant,))
+    sched = engine.schedules[variant]
+    print(f"[serve] {args.model}: {sched.describe()}")
 
-    batch = raven.generate_batch(cfg.raven, seed=0, n=args.requests)
+    stream, truth = entry.make_requests(cfg, args.requests, seed=0)
     t0 = time.time()
-    results = engine.run(params, books, requests_from_batch(batch))
+    results = engine.run(consts, stream())
     dt = time.time() - t0
-    acc = np.mean([results[i].answer == batch["answer"][i]
-                   for i in range(args.requests)])
+    acc = entry.score(results, truth())
+    # report the config's *actual* precision — workloads without Tab. IV
+    # knobs (mimonet, lvrf) ignore the CLI flags and run fp32
+    nn_p = getattr(cfg, "nn_precision", "fp32")
+    sy_p = getattr(cfg, "symb_precision", "fp32")
+    if (nn_p, sy_p) != (args.nn_precision, args.symb_precision):
+        print(f"[serve] note: {args.model} has no precision knobs; "
+              f"requested nn:{args.nn_precision}/symb:{args.symb_precision} "
+              "ignored")
     print(f"[serve] model={args.model} schedule={args.schedule} "
-          f"perception={'oracle' if args.oracle else 'cnn'} "
-          f"precision=nn:{args.nn_precision}/symb:{args.symb_precision}")
+          f"variant={variant} precision=nn:{nn_p}/symb:{sy_p}")
     print(f"[serve] {args.requests} problems in {dt:.1f}s "
           f"({args.requests / dt:.1f} problems/s, "
           f"{engine.stats['batches']} batches), accuracy {acc:.3f}")
+    if args.schedule == "sequential":
+        for name, t in engine.stats["stage_time_s"].items():
+            print(f"[serve]   stage {name:12s} {t:.3f}s")
     return results
 
 
@@ -69,8 +83,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--eos-id", type=int, default=None)
-    # reasoning workload knobs
-    ap.add_argument("--model", default="nvsa", choices=cbase.REASON_MODELS)
+    # reasoning workload knobs (--model choices derive from the registry)
+    ap.add_argument("--model", default="nvsa",
+                    choices=sorted(cbase.REASON_WORKLOADS))
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--schedule", default="overlap",
                     choices=("overlap", "sequential"))

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +40,9 @@ def lvrf_spec(cfg: LVRFConfig):
         "rules": P((a, cfg.n_rules, cfg.blocks, cfg.d),
                    (None, None, None, None), init="normal", scale=1.0 / cfg.d),
         "role1": P((a, cfg.blocks, cfg.d), (None, None, None), init="normal",
-                   scale=1.0 / jnp.sqrt(cfg.d).item()),
+                   scale=1.0 / math.sqrt(cfg.d)),
         "role2": P((a, cfg.blocks, cfg.d), (None, None, None), init="normal",
-                   scale=1.0 / jnp.sqrt(cfg.d).item()),
+                   scale=1.0 / math.sqrt(cfg.d)),
     }
 
 
@@ -69,37 +70,65 @@ def _apply_rules(pair, rules):
     return vsa.bind(pairs, rules_b)
 
 
+# -- pipeline stages (the serving schedule binds these) ---------------------
+# frontend PMFs -> encode+abduce (learned-rule posterior) -> execute
+# (posterior-weighted circ-conv execution + candidate match)
+
+
+def encode_codes(books, cfg: LVRFConfig, pmfs) -> jax.Array:
+    """PMF lists (per attr, (N, 8, V)) -> stacked codes (A, N, 8, B, d)."""
+    return jnp.stack([
+        jnp.einsum("npv,vbd->npbd", pmfs[ai],
+                   books[ai][: cfg.raven.attr_sizes[ai]])
+        for ai in range(cfg.raven.n_attrs)])
+
+
+def abduce(params, cfg: LVRFConfig, codes: jax.Array) -> jax.Array:
+    """Rule posteriors from the two complete rows: (A, N, 8, B, d) ->
+    (A, N, R).  All rule applications are circular convolutions with
+    *learned* operands."""
+    posts = []
+    for ai in range(cfg.raven.n_attrs):
+        rules = params["rules"][ai]
+        r1, r2 = params["role1"][ai][None], params["role2"][ai][None]
+        post_logits = 0.0
+        for r0 in (0, 3):
+            pair = _pair_code(codes[ai][:, r0], codes[ai][:, r0 + 1], r1, r2)
+            preds = _apply_rules(pair, rules)  # (N, R, B, d)
+            sims = jax.vmap(lambda p, t: vsa.similarity(p, t[None]))(
+                preds, codes[ai][:, r0 + 2])  # (N, R)
+            post_logits = post_logits + sims / cfg.rule_temp
+        posts.append(jax.nn.softmax(post_logits, axis=-1))
+    return jnp.stack(posts)
+
+
+def execute(params, books, cfg: LVRFConfig, codes: jax.Array,
+            posts: jax.Array, cand_pmfs) -> jax.Array:
+    """Posterior-weighted rule execution on row 3 + candidate match:
+    -> answer logprobs (N, 8)."""
+    total_sims = 0.0
+    for ai in range(cfg.raven.n_attrs):
+        rules = params["rules"][ai]
+        r1, r2 = params["role1"][ai][None], params["role2"][ai][None]
+        pair3 = _pair_code(codes[ai][:, 6], codes[ai][:, 7], r1, r2)
+        preds3 = _apply_rules(pair3, rules)
+        pred = jnp.einsum("nr,nrbd->nbd", posts[ai], preds3)
+        cand = jnp.einsum("npv,vbd->npbd", cand_pmfs[ai],
+                          books[ai][: cfg.raven.attr_sizes[ai]])
+        sims = jax.vmap(lambda q, c: vsa.similarity(q[None], c))(pred, cand)
+        total_sims = total_sims + sims
+    return jax.nn.log_softmax(total_sims / cfg.answer_temp, axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def solve_from_pmfs(params, books, cfg: LVRFConfig, ctx_pmfs, cand_pmfs):
     """ctx_pmfs/cand_pmfs: lists per attr of (N, 8, V). Returns
-    (answer logprobs (N, 8), pred codes per attr, rule posteriors)."""
-    n = ctx_pmfs[0].shape[0]
-    total_sims = 0.0
-    posts = []
-    for ai in range(cfg.raven.n_attrs):
-        book = books[ai][: cfg.raven.attr_sizes[ai]]
-        codes = jnp.einsum("npv,vbd->npbd", ctx_pmfs[ai], book)  # (N, 8, B, d)
-        rules = params["rules"][ai]
-        r1, r2 = params["role1"][ai][None], params["role2"][ai][None]
-        # abduction over the two complete rows
-        post_logits = 0.0
-        for r0 in (0, 3):
-            pair = _pair_code(codes[:, r0], codes[:, r0 + 1], r1, r2)
-            preds = _apply_rules(pair, rules)  # (N, R, B, d)
-            sims = jax.vmap(lambda p, t: vsa.similarity(p, t[None]))(
-                preds, codes[:, r0 + 2])  # (N, R)
-            post_logits = post_logits + sims / cfg.rule_temp
-        post = jax.nn.softmax(post_logits, axis=-1)
-        posts.append(post)
-        # execution on row 3
-        pair3 = _pair_code(codes[:, 6], codes[:, 7], r1, r2)
-        preds3 = _apply_rules(pair3, rules)
-        pred = jnp.einsum("nr,nrbd->nbd", post, preds3)
-        cand = jnp.einsum("npv,vbd->npbd", cand_pmfs[ai], book)
-        sims = jax.vmap(lambda q, c: vsa.similarity(q[None], c))(pred, cand)
-        total_sims = total_sims + sims
-    logp = jax.nn.log_softmax(total_sims / cfg.answer_temp, axis=-1)
-    return logp, jnp.stack(posts)
+    (answer logprobs (N, 8), rule posteriors (A, N, R)).  Composes the
+    pipeline stages in one jit — the offline reference the compiled
+    serving schedule must match."""
+    codes = encode_codes(books, cfg, ctx_pmfs)
+    posts = abduce(params, cfg, codes)
+    return execute(params, books, cfg, codes, posts, cand_pmfs), posts
 
 
 def loss_fn(params, books, cfg: LVRFConfig, ctx_pmfs, cand_pmfs, answers):

@@ -56,34 +56,90 @@ def mimonet_keys(cfg: MIMONetConfig, key: jax.Array):
     return vsa.unitary_codebook(key, cfg.n_channels, cfg.blocks, cfg.d)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "train"))
-def forward(params, keys, cfg: MIMONetConfig, images: jax.Array, train: bool = False):
-    """images: (N, K, H, W, 1) -> logits (N, K, n_classes).
+# -- pipeline stages (the serving schedule binds these 1:1) -----------------
+# encode (nn) -> superpose (vsa) -> trunk (nn) -> unbind (vsa) -> classify
+# (simd) — the three-stream pipeline the serving schedule compiles.
 
-    ONE trunk pass for all K channels — that is the MIMONet claim.
+
+def encode(params, cfg: MIMONetConfig, images: jax.Array, train: bool = False,
+           bn_stats: dict | None = None):
+    """images: (N, K, H, W, 1) -> per-channel codes (N, K, blocks, d).
+
+    ``train=False`` evaluates BN with running stats so a served request's
+    codes are independent of its admission group; ``train=True`` uses batch
+    statistics and records them in ``bn_stats`` for the trainer's EMA
+    update (``apply_bn_stats``).
     """
     n, k, h, w, c = images.shape
     rcfg = resnet.ResNetConfig(in_channels=1, width=cfg.cnn_width,
                                out_dim=cfg.blocks * cfg.d)
     feats = resnet.resnet(params["encoder"], rcfg, images.reshape(n * k, h, w, c),
-                          train=True, compute_dtype=jnp.float32)  # stateless BN
-    codes = feats.reshape(n, k, cfg.blocks, cfg.d)
+                          train=train, compute_dtype=jnp.float32,
+                          bn_stats=bn_stats)
+    return feats.reshape(n, k, cfg.blocks, cfg.d)
+
+
+def superpose(keys, codes: jax.Array) -> jax.Array:
+    """Bind each channel with its key and bundle: (N, K, B, d) -> (N, B*d)."""
+    n = codes.shape[0]
     bound = vsa.bind(codes, keys[None])                      # per-channel keying
-    superposed = jnp.sum(bound, axis=1).reshape(n, -1)       # bundle: (N, B*d)
-    x = superposed
+    return jnp.sum(bound, axis=1).reshape(n, -1)             # bundle: (N, B*d)
+
+
+def trunk(params, x: jax.Array) -> jax.Array:
+    """ONE residual-MLP pass over the superposed code — the MIMONet claim."""
     for lyr in params["trunk"]:
         hdn = jax.nn.gelu(layers.dense(lyr["up"], x, jnp.float32))
         x = x + layers.dense(lyr["down"], hdn, jnp.float32)  # residual trunk
+    return x
+
+
+def unbind(keys, cfg: MIMONetConfig, x: jax.Array) -> jax.Array:
+    """Recover per-channel codes from the trunk output: (N, B*d) ->
+    (N, K, blocks*d)."""
+    n, k = x.shape[0], cfg.n_channels
     out_codes = x.reshape(n, 1, cfg.blocks, cfg.d)
     unbound = vsa.unbind(jnp.broadcast_to(keys[None], (n, k, cfg.blocks, cfg.d)),
                          jnp.broadcast_to(out_codes, (n, k, cfg.blocks, cfg.d)))
-    return layers.dense(params["head"], unbound.reshape(n, k, -1), jnp.float32)
+    return unbound.reshape(n, k, -1)
+
+
+def classify(params, unbound: jax.Array) -> jax.Array:
+    """Per-channel head: (N, K, blocks*d) -> logits (N, K, n_classes)."""
+    return layers.dense(params["head"], unbound, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "train"))
+def forward(params, keys, cfg: MIMONetConfig, images: jax.Array, train: bool = False):
+    """images: (N, K, H, W, 1) -> logits (N, K, n_classes).
+
+    Composes the five pipeline stages in one jit — the offline reference
+    the compiled serving schedule must match.
+    """
+    codes = encode(params, cfg, images, train=train)
+    x = trunk(params, superpose(keys, codes))
+    return classify(params, unbind(keys, cfg, x))
 
 
 def loss_fn(params, keys, cfg: MIMONetConfig, images: jax.Array, labels: jax.Array):
-    logits = forward(params, keys, cfg, images, train=True)
+    """Per-channel CE.  Returns ``(loss, bn_stats)`` — fold the aux BN
+    batch statistics into the running stats with ``apply_bn_stats`` so
+    eval-mode serving sees trained statistics (mirrors the NVSA trainer)."""
+    bn_stats: dict = {}
+    codes = encode(params, cfg, images, train=True, bn_stats=bn_stats)
+    logits = classify(params, unbind(keys, cfg,
+                                     trunk(params, superpose(keys, codes))))
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1)), \
+        bn_stats
+
+
+def apply_bn_stats(params, bn_stats: dict, momentum: float = 0.9):
+    """EMA-fold one step's encoder BN batch statistics into the running
+    stats (functional — returns a new params tree)."""
+    return {**params,
+            "encoder": layers.bn_apply_stats(params["encoder"], bn_stats,
+                                             momentum)}
 
 
 def accuracy(params, keys, cfg: MIMONetConfig, images, labels) -> float:

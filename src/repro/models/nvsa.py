@@ -77,14 +77,20 @@ def nvsa_codebooks(cfg: NVSAConfig, key: jax.Array):
 _BITS = {"int8": 8, "int4": 4}
 
 
-def fake_quant(x: jax.Array, precision: str) -> jax.Array:
+def fake_quant(x: jax.Array, precision: str,
+               axes: tuple[int, ...] | None = None) -> jax.Array:
+    """Symmetric fake quantization.  ``axes=None`` scales by the global
+    amax (weights / static codebooks); pass reduction ``axes`` for
+    per-slice scales — activations in the serving path quantize per
+    problem so a request's numerics never depend on its admission group."""
     if precision == "fp32":
         return x
     if precision == "bf16":
         return x.astype(jnp.bfloat16).astype(jnp.float32)
     bits = _BITS[precision]
     qmax = 2.0 ** (bits - 1) - 1
-    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=axes, keepdims=axes is not None),
+                       1e-12)
     scale = amax / qmax
     return jnp.round(x / scale).clip(-qmax - 1, qmax) * scale
 
@@ -126,18 +132,25 @@ def nvsa_memory_bytes(cfg: NVSAConfig, params) -> int:
 # ---------------------------------------------------------------------------
 
 
-def frontend_pmfs(params, cfg: NVSAConfig, images: jax.Array, train: bool = True):
-    """images: (N, H, W, 1) -> list of (N, V_attr) PMFs (+ logits)."""
+def frontend_pmfs(params, cfg: NVSAConfig, images: jax.Array,
+                  train: bool = False, bn_stats: dict | None = None):
+    """images: (N, H, W, 1) -> list of (N, V_attr) PMFs (+ logits).
+
+    ``train=False`` (the serving / ``solve`` default) evaluates BatchNorm
+    with the EMA running stats carried in ``params`` — each image's PMFs
+    are independent of the rest of the batch, so a served request's answer
+    does not depend on its admission group.  ``train=True`` uses batch
+    statistics and records them in ``bn_stats`` for the trainer's
+    functional EMA update (``frontend_apply_bn_stats``).
+    """
     p = params
     if cfg.nn_precision in _BITS:
         p = quant_tree(params, cfg.nn_precision)
     compute_dtype = jnp.bfloat16 if cfg.nn_precision == "bf16" else jnp.float32
     rcfg = resnet.ResNetConfig(in_channels=1, width=cfg.cnn_width,
                                out_dim=cfg.cnn_feat)
-    # train=True => stateless functional BN (batch statistics); the
-    # frontend is trained and evaluated the same way (no EMA state).
     feats = resnet.resnet(p["frontend"], rcfg, images, train=train,
-                          compute_dtype=compute_dtype)
+                          compute_dtype=compute_dtype, bn_stats=bn_stats)
     feats = jax.nn.relu(feats)
     if cfg.use_qmatmul and cfg.nn_precision in _BITS:
         # heads on the Pallas qmatmul kernel: int8 activations (per-row
@@ -160,13 +173,27 @@ def frontend_pmfs(params, cfg: NVSAConfig, images: jax.Array, train: bool = True
 
 
 def frontend_loss(params, cfg: NVSAConfig, images: jax.Array, attrs: jax.Array):
-    """Supervised attribute CE (the NVSA frontend training objective)."""
-    _, logits = frontend_pmfs(params, cfg, images, train=True)
+    """Supervised attribute CE (the NVSA frontend training objective).
+
+    Returns ``(loss, bn_stats)`` — the aux BN batch statistics feed the
+    trainer's EMA update so eval-mode BN has running stats to use.
+    """
+    bn_stats: dict = {}
+    _, logits = frontend_pmfs(params, cfg, images, train=True,
+                              bn_stats=bn_stats)
     loss = 0.0
     for i, l in enumerate(logits):
         logp = jax.nn.log_softmax(l, axis=-1)
         loss = loss - jnp.mean(jnp.take_along_axis(logp, attrs[:, i: i + 1], axis=1))
-    return loss / cfg.raven.n_attrs
+    return loss / cfg.raven.n_attrs, bn_stats
+
+
+def frontend_apply_bn_stats(params, bn_stats: dict, momentum: float = 0.9):
+    """EMA-fold one step's BN batch statistics into the frontend's running
+    stats (functional — returns a new params tree)."""
+    return {**params,
+            "frontend": layers.bn_apply_stats(params["frontend"], bn_stats,
+                                              momentum)}
 
 
 # ---------------------------------------------------------------------------
@@ -243,8 +270,12 @@ def reason(cfg: NVSAConfig, codebooks, ctx_pmfs, cand_pmfs):
     cand_panel = sum(cand_codes)  # (N, 8, B, d)
 
     if cfg.symb_precision in _BITS:
-        pred_panel = fake_quant(pred_panel, cfg.symb_precision)
-        cand_panel = fake_quant(cand_panel, cfg.symb_precision)
+        # per-problem activation scales (axis 0 = batch): the quantized
+        # symbolic stream stays independent of the admission group
+        pred_panel = fake_quant(pred_panel, cfg.symb_precision,
+                                axes=tuple(range(1, pred_panel.ndim)))
+        cand_panel = fake_quant(cand_panel, cfg.symb_precision,
+                                axes=tuple(range(1, cand_panel.ndim)))
 
     sims = jax.vmap(lambda q, c: vsa.similarity(q[None], c))(pred_panel, cand_panel)
     logp = jax.nn.log_softmax(sims / cfg.answer_temp, axis=-1)

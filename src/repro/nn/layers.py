@@ -214,18 +214,50 @@ def batchnorm_spec(c: int, dtype=jnp.float32):
     }
 
 
-def batchnorm(params, x: jax.Array, train: bool = False, eps: float = 1e-5):
-    """Inference-style BN; in train mode uses batch stats (stats update is the
-    caller's responsibility — the NSAI trainers use functional EMA updates)."""
+def batchnorm(params, x: jax.Array, train: bool = False, eps: float = 1e-5,
+              stats_sink: dict | None = None, stats_key=None):
+    """Functional BN. ``train=True`` normalizes with batch statistics and —
+    when the caller passes a ``stats_sink`` dict — records them under
+    ``stats_key`` so the trainer can fold them into the params' running
+    ``mean``/``var`` with :func:`bn_apply_stats` (functional EMA, no state).
+    ``train=False`` uses the running stats: per-example independent."""
     if train:
         axes = tuple(range(x.ndim - 1))
         mean = jnp.mean(x.astype(jnp.float32), axis=axes)
         var = jnp.var(x.astype(jnp.float32), axis=axes)
+        if stats_sink is not None:
+            stats_sink[stats_key] = (mean, var)
     else:
         mean, var = params["mean"], params["var"]
     inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps) * params["scale"].astype(jnp.float32)
     y = (x.astype(jnp.float32) - mean) * inv + params["bias"].astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def bn_apply_stats(params, stats: dict, momentum: float = 0.9):
+    """Fold collected BN batch statistics into running stats (pure EMA).
+
+    ``stats`` maps a path tuple into ``params`` (as produced by the
+    ``stats_sink``/``stats_key`` plumbing, e.g. ``("stages", 0, 1, "bn1")``)
+    to ``(batch_mean, batch_var)``.  Returns a new params tree with
+    ``mean``/``var`` EMA-updated; everything else is shared, and the dict
+    structure is static, so this jits inside a train step.
+    """
+    def update(tree, path):
+        if not path:
+            return {**tree, "mean": momentum * tree["mean"]
+                    + (1 - momentum) * mean,
+                    "var": momentum * tree["var"] + (1 - momentum) * var}
+        head, rest = path[0], path[1:]
+        if isinstance(tree, dict):
+            return {k: (update(v, rest) if k == head else v)
+                    for k, v in tree.items()}
+        return [update(v, rest) if i == head else v
+                for i, v in enumerate(tree)]
+
+    for path, (mean, var) in stats.items():
+        params = update(params, tuple(path))
+    return params
 
 
 def maxpool2d(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:

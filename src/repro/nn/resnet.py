@@ -58,28 +58,43 @@ def resnet_spec(cfg: ResNetConfig):
     return spec
 
 
-def _block(params, x, stride: int, train: bool, compute_dtype):
+def _block(params, x, stride: int, train: bool, compute_dtype,
+           bn_stats, path):
+    def bn(name, y):
+        return layers.batchnorm(params[name], y, train, stats_sink=bn_stats,
+                                stats_key=path + (name,))
+
     y = layers.conv2d(params["conv1"], x, stride=stride, compute_dtype=compute_dtype)
-    y = jax.nn.relu(layers.batchnorm(params["bn1"], y, train))
+    y = jax.nn.relu(bn("bn1", y))
     y = layers.conv2d(params["conv2"], y, compute_dtype=compute_dtype)
-    y = layers.batchnorm(params["bn2"], y, train)
+    y = bn("bn2", y)
     if "proj" in params:
-        x = layers.batchnorm(params["proj_bn"],
-                             layers.conv2d(params["proj"], x, stride=stride,
-                                           compute_dtype=compute_dtype), train)
+        x = bn("proj_bn", layers.conv2d(params["proj"], x, stride=stride,
+                                        compute_dtype=compute_dtype))
     return jax.nn.relu(x + y)
 
 
 def resnet(params, cfg: ResNetConfig, images: jax.Array, train: bool = False,
-           compute_dtype=jnp.bfloat16) -> jax.Array:
-    """images: (B, H, W, C) -> (B, out_dim)."""
+           compute_dtype=jnp.bfloat16, bn_stats: dict | None = None) -> jax.Array:
+    """images: (B, H, W, C) -> (B, out_dim).
+
+    ``train=True`` uses batch-statistics BN; pass a ``bn_stats`` dict to
+    collect each BN layer's batch mean/var keyed by its path into
+    ``params`` — the trainer folds them into the running stats with
+    ``layers.bn_apply_stats`` (functional EMA).  ``train=False`` evaluates
+    with the running stats, making the output of each example independent
+    of the rest of its batch (per-request independence when serving).
+    """
     x = layers.conv2d(params["stem"], images.astype(compute_dtype), stride=2,
                       compute_dtype=compute_dtype)
-    x = jax.nn.relu(layers.batchnorm(params["stem_bn"], x, train))
+    x = jax.nn.relu(layers.batchnorm(params["stem_bn"], x, train,
+                                     stats_sink=bn_stats,
+                                     stats_key=("stem_bn",)))
     x = layers.maxpool2d(x, 3, 2)
     for si, stage in enumerate(params["stages"]):
         for bi, block in enumerate(stage):
             stride = 2 if (bi == 0 and si > 0) else 1
-            x = _block(block, x, stride, train, compute_dtype)
+            x = _block(block, x, stride, train, compute_dtype, bn_stats,
+                       ("stages", si, bi))
     x = layers.avgpool_global(x)
     return layers.dense(params["head"], x, compute_dtype)

@@ -1,37 +1,40 @@
-"""Two-stream NSAI serving: batched RAVEN reasoning with pipeline overlap.
+"""Workload-generic NSAI serving: N-stage pipelines with host/device overlap.
 
-NSFlow's workload characterization (paper Sec III) is that NSAI inference is
-a *heterogeneous pipeline*: a compute-bound neural frontend (ResNet
-perception -> attribute PMFs) feeding a memory-bound symbolic stream (FPE
-encode -> VSA rule abduction -> rule execution through the circular
-convolution kernel). ``core/dataflow.py`` models the steady-state inter-loop
-overlap of the two streams analytically (Sec V-B step ③); ``ReasonEngine``
-implements the same schedule for real traffic.
+NSFlow's workload characterization (paper Sec III) is that NSAI inference
+is a *heterogeneous pipeline* of nn / vsa / simd streams.  ``ReasonEngine``
+is the generic executor for that shape of traffic: it runs any
+:class:`~repro.serve.schedule.StagedSchedule` — an ordered list of jitted
+stage callables compiled from the workload's dataflow graph by
+``serve.schedule.compile_schedule`` — and contains **no workload-specific
+stage logic**.  NVSA, PrAE, MIMONet and LVRF all serve through schedules
+contributed by the registry in ``configs.base.REASON_WORKLOADS``; adding a
+workload means declaring stages + a graph builder there, not forking the
+engine.
 
-Requests are admitted in fixed-size batches and flow through a two-stage
-software pipeline, double-buffered (two batches resident) so batch *i*'s
-symbolic stage overlaps batch *i+1*'s neural-stream front end:
+Requests are admitted in fixed-size batches and flow through the compiled
+N-stage software pipeline, double-buffered (two batches resident) so batch
+*i*'s device stages overlap batch *i+1*'s host work:
 
-    device:  N₁ S₁ N₂ S₂ N₃ S₃ ...            (async queue, never idle)
-    host:     stage₂   stage₃   stage₄ ...    (a full batch ahead)
-              collect₀  collect₁ ...
+    device:  S₁⁰..S₁ᴺ S₂⁰..S₂ᴺ S₃⁰.. ...       (async queue, never idle)
+    host:     stage₂     stage₃     ...         (a full batch ahead)
+              collect₀   collect₁  ...
 
 Every host-side step — ingesting the next batch from the request stream
 (which may be a lazy generator: rendering/preprocessing then runs inside
 the pipeline), staging device arrays, and converting finished answers back
 to numpy — runs while the device works through the previous batch, so none
-of it sits on the critical path. On a dataflow array the two device stages
-of consecutive batches would co-execute on disjoint units (the analytical
+of it sits on the critical path.  On a dataflow array the device stages of
+consecutive batches would co-execute on disjoint units (the analytical
 model in ``core.dataflow.interloop_overlap``); on one shared host device
 co-scheduling them just makes both contend for the same cores, so the
-engine drains batch i-1 right before dispatching batch i's neural stage
-and takes the overlap on the host/device axis instead. The ``sequential``
-schedule is the naive serve loop (synchronize after every stage, finish a
-batch completely before touching the next) that ``bench_nsai.py`` compares
-against — the serving analogue of the paper's Fig. 9 folded-vs-unfolded
-comparison.
-
-Model plumbing comes from ``configs.base.reason_fns`` (nvsa / prae).
+engine drains batch i-1 right before dispatching batch i's first stage
+(the schedule's ``drain_stage``) and takes the overlap on the host/device
+axis instead.  The ``sequential`` schedule is the naive serve loop
+(synchronize after every stage, finish a batch completely before touching
+the next) that ``bench_nsai.py`` compares against — the serving analogue
+of the paper's Fig. 9 folded-vs-unfolded comparison; it is also where the
+per-stage timing breakdown is measured (timing a stage requires blocking
+on it).
 """
 
 from __future__ import annotations
@@ -39,123 +42,116 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Callable, Iterable
+from typing import Iterable, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.schedule import StagedSchedule
 
 
 @dataclasses.dataclass
 class ReasonConfig:
     batch_size: int = 4           # problems per pipeline batch (fixed shape)
     schedule: str = "overlap"     # overlap | sequential
-    # cnn = the neural stream; oracle = ground-truth one-hot PMFs
-    # (perception bypass: symbolic-stream-only serving). Caveat for cnn:
-    # the frontend uses batch-statistics BatchNorm (the seed design — no
-    # trainer maintains EMA stats), so a request's answer distribution
-    # depends on its admission group: it matches offline ``nvsa.solve``
-    # exactly when the group equals the offline batch, and is submission-
-    # order invariant only modulo BN batch statistics. The oracle path has
-    # no cross-request coupling and is exactly order invariant. Serving
-    # with eval-mode BN needs EMA stats in the trainer first (ROADMAP).
-    perception: str = "cnn"
+    # Which compiled variant of the workload to run (e.g. "cnn" = neural
+    # perception, "oracle" = ground-truth PMFs / symbolic-stream-only).
+    # None = the first variant the engine was constructed with.
+    variant: str | None = None
 
 
 @dataclasses.dataclass
 class ReasonRequest:
     uid: int
+    # RAVEN reasoning traffic (nvsa / prae / lvrf)
     context: np.ndarray | None = None          # (8, H, W, 1) float32
     candidates: np.ndarray | None = None       # (8, H, W, 1) float32
-    context_attrs: np.ndarray | None = None    # (8, A) int32 — oracle mode
+    context_attrs: np.ndarray | None = None    # (8, A) int32 — oracle variant
     candidate_attrs: np.ndarray | None = None  # (8, A) int32
+    # superposed-classification traffic (mimonet)
+    images: np.ndarray | None = None           # (K, H, W, 1) float32
 
 
 @dataclasses.dataclass
 class ReasonResult:
     uid: int
-    answer: int                   # argmax over the 8 candidate panels
-    answer_logprobs: np.ndarray   # (8,)
-    rule_posteriors: np.ndarray   # (A, R) per-attribute rule posterior
+    # argmax over candidates (int) or per-channel argmax (np.ndarray)
+    answer: int | np.ndarray
+    answer_logprobs: np.ndarray
     batch: int                    # pipeline batch that served the request
+    # workload extras (e.g. per-attribute rule posteriors); None if N/A
+    rule_posteriors: np.ndarray | None = None
 
 
 class ReasonEngine:
-    """Batched two-stream reasoning over (neural, symbolic) stage fns.
+    """Generic N-stage double-buffered executor over StagedSchedules.
 
-    ``neural_fn(params, ctx, cand)`` and ``symbolic_fn(codebooks, ctx_pmfs,
-    cand_pmfs)`` come from ``configs.base.reason_fns``; both are jitted here
-    (jit caches are per-instance — reuse engines). ``oracle_fn`` replaces
-    the neural stage when ``cfg.perception == "oracle"``: ground-truth
-    one-hot PMFs, i.e. symbolic-stream-only serving.
+    ``schedules`` maps variant name -> compiled :class:`StagedSchedule`
+    (a single schedule is accepted too).  Stage jit caches live on the
+    schedules, so sharing schedules across engines shares compilations.
+    ``run(consts, requests)`` feeds every request batch through the
+    schedule's stages; ``consts`` is the workload's constant pytree
+    (params / codebooks / binding keys) handed to every stage.
     """
 
-    def __init__(self, neural_fn: Callable, symbolic_fn: Callable,
-                 cfg: ReasonConfig, oracle_fn: Callable | None = None):
+    def __init__(self, schedules: StagedSchedule | Mapping[str, StagedSchedule],
+                 cfg: ReasonConfig):
+        if isinstance(schedules, StagedSchedule):
+            schedules = {schedules.variant: schedules}
+        if not schedules:
+            raise ValueError("engine needs at least one compiled schedule")
         if cfg.schedule not in ("overlap", "sequential"):
             raise ValueError(f"unknown schedule {cfg.schedule!r}")
-        if cfg.perception not in ("cnn", "oracle"):
-            raise ValueError(f"unknown perception {cfg.perception!r}")
-        if cfg.perception == "oracle" and oracle_fn is None:
-            raise ValueError("perception='oracle' needs an oracle_fn")
         if cfg.batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        self.schedules = dict(schedules)
+        self.default_variant = cfg.variant or next(iter(self.schedules))
+        if self.default_variant not in self.schedules:
+            raise ValueError(f"unknown variant {self.default_variant!r}; "
+                             f"compiled: {sorted(self.schedules)}")
         self.cfg = cfg
-        self.jit_neural = jax.jit(neural_fn)
-        self.jit_symbolic = jax.jit(symbolic_fn)
-        self.jit_oracle = jax.jit(oracle_fn) if oracle_fn is not None else None
-        self.stats = {
-            "requests": 0, "batches": 0, "wall_time_s": 0.0,
-            "neural_time_s": 0.0, "symbolic_time_s": 0.0,
-        }
+        self.stats = {"requests": 0, "batches": 0, "wall_time_s": 0.0,
+                      "stage_time_s": {}}
 
     # -- host-side staging --------------------------------------------------
 
-    def _validate(self, req: ReasonRequest, seen: set, perception: str):
-        if req.uid in seen:
-            raise ValueError(f"duplicate request uid {req.uid} "
-                             "(results are keyed by uid)")
-        seen.add(req.uid)
-        if perception == "oracle":
-            if req.context_attrs is None or req.candidate_attrs is None:
-                raise ValueError(f"request {req.uid}: oracle perception "
-                                 "needs context_attrs/candidate_attrs")
-        elif req.context is None or req.candidates is None:
-            raise ValueError(f"request {req.uid}: cnn perception needs "
-                             "context/candidates images")
+    def _ingest(self, req: ReasonRequest, sched: StagedSchedule):
+        try:
+            return sched.ingest(req)
+        except (ValueError, AttributeError, TypeError) as e:
+            raise ValueError(
+                f"request {req.uid}: cannot ingest for workload "
+                f"{sched.workload!r} variant {sched.variant!r}: {e}") from e
 
-    def _stage(self, batch: list[ReasonRequest], perception: str):
+    def _stage(self, batch: list[ReasonRequest], sched: StagedSchedule):
         """Stack one admission group and pad to the compiled batch shape.
 
         Padding replicates the last request so every batch hits the same
         jit cache entry; padded rows are computed and dropped at collect.
         """
-        if perception == "oracle":
-            ctx = np.stack([r.context_attrs for r in batch]).astype(np.int32)
-            cand = np.stack([r.candidate_attrs for r in batch]).astype(np.int32)
-        else:
-            ctx = np.stack([r.context for r in batch]).astype(np.float32)
-            cand = np.stack([r.candidates for r in batch]).astype(np.float32)
+        trees = [self._ingest(r, sched) for r in batch]
         pad = self.cfg.batch_size - len(batch)
-        if pad:
-            ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, axis=0)])
-            cand = np.concatenate([cand, np.repeat(cand[-1:], pad, axis=0)])
-        return jnp.asarray(ctx), jnp.asarray(cand)
+
+        def stack(*leaves):
+            x = np.stack(leaves)
+            if pad:
+                x = np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
+            return jnp.asarray(x)
+
+        return jax.tree.map(stack, *trees)
 
     def _collect(self, results: dict, batch: list[ReasonRequest], out,
-                 batch_idx: int):
+                 batch_idx: int, sched: StagedSchedule):
         """Materialize one batch's answers on the host (blocks if pending)."""
-        logp, posts = out
-        logp = np.asarray(logp)     # (B, 8)
-        posts = np.asarray(posts)   # (A, B, R)
+        host = jax.tree.map(np.asarray, out)
         for i, req in enumerate(batch):  # padded rows have no request
-            results[req.uid] = ReasonResult(
-                uid=req.uid, answer=int(np.argmax(logp[i])),
-                answer_logprobs=logp[i], rule_posteriors=posts[:, i],
-                batch=batch_idx)
+            fields = sched.collect(host, i)
+            results[req.uid] = ReasonResult(uid=req.uid, batch=batch_idx,
+                                            **fields)
         self.stats["requests"] += len(batch)
 
-    def _batches(self, requests: Iterable[ReasonRequest], perception: str):
+    def _batches(self, requests: Iterable[ReasonRequest]):
         """Pull admission groups lazily — a generator's per-request work
         (rendering, preprocessing) runs inside the pipeline."""
         it = iter(requests)
@@ -165,63 +161,67 @@ class ReasonEngine:
             if not batch:
                 return
             for req in batch:
-                self._validate(req, seen, perception)
+                if req.uid in seen:
+                    raise ValueError(f"duplicate request uid {req.uid} "
+                                     "(results are keyed by uid)")
+                seen.add(req.uid)
             yield batch
 
     # -- the two schedules --------------------------------------------------
 
-    def run(self, params, codebooks, requests: Iterable[ReasonRequest],
-            schedule: str | None = None, perception: str | None = None
+    def run(self, consts, requests: Iterable[ReasonRequest],
+            schedule: str | None = None, variant: str | None = None
             ) -> dict[int, "ReasonResult"]:
         """Serve all requests; returns {uid: ReasonResult}.
 
         ``overlap``: double-buffered — ingest/stage batch i while the
         device runs batch i-1, drain i-1's answers, then dispatch batch i's
-        two stages asynchronously; host work never blocks the device.
-        ``sequential``: synchronize after each stage, one batch at a time.
-        ``schedule`` / ``perception`` override the config per call (jit
-        caches are shared, so benchmarks can compare schedules on one
-        engine instance).
+        stages asynchronously; host work never blocks the device.
+        ``sequential``: synchronize after each stage, one batch at a time,
+        accumulating the per-stage timing breakdown.
+        ``schedule`` / ``variant`` override the config per call (stage jit
+        caches live on the StagedSchedule, so benchmarks can compare
+        schedules on one engine instance).
         """
         schedule = schedule or self.cfg.schedule
-        perception = perception or self.cfg.perception
+        variant = variant or self.default_variant
         if schedule not in ("overlap", "sequential"):
             raise ValueError(f"unknown schedule {schedule!r}")
-        if perception not in ("cnn", "oracle"):
-            raise ValueError(f"unknown perception {perception!r}")
-        if perception == "oracle" and self.jit_oracle is None:
-            raise ValueError("perception='oracle' needs an oracle_fn")
-        perceive = self.jit_oracle if perception == "oracle" \
-            else self.jit_neural
+        if variant not in self.schedules:
+            raise ValueError(f"unknown variant {variant!r}; "
+                             f"compiled: {sorted(self.schedules)}")
+        sched = self.schedules[variant]
         sequential = schedule == "sequential"
+        stage_time = self.stats["stage_time_s"]
         t_start = time.perf_counter()
         results: dict[int, ReasonResult] = {}
-        inflight = None  # (batch, symbolic-output futures, batch index)
-        for bi, batch in enumerate(self._batches(requests, perception)):
+        inflight = None  # (batch, output futures, batch index)
+        for bi, batch in enumerate(self._batches(requests)):
             # staging batch i (incl. any lazy per-request preprocessing in
             # the `requests` iterable) overlaps batch i-1 on the device
-            ctx, cand = self._stage(batch, perception)
-            if not sequential and inflight is not None:
-                # drain batch i-1 before dispatching batch i: co-scheduling
-                # two batches on one shared host device only adds
-                # contention (see module docstring)
-                self._collect(results, *inflight)
-            t0 = time.perf_counter()
-            pmfs = perceive(params, ctx, cand)
-            if sequential:
-                jax.block_until_ready(pmfs)
-                self.stats["neural_time_s"] += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            out = self.jit_symbolic(codebooks, *pmfs)
+            bufs = self._stage(batch, sched)
+            for si, fn in enumerate(sched.jit_stages):
+                if not sequential and inflight is not None \
+                        and si == sched.drain_stage:
+                    # drain batch i-1 before dispatching batch i:
+                    # co-scheduling two batches on one shared host device
+                    # only adds contention (see module docstring)
+                    self._collect(results, *inflight, sched)
+                    inflight = None
+                t0 = time.perf_counter()
+                bufs = fn(consts, bufs)
+                if sequential:
+                    jax.block_until_ready(bufs)
+                    name = sched.stages[si].name
+                    stage_time[name] = stage_time.get(name, 0.0) \
+                        + time.perf_counter() - t0
             self.stats["batches"] += 1
             if sequential:
-                jax.block_until_ready(out)
-                self.stats["symbolic_time_s"] += time.perf_counter() - t0
-                self._collect(results, batch, out, bi)
+                self._collect(results, batch, bufs, bi, sched)
             else:
-                inflight = (batch, out, bi)
+                inflight = (batch, bufs, bi)
         if inflight is not None:
-            self._collect(results, *inflight)
+            self._collect(results, *inflight, sched)
         self.stats["wall_time_s"] += time.perf_counter() - t_start
         return results
 
@@ -232,7 +232,7 @@ class ReasonEngine:
 
     def reset_stats(self):
         self.stats.update(requests=0, batches=0, wall_time_s=0.0,
-                          neural_time_s=0.0, symbolic_time_s=0.0)
+                          stage_time_s={})
 
 
 def requests_from_batch(batch: dict, start_uid: int = 0

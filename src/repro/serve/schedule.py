@@ -1,0 +1,263 @@
+"""Schedule compilation: lower a dataflow graph to an executable pipeline.
+
+NSFlow's design generator (paper Sec V-B) identifies workload data
+dependencies and emits an optimized dataflow architecture; this module is
+the serving-side realization of the same lowering.  ``compile_schedule``
+takes a workload's *stage list* — jax-traceable callables with declared
+stream tags (nn / vsa / simd, the paper's unit taxonomy) — and emits a
+:class:`StagedSchedule`:
+
+  - an ordered tuple of **jit-able stage callables** (one jit boundary per
+    stage: the boundaries are exactly the points where the generic executor
+    in ``serve.reason.ReasonEngine`` may drain / overlap),
+  - **inter-stage buffer specs** (pytree shapes + byte counts, from
+    ``jax.eval_shape`` chained through the stages — the serving analogue of
+    the memory-cost annotation, Sec V-B step ⑤),
+  - a traced :class:`~repro.core.dataflow.DataflowGraph` built by running
+    ``core.trace`` on the composed pipeline's jaxpr (steps ①–③: critical
+    path, depth assignment, inter-loop overlap model), plus per-stage op
+    statistics from tracing each stage alone,
+  - the **host/device overlap points** the executor honors (which host
+    steps run while the device works, and where the previous batch is
+    drained).
+
+Stream tags are *declared* by the workload and *audited* against the trace:
+at smoke scale XLA lowers blockwise circular convolution to gather +
+dot_general (so a flops-dominance classifier would mislabel the symbolic
+stream as ``nn``), which is exactly the "tracing is too fine-grained" case
+the declared tags resolve.  The audit result per stage is kept on the
+schedule (``stage_costs``) so benchmarks and tests can inspect both views.
+
+The correspondence with the analytical side: ``core.dataflow.build`` on the
+same graph drives the DSE; ``interloop_overlap`` predicts the steady-state
+pipeline speedup that ``benchmarks/bench_nsai.py`` measures on the compiled
+schedule (its overlap-vs-sequential gate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core import dataflow as dfl
+from repro.core import trace as trace_mod
+from repro.core.opgraph import OpGraph
+
+STREAMS = ("nn", "vsa", "simd")
+
+# Host-side steps the generic executor overlaps with device compute, in
+# pipeline order.  ``ingest``: pulling + preprocessing requests from the
+# (possibly lazy) stream; ``stage``: stacking/padding to the compiled batch
+# shape and device transfer; ``collect``: materializing the *previous*
+# batch's answers.  All three run while the device works through the
+# in-flight batch — the host/device realization of inter-loop overlap
+# (paper Sec V-B step ③).
+HOST_OVERLAP_POINTS = ("ingest", "stage", "collect")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage: a jax-traceable callable with a stream tag.
+
+    ``fn(consts, bufs) -> bufs`` — ``consts`` is the workload's constant
+    pytree (params / codebooks / keys), ``bufs`` the previous stage's
+    output pytree (stage 0 receives the staged request batch).
+    """
+
+    name: str
+    stream: str        # nn | vsa | simd
+    fn: Callable[[Any, Any], Any]
+
+    def __post_init__(self):
+        if self.stream not in STREAMS:
+            raise ValueError(f"stage {self.name!r}: unknown stream "
+                             f"{self.stream!r} (want one of {STREAMS})")
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferSpec:
+    """Inter-stage buffer: pytree of ShapeDtypeStructs + total bytes."""
+
+    shapes: Any
+    nbytes: int
+
+    @staticmethod
+    def from_tree(tree) -> "BufferSpec":
+        leaves = jax.tree.leaves(tree)
+        nbytes = int(sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                         for l in leaves))
+        return BufferSpec(shapes=tree, nbytes=nbytes)
+
+
+@dataclasses.dataclass
+class StagedSchedule:
+    """An executable pipeline compiled from a workload's dataflow.
+
+    ``jit_stages[i]`` is ``jax.jit(stages[i].fn)``; jit caches live on the
+    schedule, so reuse schedules (engines share them per variant).  When
+    input specs are known, ``buffers[0]`` describes the staged input batch
+    and ``buffers[i + 1]`` the output of stage ``i`` (so ``len(buffers) ==
+    len(stages) + 1``).  ``drain_stage`` is the stage index before whose
+    dispatch the
+    executor drains the previous in-flight batch (0 = PR 2's schedule:
+    collect batch i-1 right before batch i's first device stage, so host
+    work never blocks the device and co-scheduling contention is avoided).
+    """
+
+    workload: str
+    variant: str
+    stages: tuple[StageSpec, ...]
+    jit_stages: tuple[Callable, ...]
+    ingest: Callable                      # fn(request) -> pytree of np arrays
+    collect: Callable                     # fn(host_out, i) -> result fields
+    buffers: tuple[BufferSpec, ...] = ()  # input buffer + per-stage outputs
+    stage_costs: tuple[dict, ...] = ()    # per-stage traced op statistics
+    graph: dfl.DataflowGraph | None = None
+    source: str = "declared"              # declared | trace
+    drain_stage: int = 0
+    host_overlap: tuple[str, ...] = HOST_OVERLAP_POINTS
+
+    @property
+    def stage_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.stages)
+
+    @property
+    def streams(self) -> tuple[str, ...]:
+        return tuple(s.stream for s in self.stages)
+
+    def describe(self) -> str:
+        """One-line pipeline rendering: name[stream] -> name[stream]."""
+        parts = []
+        for i, s in enumerate(self.stages):
+            buf = ""
+            if i < len(self.stages) - 1:
+                buf = f" --{_fmt_bytes(self.buffers[i + 1].nbytes)}--> " \
+                    if self.buffers else " -> "
+            parts.append(f"{s.name}[{s.stream}]{buf}")
+        return "".join(parts)
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024 or unit == "GB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n / 1:.1f}{unit}"
+        n /= 1024
+    return f"{n}B"
+
+
+def _graph_stats(g: OpGraph) -> dict:
+    """Summarize a traced stage subgraph for the stream-tag audit."""
+    flops = {k: g.total_flops(k) for k in STREAMS}
+    total = sum(flops.values())
+    dominant = max(flops, key=flops.get) if total else "simd"
+    # Pallas/fft vsa nodes prove a symbolic stream even when the gather
+    # fallback hides the flops inside dot_general (see module docstring)
+    has_vsa = any(n.kind == "vsa" for n in g)
+    return {
+        "nodes": len(g), "flops": flops, "bytes": g.total_bytes(),
+        "dominant": dominant, "has_vsa_nodes": has_vsa,
+    }
+
+
+def trace_pipeline(stages: tuple[StageSpec, ...], consts, input_specs
+                   ) -> dfl.DataflowGraph:
+    """Trace the composed pipeline's jaxpr into a DataflowGraph (steps ①–③).
+
+    This is ``core.trace`` on the model's jaxpr: the same graph the DSE
+    consumes, built from the exact computation the schedule will execute.
+    """
+
+    def composed(consts, bufs):
+        for s in stages:
+            bufs = s.fn(consts, bufs)
+        return bufs
+
+    opgraph = trace_mod.extract(composed, consts, input_specs)
+    return dfl.build(opgraph)
+
+
+def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
+                     ingest: Callable, collect: Callable, *,
+                     variant: str = "default", consts=None, input_specs=None,
+                     graph: OpGraph | None = None,
+                     trace_graph: bool = True) -> StagedSchedule:
+    """Lower a stage list (+ its dataflow graph) to a StagedSchedule.
+
+    ``input_specs``: pytree of ``jax.ShapeDtypeStruct`` for one staged
+    request batch (stage 0's input).  When given, inter-stage buffer specs
+    are derived by chaining ``jax.eval_shape`` through the stages, and —
+    unless ``trace_graph`` is False (fast construction: no jaxpr walks,
+    schedule still fully executable) — each stage plus the composed
+    pipeline are traced with ``core.trace``: per-stage op statistics for
+    the stream-tag audit, and a :class:`DataflowGraph` for provenance
+    (``graph`` may instead supply a declared paper-scale ``OpGraph``, e.g.
+    from ``core.workloads``, where tracing the reduced executable model
+    would under-size the graph).  ``consts`` may be real arrays or
+    ShapeDtypeStructs; it is only inspected abstractly.
+    """
+    stages = tuple(stages)
+    if not stages:
+        raise ValueError("schedule needs at least one stage")
+    names = [s.name for s in stages]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate stage names: {names}")
+
+    buffers: tuple[BufferSpec, ...] = ()
+    stage_costs: tuple[dict, ...] = ()
+    df: dfl.DataflowGraph | None = None
+    source = "declared"
+    if input_specs is not None:
+        bufs = [BufferSpec.from_tree(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), input_specs))]
+        costs = []
+        spec = input_specs
+        for s in stages:
+            spec = jax.eval_shape(s.fn, consts, spec)
+            bufs.append(BufferSpec.from_tree(spec))
+            if trace_graph:
+                costs.append(_graph_stats(trace_mod.extract(s.fn, consts,
+                                                            bufs[-2].shapes)))
+        buffers = tuple(bufs)
+        stage_costs = tuple(costs)
+        if graph is not None:
+            df = dfl.build(graph)
+        elif trace_graph:
+            df = trace_pipeline(stages, consts, input_specs)
+            source = "trace"
+    elif graph is not None:
+        df = dfl.build(graph)
+
+    return StagedSchedule(
+        workload=workload, variant=variant, stages=stages,
+        jit_stages=tuple(jax.jit(s.fn) for s in stages),
+        ingest=ingest, collect=collect, buffers=buffers,
+        stage_costs=stage_costs, graph=df, source=source)
+
+
+def predicted_overlap(schedule: StagedSchedule, n_batches: int = 2) -> dict:
+    """Analytical overlap prediction for the compiled schedule.
+
+    Splits the traced per-stage costs into the NN-stream prefix vs the
+    symbolic tail and runs ``core.dataflow.interloop_overlap`` — the same
+    step-③ model the DSE uses — so benchmarks can print predicted next to
+    measured speedups.
+    """
+    if not schedule.stage_costs:
+        raise ValueError("schedule was compiled without input_specs "
+                         "(no traced stage costs)")
+    t_nn = sum(sum(c["flops"].values()) for s, c in
+               zip(schedule.stages, schedule.stage_costs) if s.stream == "nn")
+    t_sy = sum(sum(c["flops"].values()) for s, c in
+               zip(schedule.stages, schedule.stage_costs) if s.stream != "nn")
+    if schedule.graph is not None:
+        return dfl.interloop_overlap(schedule.graph, max(1, t_nn),
+                                     max(1, t_sy), n_loops=n_batches)
+    stage = max(t_nn, t_sy, 1)
+    return {"pipelined": t_nn + (n_batches - 1) * stage + t_sy,
+            "sequential": n_batches * (t_nn + t_sy),
+            "speedup": (n_batches * (t_nn + t_sy)) /
+                       max(1, t_nn + (n_batches - 1) * stage + t_sy),
+            "bubble": 0.0}

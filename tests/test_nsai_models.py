@@ -152,21 +152,25 @@ def test_generator_candidates_unique(style, seed):
 
 
 # ---------------------------------------------------------------------------
-# Served (ReasonEngine) vs offline equivalence + pipeline determinism
+# Served (compiled StagedSchedule) vs offline equivalence + determinism
 # ---------------------------------------------------------------------------
 
 
-def _reason_engine(cfg, batch_size, model="nvsa"):
+def _reason_engine(cfg, batch_size, model="nvsa", consts=None,
+                   variants=None):
     from repro.configs import base as cbase
-    from repro.serve.reason import ReasonConfig, ReasonEngine
+    from repro.serve.reason import ReasonConfig
 
-    neural, oracle, symbolic = cbase.reason_fns(model, cfg)
-    return ReasonEngine(neural, symbolic, ReasonConfig(batch_size=batch_size),
-                        oracle_fn=oracle)
+    # trace_graph=False: these tests exercise execution equivalence; the
+    # graph/buffer lowering itself is covered by test_schedule.py
+    return cbase.reason_engine(model, cfg,
+                               ReasonConfig(batch_size=batch_size),
+                               consts=consts, variants=variants,
+                               trace_graph=False)
 
 
 def test_served_nvsa_oracle_matches_offline(problem_batch):
-    """Batched served NVSA (oracle perception, 2 pipeline batches) must
+    """Batched served NVSA (oracle variant, 2 pipeline batches) must
     reproduce the offline ``nvsa.reason`` answer distribution exactly and
     hit accuracy 1.0 on unambiguous RAVEN grids."""
     from repro.serve.reason import requests_from_batch
@@ -177,9 +181,10 @@ def test_served_nvsa_oracle_matches_offline(problem_batch):
     off_logp, _ = nvsa.reason(cfg, books, ctx, cand)
     off_logp = np.asarray(off_logp)
 
-    eng = _reason_engine(cfg, batch_size=8)
-    res = eng.run(None, books, requests_from_batch(batch),
-                  perception="oracle")
+    consts = {"params": None, "books": books}
+    eng = _reason_engine(cfg, batch_size=8, consts=consts,
+                         variants=("oracle",))
+    res = eng.run(consts, requests_from_batch(batch), variant="oracle")
     n = len(batch["answer"])
     served = np.stack([res[i].answer_logprobs for i in range(n)])
     np.testing.assert_allclose(served, off_logp, atol=1e-5)
@@ -193,9 +198,10 @@ def test_served_prae_oracle_accuracy(problem_batch):
     from repro.serve.reason import requests_from_batch
 
     cfg, batch = problem_batch
-    eng = _reason_engine(cfg, batch_size=8, model="prae")
-    res = eng.run(None, None, requests_from_batch(batch),
-                  perception="oracle")
+    consts = {"params": None, "books": None}
+    eng = _reason_engine(cfg, batch_size=8, model="prae", consts=consts,
+                         variants=("oracle",))
+    res = eng.run(consts, requests_from_batch(batch), variant="oracle")
     n = len(batch["answer"])
     acc = float(np.mean([res[i].answer == batch["answer"][i]
                          for i in range(n)]))
@@ -205,14 +211,15 @@ def test_served_prae_oracle_accuracy(problem_batch):
 @pytest.mark.parametrize("nn,sy,qmm", [("fp32", "fp32", False),
                                        ("int8", "int4", True)])
 def test_served_nvsa_cnn_matches_offline(nn, sy, qmm):
-    """Full CNN path, one admission group == offline ``nvsa.solve`` batch:
-    the served pipeline must produce identical answer distributions — also
-    under Tab. IV mixed precision with the nn stream on the Pallas qmatmul
-    kernel and the symbolic stream at int4."""
+    """Full CNN path: the served pipeline must reproduce the offline
+    ``nvsa.solve`` answer distributions — also under Tab. IV mixed
+    precision with the nn stream on the Pallas qmatmul kernel and the
+    symbolic stream at int4.  With eval-mode BN this holds across ragged
+    admission groups, not just when the group equals the offline batch."""
     from repro.serve.reason import requests_from_batch
 
     # d=64 keeps binds on the XLA path (kernel conformance is covered by
-    # test_kernel_conformance.py); n=6 single batch matches offline BN stats
+    # test_kernel_conformance.py)
     cfg = nvsa.NVSAConfig(d=64, nn_precision=nn, symb_precision=sy,
                           use_qmatmul=qmm)
     params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
@@ -223,8 +230,11 @@ def test_served_nvsa_cnn_matches_offline(nn, sy, qmm):
                              jnp.asarray(batch["candidates"]))
     off_logp = np.asarray(off_logp)
 
-    eng = _reason_engine(cfg, batch_size=6)
-    res = eng.run(params, books, requests_from_batch(batch))
+    consts = {"params": params, "books": books}
+    # batch_size=4 -> 6 requests split into a full + ragged pipeline batch
+    eng = _reason_engine(cfg, batch_size=4, consts=consts,
+                         variants=("cnn",))
+    res = eng.run(consts, requests_from_batch(batch))
     served = np.stack([res[i].answer_logprobs for i in range(6)])
     np.testing.assert_allclose(served, off_logp, atol=1e-5)
     np.testing.assert_array_equal(
@@ -232,21 +242,86 @@ def test_served_nvsa_cnn_matches_offline(nn, sy, qmm):
         np.argmax(off_logp, -1))
 
 
+def test_served_answer_independent_of_admission_group():
+    """Eval-mode BN regression (ROADMAP): a request's served answer
+    distribution must not depend on which other requests it was admitted
+    with — serve a problem alone and inside a mixed group, byte-compare."""
+    from repro.serve.reason import requests_from_batch
+
+    cfg = nvsa.NVSAConfig(d=64)
+    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
+    books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
+    consts = {"params": params, "books": books}
+    batch = raven.generate_batch(cfg.raven, seed=17, n=5)
+    reqs = requests_from_batch(batch)
+
+    eng = _reason_engine(cfg, batch_size=5, consts=consts, variants=("cnn",))
+    grouped = eng.run(consts, reqs)
+    solo_eng = _reason_engine(cfg, batch_size=1, consts=consts,
+                              variants=("cnn",))
+    for req in reqs:
+        solo = solo_eng.run(consts, [req])
+        np.testing.assert_allclose(solo[req.uid].answer_logprobs,
+                                   grouped[req.uid].answer_logprobs,
+                                   atol=1e-5)
+        assert solo[req.uid].answer == grouped[req.uid].answer
+
+
+def test_bn_ema_updates_running_stats():
+    """The functional BN-EMA plumbing: one train step's batch statistics
+    fold into the running stats (NVSA frontend and MIMONet encoder), so
+    eval-mode BN sees trained statistics."""
+    from repro.models import mimonet
+
+    cfg = nvsa.NVSAConfig(d=64, cnn_width=8, cnn_feat=32)
+    params = nninit.materialize(nvsa.nvsa_spec(cfg), jax.random.PRNGKey(0))
+    imgs, attrs = raven.panel_dataset(cfg.raven, seed=1, n_problems=1)
+    (loss, stats), _ = jax.value_and_grad(nvsa.frontend_loss, has_aux=True)(
+        params, cfg, jnp.asarray(imgs[:8]), jnp.asarray(attrs[:8]))
+    assert np.isfinite(float(loss)) and stats
+    new = nvsa.frontend_apply_bn_stats(params, stats, momentum=0.5)
+    stem_old = params["frontend"]["stem_bn"]
+    stem_new = new["frontend"]["stem_bn"]
+    assert not np.allclose(stem_new["mean"], stem_old["mean"])
+    assert not np.allclose(stem_new["var"], stem_old["var"])
+    # scale/bias untouched; deep (list-indexed) paths updated too
+    np.testing.assert_array_equal(stem_new["scale"], stem_old["scale"])
+    deep_old = params["frontend"]["stages"][1][0]["bn1"]["mean"]
+    deep_new = new["frontend"]["stages"][1][0]["bn1"]["mean"]
+    assert not np.allclose(deep_new, deep_old)
+
+    mcfg = mimonet.MIMONetConfig(d=32, cnn_width=4)
+    mparams = nninit.materialize(mimonet.mimonet_spec(mcfg),
+                                 jax.random.PRNGKey(0))
+    keys = mimonet.mimonet_keys(mcfg, jax.random.PRNGKey(1))
+    mimgs = jnp.asarray(imgs[: 2 * mcfg.n_channels].reshape(
+        2, mcfg.n_channels, *imgs.shape[1:]))
+    labels = jnp.asarray(attrs[: 2 * mcfg.n_channels, 0].reshape(
+        2, mcfg.n_channels))
+    mloss, mstats = mimonet.loss_fn(mparams, keys, mcfg, mimgs, labels)
+    assert np.isfinite(float(mloss)) and mstats
+    mnew = mimonet.apply_bn_stats(mparams, mstats, momentum=0.5)
+    assert not np.allclose(mnew["encoder"]["stem_bn"]["mean"],
+                           mparams["encoder"]["stem_bn"]["mean"])
+
+
 def test_reason_pipeline_deterministic_and_order_invariant():
     """The reasoning-pipeline determinism golden test: identical answer
     distributions across two runs and across request submission orders
-    (oracle perception — per-problem PMFs carry no cross-batch coupling)."""
+    (oracle variant — per-problem PMFs carry no cross-batch coupling)."""
     from repro.serve.reason import requests_from_batch
 
     cfg = nvsa.NVSAConfig(d=64)
     books = nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))
     batch = raven.generate_batch(cfg.raven, seed=13, n=10)
     reqs = requests_from_batch(batch)
-    eng = _reason_engine(cfg, batch_size=4)  # 10 reqs -> ragged last batch
-    golden = eng.run(None, books, reqs, perception="oracle")
-    rerun = eng.run(None, books, reqs, perception="oracle")
-    shuffled = eng.run(None, books, list(reversed(reqs)),
-                       perception="oracle")
+    consts = {"params": None, "books": books}
+    # 10 reqs -> ragged last batch
+    eng = _reason_engine(cfg, batch_size=4, consts=consts,
+                         variants=("oracle",))
+    golden = eng.run(consts, reqs, variant="oracle")
+    rerun = eng.run(consts, reqs, variant="oracle")
+    shuffled = eng.run(consts, list(reversed(reqs)), variant="oracle")
     for res in (rerun, shuffled):
         assert sorted(res) == sorted(golden)
         for uid in golden:
