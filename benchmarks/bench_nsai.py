@@ -11,6 +11,11 @@ engine and reports reasoning-problems/s for:
   - the overlapped double-buffered schedule (steady-state pipeline)
   - (nvsa) the symbolic-stream-only oracle variant and Tab. IV mixed
     precision (nn int8 through the Pallas qmatmul kernel, symbolic int4)
+  - an **online latency-vs-offered-load sweep**: Poisson arrivals at
+    fractions of the measured offline throughput through the
+    deadline-batched, shape-bucketed front-door (``serve.frontdoor``),
+    reporting achieved problems/s plus p50/p95 queueing and service
+    latency (and total p99) per schedule at each load point.
 
 The request stream is a lazy generator — per-request rendering runs inside
 the pipeline, exactly the preprocessing a serving frontend would do — so
@@ -18,10 +23,12 @@ the overlapped schedule's host/device overlap is measured, not idealized.
 
 Run:  PYTHONPATH=src python benchmarks/bench_nsai.py [--model nvsa]
           [--json out.json] [--check-overlap] [--problems N]
-          [--batch-size B] [--d D]
+          [--batch-size B] [--d D] [--loads 0.5,0.8,1.2]
+          [--deadline-ms 10] [--no-sweep]
 
 ``--check-overlap`` exits non-zero if the overlapped schedule does not beat
-the sequential one (the CI regression gate for the pipeline).
+the sequential one, or if the load sweep emitted no p50/p95 latency rows
+(the CI regression gates for the pipeline and the front-door).
 """
 
 from __future__ import annotations
@@ -72,7 +79,7 @@ def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
 
     # -- per-stage breakdown (paper Fig. 9's per-unit bars) -----------------
     # time each compiled stage in isolation on pre-staged buffers
-    staged = [eng._stage(b, sched) for b in eng._batches(list(stream(n)))]
+    staged = [eng._stage(b, sched)[0] for b in eng._batches(list(stream(n)))]
     for si, (spec, fn) in enumerate(zip(sched.stages, sched.jit_stages)):
         dt = _best_of(lambda: [jax.block_until_ready(fn(consts, b))
                                for b in staged], iters)
@@ -127,7 +134,73 @@ def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
     dt = _best_of(lambda: mp_eng.run(consts, stream(n),
                                      schedule="overlap"), iters)
     rows.append(("nsai/nvsa/mixed_int8_int4_overlap/problems_s", n / dt,
-                 "nn=int8 via qmatmul, symb=int4"))
+                 "nn=int8 via qmatmul / symb=int4"))
+    return rows
+
+
+def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
+                     d: int = 64, loads=(0.5, 0.8, 1.2),
+                     deadline_ms: float = 10.0):
+    """Latency vs offered load through the online front-door.
+
+    Offered rates are fractions of the engine's *measured* offline
+    overlapped throughput on this host, so the sweep spans under- and
+    over-load on any machine.  Each point serves ``problems`` Poisson
+    arrivals per schedule; every bucket's jit entry is compiled before
+    timing, so warmup never lands in a latency percentile.
+    """
+    from repro.configs import base as cbase
+    from repro.serve import frontdoor as fd
+    from repro.serve.reason import ReasonConfig
+
+    entry = cbase.REASON_WORKLOADS[model]
+    cfg = entry.make_config(d=d)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    buckets = fd.pow2_buckets(batch_size)
+    eng = cbase.reason_engine(
+        model, cfg, ReasonConfig(batch_size=batch_size, buckets=buckets),
+        consts=consts, variants=(entry.variants[0],), trace_graph=False)
+    # warm every bucket's jit entry (schedules share the same jit_stages,
+    # so one pass covers overlap and sequential alike)
+    for b in buckets:
+        warm, _ = entry.make_requests(cfg, b, seed=7000 + b)
+        eng.run(consts, warm())
+
+    factory, _ = entry.make_requests(cfg, problems, seed=8000)
+    eng.run(consts, factory())
+    base_pps = eng.last_run["problems_per_s"]
+
+    rows = []
+    for frac in loads:
+        rate = max(2.0, frac * base_pps)
+        for sched in ("overlap", "sequential"):
+            stream, _ = entry.make_requests(cfg, problems,
+                                            seed=8100 + int(frac * 100))
+            door = fd.FrontDoor(
+                {model: eng}, {model: consts},
+                fd.FrontDoorConfig(deadline_s=deadline_ms / 1e3,
+                                   schedule=sched))
+            rep = door.serve(fd.poisson_arrivals(model, stream(), rate,
+                                                 seed=int(frac * 100)))
+            q = rep.percentiles("queue_s", model)
+            s = rep.percentiles("service_s", model)
+            t = rep.percentiles("total_s", model)
+            pre = f"nsai/{model}/frontdoor/{sched}/load_{frac:g}"
+            # keep the derived column comma-free: rows print as 3-field CSV
+            derived = (f"poisson {rate:.1f} req/s deadline={deadline_ms:g}ms "
+                       f"buckets={'/'.join(map(str, buckets))}")
+            hist = " ".join(f"{b}x{c}" for b, c in
+                            rep.bucket_histogram(model).items())
+            rows += [
+                (f"{pre}/offered_rps", rate, derived),
+                (f"{pre}/problems_s", rep.throughput_rps(model),
+                 f"served={len(rep.latencies)} groups={hist}"),
+                (f"{pre}/queue_p50_ms", q["p50"] * 1e3, "arrival->dispatch"),
+                (f"{pre}/queue_p95_ms", q["p95"] * 1e3, "arrival->dispatch"),
+                (f"{pre}/service_p50_ms", s["p50"] * 1e3, "dispatch->done"),
+                (f"{pre}/service_p95_ms", s["p95"] * 1e3, "dispatch->done"),
+                (f"{pre}/total_p99_ms", t["p99"] * 1e3, "arrival->done"),
+            ]
     return rows
 
 
@@ -146,11 +219,25 @@ def main():
     ap.add_argument("--json", type=pathlib.Path, default=None,
                     help="also write rows as JSON")
     ap.add_argument("--check-overlap", action="store_true",
-                    help="exit 1 unless overlap beats sequential")
+                    help="exit 1 unless overlap beats sequential AND the "
+                         "load sweep emitted p50/p95 latency rows")
+    ap.add_argument("--loads", default="0.5,0.8,1.2",
+                    help="offered-load sweep points as fractions of the "
+                         "measured offline throughput")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="front-door admission deadline")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the latency-vs-offered-load sweep")
     args = ap.parse_args()
 
     rows = bench_nsai(model=args.model, problems=args.problems,
                       batch_size=args.batch_size, d=args.d, iters=args.iters)
+    if not args.no_sweep:
+        loads = tuple(float(x) for x in args.loads.split(",") if x.strip())
+        rows += bench_load_sweep(
+            model=args.model, problems=min(args.problems, 24),
+            batch_size=args.batch_size, d=args.d, loads=loads,
+            deadline_ms=args.deadline_ms)
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
@@ -178,6 +265,20 @@ def main():
             return 1
         print(f"overlap gate OK ({args.model}): {speedup:.3f}x over "
               f"sequential")
+        if not args.no_sweep:
+            import math
+
+            for p in ("queue_p50_ms", "queue_p95_ms",
+                      "service_p50_ms", "service_p95_ms"):
+                vals = [v for n, v, _ in rows if n.endswith(p)]
+                # NaN percentiles mean the front-door served nothing —
+                # row names alone would pass vacuously
+                if not vals or not all(math.isfinite(v) for v in vals):
+                    print(f"FAIL: load sweep has no finite {p} rows "
+                          f"(got {vals})", file=sys.stderr)
+                    return 1
+            print(f"latency sweep gate OK ({args.model}): finite p50/p95 "
+                  f"queue+service rows present")
     return 0
 
 

@@ -19,6 +19,11 @@ Part 3: every registered workload through the same path — PrAE (PMF-table
         registry, so a new workload shows up here by registration alone.
 Part 4: Tab. IV mixed precision on NVSA (nn int8 through the Pallas
         qmatmul kernel, symbolic int4) behind the same engine.
+Part 5: ONLINE serving — nvsa + mimonet multiplexed behind the
+        deadline-batched, shape-bucketed front-door (``serve.frontdoor``)
+        under Poisson arrivals: partial admission groups ride small
+        compiled buckets, and per-request queue/service latency
+        percentiles come back in the report.
 
 Run:  PYTHONPATH=src python examples/serve_reason.py
 """
@@ -56,7 +61,7 @@ def main():
         dt = time.time() - t0
         print(f"[serve_reason] nvsa/{sched}: {N_PROBLEMS} problems in "
               f"{dt:.2f}s ({N_PROBLEMS / dt:.1f} problems/s)")
-    for name, t in engine.stats["stage_time_s"].items():
+    for name, t in engine.stats["stage_time_s"]["cnn"].items():
         print(f"[serve_reason]   stage {name:10s} {t:.3f}s (sequential)")
     first = res[0]
     print(f"[serve_reason]   e.g. uid 0 (batch {first.batch}): answer "
@@ -97,6 +102,34 @@ def main():
     print(f"[serve_reason] mixed precision nn=int8(qmatmul)/symb=int4: "
           f"{N_PROBLEMS} problems in {time.time() - t0:.2f}s (memory "
           f"{nvsa.nvsa_memory_bytes(cfg, consts['params']) / nvsa.nvsa_memory_bytes(mp_cfg, consts['params']):.1f}x smaller)")
+
+    # Part 5 — online: two workloads behind one deadline-batched front-door
+    from repro.serve import frontdoor as fd
+
+    buckets = fd.pow2_buckets(BATCH)
+    engines, all_consts, streams = {}, {}, []
+    for i, model in enumerate(("nvsa", "mimonet")):
+        e = cbase.REASON_WORKLOADS[model]
+        mcfg = e.make_config(d=D)
+        mconsts = e.make_consts(mcfg, jax.random.PRNGKey(i))
+        eng = cbase.reason_engine(
+            model, mcfg,
+            ReasonConfig(batch_size=BATCH, buckets=buckets),
+            consts=mconsts, variants=(e.variants[0],), trace_graph=False)
+        for b in buckets:  # compile each bucket before taking latencies
+            warm, _ = e.make_requests(mcfg, b, seed=400 + b)
+            eng.run(mconsts, warm())
+        engines[model], all_consts[model] = eng, mconsts
+        mstream, _ = e.make_requests(mcfg, N_PROBLEMS, seed=300 + i)
+        streams.append(fd.poisson_arrivals(model, mstream(), rate_rps=40.0,
+                                           seed=i))
+    door = fd.FrontDoor(engines, all_consts,
+                        fd.FrontDoorConfig(deadline_s=0.02))
+    report = door.serve(fd.merge_arrivals(*streams))
+    print(f"[serve_reason] front-door: poisson 40 req/s per model, "
+          f"deadline 20ms, buckets {buckets}")
+    for line in report.summary().splitlines():
+        print(f"[serve_reason]   {line}")
 
 
 if __name__ == "__main__":

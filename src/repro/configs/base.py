@@ -600,7 +600,8 @@ REASON_MODELS = tuple(REASON_WORKLOADS)
 
 
 def compile_reason_schedule(model: str, cfg, variant: str | None = None,
-                            consts=None, batch_size: int = 4,
+                            consts=None,
+                            batch_size: int | tuple[int, ...] = 4,
                             trace_graph: bool = True):
     """Lower one registry entry to an executable ``StagedSchedule``.
 
@@ -609,6 +610,11 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
     only (nothing is materialized).  The compiled schedule carries the
     inter-stage buffer specs and the DataflowGraph traced from the composed
     stages (``trace_graph=False`` skips tracing for fast construction).
+
+    ``batch_size`` may be a tuple of batch-size buckets (e.g. ``(1, 2,
+    4, 8)``): the schedule's ``input_specs``/buffers describe the largest,
+    and the engine pads a partial admission group to the smallest covering
+    bucket instead of the max.
     """
     from repro.serve import schedule as sch
 
@@ -623,18 +629,23 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
     if consts is None:
         consts = jax.eval_shape(lambda k: entry.make_consts(cfg, k),
                                 jax.random.PRNGKey(0))
+    buckets = tuple(sorted(set(batch_size))) \
+        if isinstance(batch_size, (tuple, list)) else ()
+    max_batch = buckets[-1] if buckets else batch_size
     return sch.compile_schedule(
         model, entry.stage_specs(cfg, variant),
         entry.ingest(cfg, variant), entry.collect(cfg), variant=variant,
-        consts=consts, input_specs=entry.input_specs(cfg, batch_size, variant),
-        trace_graph=trace_graph)
+        consts=consts,
+        input_specs=entry.input_specs(cfg, max_batch, variant),
+        trace_graph=trace_graph, batch_buckets=buckets)
 
 
 def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
                   variants: tuple[str, ...] | None = None,
                   trace_graph: bool = True):
     """Compile all (or the given) variants of a workload and wrap them in
-    the generic N-stage ``ReasonEngine``."""
+    the generic N-stage ``ReasonEngine``.  ``reason_cfg.buckets`` (when
+    set) compiles every variant with that tuple of batch-size buckets."""
     from repro.serve.reason import ReasonConfig, ReasonEngine
 
     entry = REASON_WORKLOADS.get(model)
@@ -643,9 +654,10 @@ def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
                        f"available: {tuple(REASON_WORKLOADS)}")
     reason_cfg = reason_cfg or ReasonConfig()
     schedules = {
-        v: compile_reason_schedule(model, cfg, variant=v, consts=consts,
-                                   batch_size=reason_cfg.batch_size,
-                                   trace_graph=trace_graph)
+        v: compile_reason_schedule(
+            model, cfg, variant=v, consts=consts,
+            batch_size=reason_cfg.buckets or reason_cfg.batch_size,
+            trace_graph=trace_graph)
         for v in (variants or entry.variants)}
     return ReasonEngine(schedules, reason_cfg)
 

@@ -121,14 +121,25 @@ def interloop_overlap(df: DataflowGraph, t_nn_stream: int, t_vsa_stream: int,
     frees (after this loop's NN stream), overlapping loop i's symbolic tail:
         t_total = t_nn + (n-1)·max(t_nn, t_vsa) + t_vsa  [pipeline formula]
     Without folding (sequential array): t_total = n·(t_nn + t_vsa).
+
+    ``bubble`` is the idle fraction of the two streams over the (n-1)
+    steady-state slots — pipelined vs the ideal where each slot carries one
+    NN and one symbolic stream with no slack: a slot lasts max(t_nn, t_vsa)
+    of the 2·max capacity, of which t_nn + t_vsa is busy.  A single loop
+    (n_loops=1) has no pipeline slots and hence no bubble by definition,
+    and balanced streams (t_nn == t_vsa) pipeline bubble-free.
     """
     stage = max(t_nn_stream, t_vsa_stream)
     pipelined = t_nn_stream + (n_loops - 1) * stage + t_vsa_stream
     sequential = n_loops * (t_nn_stream + t_vsa_stream)
+    if n_loops <= 1 or stage <= 0:
+        bubble = 0.0
+    else:
+        bubble = min(1.0, max(
+            0.0, 1.0 - (t_nn_stream + t_vsa_stream) / (2 * stage)))
     return {
         "pipelined": pipelined,
         "sequential": sequential,
         "speedup": sequential / max(1, pipelined),
-        "bubble": 1.0 - (n_loops * (t_nn_stream + t_vsa_stream)) /
-                  max(1, n_loops * 2 * stage),
+        "bubble": bubble,
     }

@@ -1,6 +1,6 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Two traffic classes:
+Three traffic classes:
 - ``--workload lm`` (default): continuous-batching generation with the
   slot-pool engine (smoke-scale models on CPU; the decode_step is the same
   function the dry-run lowers for the 256/512-chip meshes).
@@ -11,6 +11,11 @@ Two traffic classes:
   from the workload's dataflow graph by ``serve.schedule``, with the
   overlap/sequential schedule and Tab. IV precision knobs exposed, and a
   per-stage timing breakdown printed for the sequential schedule.
+- ``--workload frontdoor``: *online* NSAI serving — several workload
+  engines (``--models nvsa,mimonet,lvrf``) multiplexed behind one
+  deadline-batched, shape-bucketed front-door (``serve.frontdoor``) fed
+  by per-model Poisson arrival streams at ``--rate`` req/s; reports
+  per-model p50/p95/p99 queueing + service latency and bucket usage.
 """
 
 from __future__ import annotations
@@ -65,14 +70,63 @@ def serve_reason(args):
           f"({args.requests / dt:.1f} problems/s, "
           f"{engine.stats['batches']} batches), accuracy {acc:.3f}")
     if args.schedule == "sequential":
-        for name, t in engine.stats["stage_time_s"].items():
+        for name, t in engine.stats["stage_time_s"].get(variant, {}).items():
             print(f"[serve]   stage {name:12s} {t:.3f}s")
     return results
 
 
+def serve_frontdoor(args):
+    from repro.serve import frontdoor as fd
+    from repro.serve.reason import ReasonConfig
+
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    buckets = fd.pow2_buckets(args.batch_size)
+    engines, consts, streams, truths = {}, {}, [], {}
+    for i, model in enumerate(models):
+        entry = cbase.REASON_WORKLOADS[model]
+        cfg = entry.make_config(d=args.d, nn_precision=args.nn_precision,
+                                symb_precision=args.symb_precision)
+        variant = "oracle" if args.oracle else entry.variants[0]
+        if variant not in entry.variants:
+            raise SystemExit(f"{model} has no {variant!r} variant "
+                             f"(available: {entry.variants})")
+        c = entry.make_consts(cfg, jax.random.PRNGKey(i))
+        eng = cbase.reason_engine(
+            model, cfg,
+            ReasonConfig(batch_size=args.batch_size, schedule=args.schedule,
+                         variant=variant, buckets=buckets,
+                         max_inflight=args.max_inflight),
+            consts=c, variants=(variant,), trace_graph=False)
+        for b in buckets:  # compile every bucket before taking latencies
+            warm, _ = entry.make_requests(cfg, b, seed=5000 + b)
+            eng.run(c, warm())
+        engines[model], consts[model] = eng, c
+        stream, truth = entry.make_requests(cfg, args.requests, seed=100 + i)
+        truths[model] = truth
+        streams.append(fd.poisson_arrivals(model, stream(), args.rate,
+                                           seed=i))
+        print(f"[frontdoor] {model}/{variant}: "
+              f"{eng.schedules[variant].describe()}")
+    door = fd.FrontDoor(engines, consts, fd.FrontDoorConfig(
+        deadline_s=args.deadline_ms / 1e3, schedule=args.schedule))
+    print(f"[frontdoor] {len(models)} models x {args.requests} requests, "
+          f"poisson {args.rate:.1f} req/s each, deadline "
+          f"{args.deadline_ms:.0f}ms, buckets {buckets}, "
+          f"max_inflight={args.max_inflight}")
+    report = door.serve(fd.merge_arrivals(*streams))
+    for line in report.summary().splitlines():
+        print(f"[frontdoor] {line}")
+    for model in models:
+        acc = cbase.REASON_WORKLOADS[model].score(report.results[model],
+                                                  truths[model]())
+        print(f"[frontdoor] {model} accuracy {acc:.3f}")
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="lm", choices=("lm", "reason"))
+    ap.add_argument("--workload", default="lm",
+                    choices=("lm", "reason", "frontdoor"))
     ap.add_argument("--arch", default="llama3.2-3b", choices=sorted(ARCHS))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -96,10 +150,22 @@ def main():
                     choices=("fp32", "bf16", "int8", "int4"))
     ap.add_argument("--oracle", action="store_true",
                     help="ground-truth perception (symbolic stream only)")
+    # online front-door knobs (--workload frontdoor)
+    ap.add_argument("--models", default="nvsa,mimonet,lvrf",
+                    help="comma list of workloads multiplexed behind the "
+                         "front-door")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="per-model Poisson offered load, req/s")
+    ap.add_argument("--deadline-ms", type=float, default=20.0,
+                    help="admission-group deadline after first arrival")
+    ap.add_argument("--max-inflight", type=int, default=1,
+                    help="dispatched-but-undrained groups per engine")
     args = ap.parse_args()
 
     if args.workload == "reason":
         return serve_reason(args)
+    if args.workload == "frontdoor":
+        return serve_frontdoor(args)
 
     arch = ARCHS[args.arch]
     cfg = arch.make_smoke()

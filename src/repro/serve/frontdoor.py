@@ -1,0 +1,392 @@
+"""Online admission for NSAI serving: the deadline-batched front-door.
+
+NSFlow's pitch is *real-time* NSAI acceleration, but an engine that only
+accepts pre-collected request lists (``ReasonEngine.run``) makes a trickle
+of traffic pay full-batch latency and a burst pay padding waste.  This
+module is the front-door that turns **arrival-timed** online traffic into
+admission groups the staged-pipeline engine can serve well:
+
+- **batch-full-or-deadline admission**: a group closes the moment it
+  reaches the admission cap (``full``) or ``deadline_s`` after its first
+  request arrived (``deadline``) — bursts fill batches, trickles wait at
+  most one deadline.  When the arrival stream ends, open groups close
+  immediately (``flush``).
+- **shape bucketing**: a closed partial group is padded by the engine to
+  the smallest *covering bucket* of the schedule's compiled batch sizes
+  (``StagedSchedule.batch_buckets``, e.g. 1/2/4/8) instead of the max —
+  see ``pow2_buckets``.
+- **multiplexing**: one front-door serves several workload engines (e.g.
+  nvsa + mimonet + lvrf); each arrival names its model, groups are formed
+  per model, and every engine keeps its own in-flight window
+  (``ReasonConfig.max_inflight``) on the shared host.
+- **per-request latency accounting**: arrival -> dispatch (queueing) and
+  dispatch -> answers-on-host (service) per request, with p50/p95/p99
+  summaries (:meth:`FrontDoorReport.percentiles`) — the numbers the
+  ``bench_nsai.py`` latency-vs-offered-load sweep reports.
+
+The serve loop is single-threaded and event-driven: it admits due
+arrivals, closes groups by the policy, dispatches them asynchronously
+through ``ReasonEngine.submit`` (host staging overlaps device compute),
+and while waiting for traffic drains any groups whose device buffers have
+already materialized (``drain_ready``) so ``done`` timestamps are not
+deferred to the next dispatch.  ``clock``/``sleep`` are injectable — tests
+drive the policy deterministically on a virtual clock; benchmarks use real
+time.
+
+Traffic models: :func:`poisson_arrivals` (open-loop Poisson at a given
+offered rate), :func:`trace_arrivals` (replay explicit timestamps), and
+:func:`merge_arrivals` to interleave per-model streams into one time-
+ordered front-door feed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence
+
+import numpy as np
+
+from repro.serve.reason import (GroupRecord, ReasonEngine, ReasonRequest,
+                                ReasonResult, SCHEDULES)
+
+
+# ---------------------------------------------------------------------------
+# traffic models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalRequest:
+    """One request with its offered arrival time (seconds, stream origin)."""
+
+    t: float
+    model: str
+    request: ReasonRequest
+
+
+def poisson_arrivals(model: str, requests: Iterable[ReasonRequest],
+                     rate_rps: float, seed: int = 0, start_s: float = 0.0
+                     ) -> Iterator[ArrivalRequest]:
+    """Open-loop Poisson traffic: exponential inter-arrival gaps at
+    ``rate_rps`` requests/s.  Lazy — each request is pulled (rendered)
+    only when its arrival is generated, so preprocessing runs inside the
+    serving loop like real ingest."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    t = start_s
+    for req in requests:
+        t += float(rng.exponential(1.0 / rate_rps))
+        yield ArrivalRequest(t=t, model=model, request=req)
+
+
+def trace_arrivals(model: str, times_s: Sequence[float],
+                   requests: Iterable[ReasonRequest]
+                   ) -> Iterator[ArrivalRequest]:
+    """Replay an explicit arrival-time trace (must be nondecreasing).
+    Times and requests must pair up exactly — a length mismatch in either
+    direction raises instead of silently dropping traffic."""
+    last = -float("inf")
+    it = iter(requests)
+    for t in times_s:
+        if t < last:
+            raise ValueError(f"trace times must be nondecreasing "
+                             f"({t} after {last})")
+        last = t
+        try:
+            req = next(it)
+        except StopIteration:
+            raise ValueError("trace has more times than requests") from None
+        yield ArrivalRequest(t=float(t), model=model, request=req)
+    if next(it, None) is not None:
+        raise ValueError("trace has more requests than times "
+                         "(the extras would silently never be served)")
+
+
+def merge_arrivals(*streams: Iterable[ArrivalRequest]
+                   ) -> Iterator[ArrivalRequest]:
+    """Interleave time-ordered per-model streams into one ordered feed."""
+    return heapq.merge(*streams, key=lambda a: a.t)
+
+
+def pow2_buckets(max_batch: int, min_bucket: int = 2) -> tuple[int, ...]:
+    """Power-of-two batch buckets up to (and always including) max_batch:
+    8 -> (2, 4, 8); 6 -> (2, 4, 6).
+
+    ``min_bucket`` defaults to 2, not 1: XLA (CPU) lowers rank-degenerate
+    batch-1 matmuls/convs through different accumulation paths, so a
+    bucket of 1 is the one compiled shape whose answers can differ from
+    the others in final ulps.  With buckets >= 2 a request's answer is
+    bit-identical whichever bucket serves it (regression-tested); pass
+    ``min_bucket=1`` to trade that for zero padding on singleton groups.
+    """
+    if max_batch < 1 or min_bucket < 1:
+        raise ValueError("max_batch and min_bucket must be >= 1")
+    out = []
+    b = min_bucket
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    return tuple(out) + (max_batch,)
+
+
+# ---------------------------------------------------------------------------
+# latency accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestLatency:
+    """Per-request timing through the front-door (seconds from serve start).
+
+    ``queue_s`` = arrival -> first stage dispatched (admission wait + any
+    blocking on the in-flight window); ``service_s`` = dispatch -> answers
+    materialized on the host."""
+
+    uid: int
+    model: str
+    arrival_s: float
+    dispatch_s: float
+    done_s: float
+    bucket: int
+    group_size: int
+    close_reason: str             # full | deadline | flush
+
+    @property
+    def queue_s(self) -> float:
+        return self.dispatch_s - self.arrival_s
+
+    @property
+    def service_s(self) -> float:
+        return self.done_s - self.dispatch_s
+
+    @property
+    def total_s(self) -> float:
+        return self.done_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class ServedGroup:
+    """One admission group as the front-door closed and served it."""
+
+    model: str
+    uids: tuple[int, ...]
+    bucket: int
+    size: int
+    close_reason: str
+    open_s: float                 # arrival of the group's first request
+    close_s: float                # when the admission policy closed it
+    dispatch_s: float
+    done_s: float
+
+
+@dataclasses.dataclass
+class FrontDoorReport:
+    """Results + latency accounting of one ``FrontDoor.serve`` call."""
+
+    results: dict[str, dict[int, ReasonResult]]   # model -> uid -> result
+    latencies: list[RequestLatency]
+    groups: list[ServedGroup]
+    wall_time_s: float
+
+    def percentiles(self, field: str = "total_s", model: str | None = None,
+                    qs: tuple[int, ...] = (50, 95, 99)) -> dict[str, float]:
+        """{p50: ..., p95: ...} over ``field`` (queue_s | service_s |
+        total_s), optionally for one model."""
+        vals = [getattr(l, field) for l in self.latencies
+                if model is None or l.model == model]
+        if not vals:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(vals, q)) for q in qs}
+
+    def throughput_rps(self, model: str | None = None) -> float:
+        n = sum(1 for l in self.latencies
+                if model is None or l.model == model)
+        return n / self.wall_time_s if self.wall_time_s else 0.0
+
+    def bucket_histogram(self, model: str | None = None) -> dict[int, int]:
+        hist: dict[int, int] = {}
+        for g in self.groups:
+            if model is None or g.model == model:
+                hist[g.bucket] = hist.get(g.bucket, 0) + 1
+        return dict(sorted(hist.items()))
+
+    def summary(self) -> str:
+        lines = []
+        for model in sorted(self.results):
+            n = len(self.results[model])
+            if not n:
+                continue
+            q = self.percentiles("queue_s", model)
+            s = self.percentiles("service_s", model)
+            t = self.percentiles("total_s", model)
+            hist = ",".join(f"{b}x{c}" for b, c in
+                            self.bucket_histogram(model).items())
+            lines.append(
+                f"{model}: {n} served @ {self.throughput_rps(model):.1f}/s"
+                f" | queue p50/p95 {q['p50'] * 1e3:.1f}/{q['p95'] * 1e3:.1f}ms"
+                f" | service p50/p95 {s['p50'] * 1e3:.1f}/"
+                f"{s['p95'] * 1e3:.1f}ms"
+                f" | total p99 {t['p99'] * 1e3:.1f}ms | buckets {hist}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the front-door
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FrontDoorConfig:
+    # close an admission group this long after its first request arrived
+    deadline_s: float = 0.02
+    # admission cap per group (None = each engine's cfg.batch_size)
+    max_batch: int | None = None
+    schedule: str = "overlap"     # overlap | sequential
+    # while groups are in flight, sleeps are capped at this poll interval
+    # so ready groups get drained (and done-stamped) promptly
+    poll_s: float = 0.002
+
+
+class FrontDoor:
+    """Deadline-batched, shape-bucketed admission over one or more engines.
+
+    ``engines`` maps model name -> :class:`ReasonEngine`; ``consts`` maps
+    the same names to each workload's constant pytree.  ``serve`` consumes
+    a time-ordered :class:`ArrivalRequest` stream (use
+    :func:`merge_arrivals` for several models) and returns a
+    :class:`FrontDoorReport`.
+
+    ``clock``/``sleep`` default to real time; tests inject a virtual pair
+    to drive the admission policy deterministically.  The engines' record
+    clocks are pointed at the front-door clock for the duration of
+    ``serve`` so queue/service latencies share one origin.
+    """
+
+    def __init__(self, engines: Mapping[str, ReasonEngine],
+                 consts: Mapping[str, Any],
+                 cfg: FrontDoorConfig | None = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 sleep: Callable[[float], None] = time.sleep):
+        if not engines:
+            raise ValueError("front-door needs at least one engine")
+        cfg = cfg or FrontDoorConfig()
+        if cfg.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {cfg.schedule!r}")
+        if cfg.deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0")
+        missing = set(engines) - set(consts)
+        if missing:
+            raise ValueError(f"no consts for models: {sorted(missing)}")
+        self.engines = dict(engines)
+        self.consts = {m: consts[m] for m in engines}
+        self.cfg = cfg
+        self._clock = clock
+        self._sleep = sleep
+        self.caps = {m: min(cfg.max_batch or eng.cfg.batch_size,
+                            eng.cfg.batch_size)
+                     for m, eng in self.engines.items()}
+        if any(c < 1 for c in self.caps.values()):
+            raise ValueError(f"admission caps must be >= 1: {self.caps}")
+
+    def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
+        """Serve one arrival stream to completion (single-threaded event
+        loop; see module docstring for the policy)."""
+        saved_clocks = {m: eng.clock for m, eng in self.engines.items()}
+        for eng in self.engines.values():
+            eng.clock = self._clock
+        try:
+            return self._serve(arrivals)
+        finally:
+            for m, eng in self.engines.items():
+                eng.clock = saved_clocks[m]
+
+    def _serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
+        results: dict[str, dict[int, ReasonResult]] = \
+            {m: {} for m in self.engines}
+        pending: dict[str, list[ArrivalRequest]] = \
+            {m: [] for m in self.engines}
+        # (model, engine record, close_reason, close_s, [arrival times])
+        submitted: list[tuple[str, GroupRecord, str, float, list[float]]] = []
+
+        t0 = self._clock()
+
+        def now() -> float:
+            return self._clock() - t0
+
+        def close_group(model: str, reason: str):
+            group = pending[model]
+            pending[model] = []
+            rec = self.engines[model].submit(
+                self.consts[model], [a.request for a in group],
+                results[model], schedule=self.cfg.schedule)
+            submitted.append((model, rec, reason, now(),
+                              [a.t for a in group]))
+
+        it = iter(arrivals)
+        nxt = next(it, None)
+        last_t = -float("inf")
+        while True:
+            t = now()
+            # admit every due arrival (pulling the iterator renders the
+            # request — ingest work happens inside the serving loop)
+            while nxt is not None and nxt.t <= t:
+                if nxt.model not in self.engines:
+                    raise ValueError(f"arrival for unknown model "
+                                     f"{nxt.model!r} (serving "
+                                     f"{sorted(self.engines)})")
+                if nxt.t < last_t - 1e-9:
+                    raise ValueError("arrival stream is not time-ordered "
+                                     f"({nxt.t:.6f} after {last_t:.6f}) — "
+                                     "use merge_arrivals")
+                last_t = nxt.t
+                model = nxt.model
+                pending[model].append(nxt)
+                nxt = next(it, None)
+                if len(pending[model]) >= self.caps[model]:
+                    close_group(model, "full")
+            if nxt is None:
+                # stream over: no future arrival can fill an open group,
+                # so holding it to the deadline only adds latency
+                for model in self.engines:
+                    if pending[model]:
+                        close_group(model, "flush")
+                break
+            t = now()
+            for model, queue in pending.items():
+                if queue and t >= queue[0].t + self.cfg.deadline_s:
+                    close_group(model, "deadline")
+            events = [nxt.t] + [q[0].t + self.cfg.deadline_s
+                                for q in pending.values() if q]
+            dt = min(events) - now()
+            if dt > 0:
+                # the device keeps working while the host waits; collect
+                # whatever finished so done-stamps aren't deferred
+                inflight = 0
+                for model, eng in self.engines.items():
+                    eng.drain_ready(results[model])
+                    inflight += eng.inflight
+                self._sleep(min(dt, self.cfg.poll_s) if inflight else dt)
+
+        for model, eng in self.engines.items():
+            eng.drain_all(results[model])
+        wall = now()
+
+        latencies: list[RequestLatency] = []
+        groups: list[ServedGroup] = []
+        for model, rec, reason, close_s, arr_times in submitted:
+            dispatch_s = rec.dispatch_t - t0
+            done_s = rec.done_t - t0
+            groups.append(ServedGroup(
+                model=model, uids=rec.uids, bucket=rec.bucket, size=rec.size,
+                close_reason=reason, open_s=arr_times[0], close_s=close_s,
+                dispatch_s=dispatch_s, done_s=done_s))
+            for uid, arr in zip(rec.uids, arr_times):
+                latencies.append(RequestLatency(
+                    uid=uid, model=model, arrival_s=arr,
+                    dispatch_s=dispatch_s, done_s=done_s, bucket=rec.bucket,
+                    group_size=rec.size, close_reason=reason))
+        return FrontDoorReport(results=results, latencies=latencies,
+                               groups=groups, wall_time_s=wall)

@@ -11,34 +11,58 @@ contributed by the registry in ``configs.base.REASON_WORKLOADS``; adding a
 workload means declaring stages + a graph builder there, not forking the
 engine.
 
-Requests are admitted in fixed-size batches and flow through the compiled
-N-stage software pipeline, double-buffered (two batches resident) so batch
-*i*'s device stages overlap batch *i+1*'s host work:
+Admission groups flow through the compiled N-stage software pipeline with
+a configurable in-flight window (``ReasonConfig.max_inflight`` dispatched-
+but-undrained groups resident at once; 1 = PR 2's double buffering), so
+group *i*'s device stages overlap group *i+k*'s host work:
 
     device:  S₁⁰..S₁ᴺ S₂⁰..S₂ᴺ S₃⁰.. ...       (async queue, never idle)
-    host:     stage₂     stage₃     ...         (a full batch ahead)
+    host:     stage₂     stage₃     ...         (a window ahead)
               collect₀   collect₁  ...
 
-Every host-side step — ingesting the next batch from the request stream
+Every host-side step — ingesting the next group from the request stream
 (which may be a lazy generator: rendering/preprocessing then runs inside
 the pipeline), staging device arrays, and converting finished answers back
-to numpy — runs while the device works through the previous batch, so none
-of it sits on the critical path.  On a dataflow array the device stages of
-consecutive batches would co-execute on disjoint units (the analytical
-model in ``core.dataflow.interloop_overlap``); on one shared host device
-co-scheduling them just makes both contend for the same cores, so the
-engine drains batch i-1 right before dispatching batch i's first stage
-(the schedule's ``drain_stage``) and takes the overlap on the host/device
-axis instead.  The ``sequential`` schedule is the naive serve loop
-(synchronize after every stage, finish a batch completely before touching
-the next) that ``bench_nsai.py`` compares against — the serving analogue
-of the paper's Fig. 9 folded-vs-unfolded comparison; it is also where the
-per-stage timing breakdown is measured (timing a stage requires blocking
-on it).
+to numpy — runs while the device works through the in-flight window, so
+none of it sits on the critical path.  On a dataflow array the device
+stages of consecutive groups would co-execute on disjoint units (the
+analytical model in ``core.dataflow.interloop_overlap``); on one shared
+host device co-scheduling them just makes both contend for the same cores,
+so the engine drains the oldest in-flight group right before dispatching a
+new group's first stage once the window is full (the schedule's
+``drain_stage``) and takes the overlap on the host/device axis instead.
+The ``sequential`` schedule is the naive serve loop (synchronize after
+every stage, finish a group completely before touching the next) that
+``bench_nsai.py`` compares against — the serving analogue of the paper's
+Fig. 9 folded-vs-unfolded comparison; it is also where the per-stage
+timing breakdown is measured (timing a stage requires blocking on it).
+
+Two entry points:
+
+- ``run(consts, requests)`` — the offline loop: admit fixed-size groups
+  from an iterable and serve them all (benchmarks, tests, batch jobs).
+- ``submit(consts, group, results)`` / ``drain_ready`` / ``drain_all`` —
+  the group-level API the **online front-door** (``serve.frontdoor``)
+  drives: it forms admission groups by its batch-full-or-deadline policy
+  and dispatches each as it closes, with per-group dispatch/done
+  timestamps returned as :class:`GroupRecord`\\ s.
+
+A partial group is padded to the smallest *covering bucket* of the
+schedule's compiled batch sizes (``StagedSchedule.batch_buckets``), not to
+the maximum — a 3-request group on a (1, 2, 4, 8)-bucket schedule runs at
+batch 4, paying one row of padding instead of five.
+
+Stats are split so jit warmup cannot pollute throughput numbers: a run
+that compiles anything (first time a (variant, bucket) shape is executed)
+is accounted under ``stats["warmup"]``, steady-state runs under
+``stats["measured"]`` (which ``problems_per_s`` reports), and per-run
+records (incl. a per-variant stage-time breakdown) append to
+``engine.runs``.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import time
@@ -50,15 +74,26 @@ import numpy as np
 
 from repro.serve.schedule import StagedSchedule
 
+SCHEDULES = ("overlap", "sequential")
+
 
 @dataclasses.dataclass
 class ReasonConfig:
-    batch_size: int = 4           # problems per pipeline batch (fixed shape)
+    batch_size: int = 4           # max problems per admission group
     schedule: str = "overlap"     # overlap | sequential
     # Which compiled variant of the workload to run (e.g. "cnn" = neural
     # perception, "oracle" = ground-truth PMFs / symbolic-stream-only).
     # None = the first variant the engine was constructed with.
     variant: str | None = None
+    # Depth of the in-flight window: dispatched-but-undrained groups
+    # resident at once before the executor blocks on the oldest.
+    # 1 = double buffering (one group on the device while the host stages
+    # the next).
+    max_inflight: int = 1
+    # Compiled batch-size buckets, ascending (None = (batch_size,)): a
+    # partial admission group pads to the smallest covering bucket.  Used
+    # at schedule-compile time by ``configs.base.reason_engine``.
+    buckets: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass
@@ -79,13 +114,50 @@ class ReasonResult:
     # argmax over candidates (int) or per-channel argmax (np.ndarray)
     answer: int | np.ndarray
     answer_logprobs: np.ndarray
-    batch: int                    # pipeline batch that served the request
+    batch: int                    # pipeline group index that served it
     # workload extras (e.g. per-attribute rule posteriors); None if N/A
     rule_posteriors: np.ndarray | None = None
 
 
+@dataclasses.dataclass
+class GroupRecord:
+    """Provenance + timing of one dispatched admission group.
+
+    ``dispatch_t`` is stamped (engine clock) when the group's first stage
+    is enqueued on the device.  For the default ``drain_stage == 0`` that
+    is after the blocking drain of older groups, so arrival→dispatch is
+    queueing and dispatch→done is service; a schedule with ``drain_stage
+    > 0`` intentionally enqueues its early stages *before* draining, so
+    that drain wait lands in service time (the group really is being
+    worked on).  ``done_t`` is None until the group is drained (answers
+    materialized on the host).
+    """
+
+    uids: tuple[int, ...]
+    index: int                    # engine-lifetime group counter
+    variant: str
+    bucket: int                   # compiled batch size the group ran at
+    size: int                     # real requests in the group (<= bucket)
+    dispatch_t: float | None = None
+    done_t: float | None = None
+
+
+def _fresh_stats() -> dict:
+    return {
+        "requests": 0, "batches": 0,
+        # wall-time split: runs that compiled a new (variant, bucket)
+        # shape land in "warmup", steady-state runs in "measured"
+        "measured": {"requests": 0, "wall_time_s": 0.0},
+        "warmup": {"requests": 0, "wall_time_s": 0.0},
+        # cumulative sequential-schedule stage times, keyed per variant so
+        # same-named stages of different variants (oracle vs cnn) never
+        # merge: {variant: {stage_name: seconds}}
+        "stage_time_s": {},
+    }
+
+
 class ReasonEngine:
-    """Generic N-stage double-buffered executor over StagedSchedules.
+    """Generic N-stage pipelined executor over StagedSchedules.
 
     ``schedules`` maps variant name -> compiled :class:`StagedSchedule`
     (a single schedule is accepted too).  Stage jit caches live on the
@@ -93,28 +165,55 @@ class ReasonEngine:
     ``run(consts, requests)`` feeds every request batch through the
     schedule's stages; ``consts`` is the workload's constant pytree
     (params / codebooks / binding keys) handed to every stage.
+    ``clock`` is the timestamp source for :class:`GroupRecord`\\ s (the
+    front-door injects its own so queue/service latencies share one
+    origin).
     """
 
     def __init__(self, schedules: StagedSchedule | Mapping[str, StagedSchedule],
-                 cfg: ReasonConfig):
+                 cfg: ReasonConfig, clock=time.perf_counter):
         if isinstance(schedules, StagedSchedule):
             schedules = {schedules.variant: schedules}
         if not schedules:
             raise ValueError("engine needs at least one compiled schedule")
-        if cfg.schedule not in ("overlap", "sequential"):
+        if cfg.schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {cfg.schedule!r}")
         if cfg.batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if cfg.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        for s in schedules.values():
+            if s.batch_buckets and s.batch_buckets[-1] < cfg.batch_size:
+                raise ValueError(
+                    f"{s.workload}/{s.variant}: largest compiled bucket "
+                    f"{s.batch_buckets[-1]} < batch_size {cfg.batch_size} — "
+                    "admission groups would not fit any bucket")
         self.schedules = dict(schedules)
         self.default_variant = cfg.variant or next(iter(self.schedules))
         if self.default_variant not in self.schedules:
             raise ValueError(f"unknown variant {self.default_variant!r}; "
                              f"compiled: {sorted(self.schedules)}")
         self.cfg = cfg
-        self.stats = {"requests": 0, "batches": 0, "wall_time_s": 0.0,
-                      "stage_time_s": {}}
+        self.clock = clock
+        self.stats = _fresh_stats()
+        self.runs: list[dict] = []    # per-run records from run()
+        self._inflight: collections.deque = collections.deque()
+        self._next_index = 0
+        self._warmed: set[tuple[str, int]] = set()  # (variant, bucket) run
+        self._cold_run = False
+        self._run_stage_time: dict[str, float] = {}
 
     # -- host-side staging --------------------------------------------------
+
+    def _resolve(self, schedule: str | None, variant: str | None):
+        schedule = schedule or self.cfg.schedule
+        variant = variant or self.default_variant
+        if schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}")
+        if variant not in self.schedules:
+            raise ValueError(f"unknown variant {variant!r}; "
+                             f"compiled: {sorted(self.schedules)}")
+        return schedule, variant, self.schedules[variant]
 
     def _ingest(self, req: ReasonRequest, sched: StagedSchedule):
         try:
@@ -125,13 +224,18 @@ class ReasonEngine:
                 f"{sched.workload!r} variant {sched.variant!r}: {e}") from e
 
     def _stage(self, batch: list[ReasonRequest], sched: StagedSchedule):
-        """Stack one admission group and pad to the compiled batch shape.
+        """Stack one admission group and pad to its covering bucket.
 
-        Padding replicates the last request so every batch hits the same
-        jit cache entry; padded rows are computed and dropped at collect.
+        Padding replicates the last request so a group of any size hits a
+        compiled jit cache entry; padded rows are computed and dropped at
+        collect.  Bucketed schedules pad to the smallest compiled batch
+        size that fits; bucket-less schedules keep the single
+        ``batch_size`` shape.  Returns ``(device_bufs, bucket)``.
         """
         trees = [self._ingest(r, sched) for r in batch]
-        pad = self.cfg.batch_size - len(batch)
+        bucket = sched.covering_bucket(len(batch)) if sched.batch_buckets \
+            else self.cfg.batch_size
+        pad = bucket - len(batch)
 
         def stack(*leaves):
             x = np.stack(leaves)
@@ -139,16 +243,17 @@ class ReasonEngine:
                 x = np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
             return jnp.asarray(x)
 
-        return jax.tree.map(stack, *trees)
+        return jax.tree.map(stack, *trees), bucket
 
     def _collect(self, results: dict, batch: list[ReasonRequest], out,
-                 batch_idx: int, sched: StagedSchedule):
-        """Materialize one batch's answers on the host (blocks if pending)."""
+                 rec: GroupRecord, sched: StagedSchedule):
+        """Materialize one group's answers on the host (blocks if pending)."""
         host = jax.tree.map(np.asarray, out)
         for i, req in enumerate(batch):  # padded rows have no request
             fields = sched.collect(host, i)
-            results[req.uid] = ReasonResult(uid=req.uid, batch=batch_idx,
+            results[req.uid] = ReasonResult(uid=req.uid, batch=rec.index,
                                             **fields)
+        rec.done_t = self.clock()
         self.stats["requests"] += len(batch)
 
     def _batches(self, requests: Iterable[ReasonRequest]):
@@ -167,72 +272,175 @@ class ReasonEngine:
                 seen.add(req.uid)
             yield batch
 
-    # -- the two schedules --------------------------------------------------
+    # -- group-level API (the front-door drives these) ----------------------
+
+    def submit(self, consts, group: list[ReasonRequest], results: dict,
+               schedule: str | None = None, variant: str | None = None
+               ) -> GroupRecord:
+        """Dispatch one admission group through the compiled pipeline.
+
+        Under ``overlap`` the stages are enqueued asynchronously and the
+        returned :class:`GroupRecord` has ``done_t=None``; once the
+        in-flight window (``cfg.max_inflight``) is full, the oldest group
+        is drained (blocking) at the schedule's drain point before the new
+        first stage is dispatched — its record (already returned by the
+        earlier ``submit``) gets ``done_t`` stamped in place.  Under
+        ``sequential`` the group is served synchronously (accumulating the
+        per-stage timing breakdown) and returned complete.
+        """
+        schedule, variant, sched = self._resolve(schedule, variant)
+        sequential = schedule == "sequential"
+        if not group:
+            raise ValueError("empty admission group")
+        if len(group) > self.cfg.batch_size:
+            raise ValueError(f"admission group of {len(group)} exceeds "
+                             f"batch_size {self.cfg.batch_size}")
+        pending = {u for g, *_ in self._inflight for u in (r.uid for r in g)}
+        for req in group:
+            if req.uid in results or req.uid in pending:
+                raise ValueError(f"duplicate request uid {req.uid} "
+                                 "(results are keyed by uid)")
+        bufs, bucket = self._stage(group, sched)
+        if (variant, bucket) not in self._warmed:
+            self._warmed.add((variant, bucket))
+            self._cold_run = True
+        rec = GroupRecord(uids=tuple(r.uid for r in group),
+                          index=self._next_index, variant=variant,
+                          bucket=bucket, size=len(group))
+        self._next_index += 1
+        stage_time = self.stats["stage_time_s"].setdefault(variant, {})
+        for si, fn in enumerate(sched.jit_stages):
+            if not sequential and si == sched.drain_stage:
+                # drain the oldest group(s) before dispatching this one:
+                # co-scheduling more device batches than the window allows
+                # on one shared host device only adds contention (see
+                # module docstring)
+                while len(self._inflight) >= self.cfg.max_inflight:
+                    self._drain_one(results)
+            if si == 0:
+                rec.dispatch_t = self.clock()
+            t0 = time.perf_counter()
+            bufs = fn(consts, bufs)
+            if sequential:
+                jax.block_until_ready(bufs)
+                name = sched.stages[si].name
+                dt = time.perf_counter() - t0
+                stage_time[name] = stage_time.get(name, 0.0) + dt
+                self._run_stage_time[name] = \
+                    self._run_stage_time.get(name, 0.0) + dt
+        self.stats["batches"] += 1
+        if sequential:
+            self._collect(results, group, bufs, rec, sched)
+        else:
+            self._inflight.append((group, bufs, rec, sched))
+        return rec
+
+    def _drain_one(self, results: dict) -> GroupRecord | None:
+        if not self._inflight:
+            return None
+        group, bufs, rec, sched = self._inflight.popleft()
+        self._collect(results, group, bufs, rec, sched)
+        return rec
+
+    def drain_all(self, results: dict) -> list[GroupRecord]:
+        """Drain every in-flight group, oldest first (blocking)."""
+        out = []
+        while self._inflight:
+            out.append(self._drain_one(results))
+        return out
+
+    def drain_ready(self, results: dict) -> list[GroupRecord]:
+        """Drain in-flight groups whose device buffers have already
+        materialized — non-blocking, oldest first (the front-door calls
+        this while it would otherwise sleep waiting for traffic)."""
+        out = []
+        while self._inflight:
+            _, bufs, _, _ = self._inflight[0]
+            if not all(l.is_ready() for l in jax.tree.leaves(bufs)
+                       if hasattr(l, "is_ready")):
+                break
+            out.append(self._drain_one(results))
+        return out
+
+    @property
+    def inflight(self) -> int:
+        """Dispatched-but-undrained admission groups."""
+        return len(self._inflight)
+
+    # -- the offline loop ---------------------------------------------------
 
     def run(self, consts, requests: Iterable[ReasonRequest],
             schedule: str | None = None, variant: str | None = None
             ) -> dict[int, "ReasonResult"]:
         """Serve all requests; returns {uid: ReasonResult}.
 
-        ``overlap``: double-buffered — ingest/stage batch i while the
-        device runs batch i-1, drain i-1's answers, then dispatch batch i's
-        stages asynchronously; host work never blocks the device.
-        ``sequential``: synchronize after each stage, one batch at a time,
-        accumulating the per-stage timing breakdown.
-        ``schedule`` / ``variant`` override the config per call (stage jit
-        caches live on the StagedSchedule, so benchmarks can compare
-        schedules on one engine instance).
+        ``overlap``: pipelined — ingest/stage the next group while the
+        device runs the in-flight window, drain the oldest group's
+        answers, then dispatch the new group's stages asynchronously; host
+        work never blocks the device.  ``sequential``: synchronize after
+        each stage, one group at a time, accumulating the per-stage timing
+        breakdown.  ``schedule`` / ``variant`` override the config per
+        call (stage jit caches live on the StagedSchedule, so benchmarks
+        can compare schedules on one engine instance).
+
+        Appends a per-run record to ``self.runs`` ({schedule, variant,
+        requests, wall_time_s, warmup, stage_time_s, problems_per_s});
+        runs that jit-compiled a new (variant, bucket) shape are flagged
+        ``warmup`` and excluded from the cumulative measured stats that
+        ``problems_per_s()`` reports.
         """
-        schedule = schedule or self.cfg.schedule
-        variant = variant or self.default_variant
-        if schedule not in ("overlap", "sequential"):
-            raise ValueError(f"unknown schedule {schedule!r}")
-        if variant not in self.schedules:
-            raise ValueError(f"unknown variant {variant!r}; "
-                             f"compiled: {sorted(self.schedules)}")
-        sched = self.schedules[variant]
-        sequential = schedule == "sequential"
-        stage_time = self.stats["stage_time_s"]
-        t_start = time.perf_counter()
+        schedule, variant, _ = self._resolve(schedule, variant)
+        if self._inflight:
+            raise ValueError("engine has undrained in-flight groups "
+                             "(call drain_all first)")
         results: dict[int, ReasonResult] = {}
-        inflight = None  # (batch, output futures, batch index)
-        for bi, batch in enumerate(self._batches(requests)):
-            # staging batch i (incl. any lazy per-request preprocessing in
-            # the `requests` iterable) overlaps batch i-1 on the device
-            bufs = self._stage(batch, sched)
-            for si, fn in enumerate(sched.jit_stages):
-                if not sequential and inflight is not None \
-                        and si == sched.drain_stage:
-                    # drain batch i-1 before dispatching batch i:
-                    # co-scheduling two batches on one shared host device
-                    # only adds contention (see module docstring)
-                    self._collect(results, *inflight, sched)
-                    inflight = None
-                t0 = time.perf_counter()
-                bufs = fn(consts, bufs)
-                if sequential:
-                    jax.block_until_ready(bufs)
-                    name = sched.stages[si].name
-                    stage_time[name] = stage_time.get(name, 0.0) \
-                        + time.perf_counter() - t0
-            self.stats["batches"] += 1
-            if sequential:
-                self._collect(results, batch, bufs, bi, sched)
-            else:
-                inflight = (batch, bufs, bi)
-        if inflight is not None:
-            self._collect(results, *inflight, sched)
-        self.stats["wall_time_s"] += time.perf_counter() - t_start
+        self._cold_run = False
+        self._run_stage_time = {}
+        t_start = time.perf_counter()
+        for batch in self._batches(requests):
+            # staging the next group (incl. any lazy per-request
+            # preprocessing in the `requests` iterable) overlaps the
+            # in-flight window on the device
+            self.submit(consts, batch, results, schedule=schedule,
+                        variant=variant)
+        self.drain_all(results)
+        dt = time.perf_counter() - t_start
+        kind = "warmup" if self._cold_run else "measured"
+        self.stats[kind]["requests"] += len(results)
+        self.stats[kind]["wall_time_s"] += dt
+        self.runs.append({
+            "schedule": schedule, "variant": variant,
+            "requests": len(results), "wall_time_s": dt,
+            "warmup": self._cold_run,
+            "stage_time_s": dict(self._run_stage_time),
+            "problems_per_s": len(results) / dt if dt else 0.0,
+        })
         return results
 
+    @property
+    def last_run(self) -> dict | None:
+        """Per-run stats record of the most recent ``run()``."""
+        return self.runs[-1] if self.runs else None
+
     def problems_per_s(self) -> float:
-        if not self.stats["wall_time_s"]:
-            return 0.0
-        return self.stats["requests"] / self.stats["wall_time_s"]
+        """Measured steady-state throughput — warmup runs (the ones that
+        jit-compiled a new shape) are excluded; ``stats["warmup"]`` keeps
+        their totals separately.  If *only* warmup runs exist (e.g. a
+        single long run whose last ragged group first-touched a small
+        bucket), falls back to the all-runs number rather than reporting
+        0 — check ``stats["measured"]["requests"]`` to tell them apart."""
+        m, w = self.stats["measured"], self.stats["warmup"]
+        if m["wall_time_s"]:
+            return m["requests"] / m["wall_time_s"]
+        if w["wall_time_s"]:
+            return w["requests"] / w["wall_time_s"]
+        return 0.0
 
     def reset_stats(self):
-        self.stats.update(requests=0, batches=0, wall_time_s=0.0,
-                          stage_time_s={})
+        """Zero the cumulative stats and per-run records (jit caches and
+        the warmed-shape set survive — compilations are not forgotten)."""
+        self.stats = _fresh_stats()
+        self.runs = []
 
 
 def requests_from_batch(batch: dict, start_uid: int = 0

@@ -119,6 +119,16 @@ class StagedSchedule:
     source: str = "declared"              # declared | trace
     drain_stage: int = 0
     host_overlap: tuple[str, ...] = HOST_OVERLAP_POINTS
+    # compiled batch-size buckets, ascending; () = the single input_specs
+    # batch size.  A partial admission group is padded to the smallest
+    # covering bucket instead of the max (each bucket is its own jit cache
+    # entry on the shared jit_stages).  ``buffers``/``stage_costs`` describe
+    # the largest bucket.
+    batch_buckets: tuple[int, ...] = ()
+    # kept for lazy cost tracing (``predicted_overlap`` on schedules
+    # compiled with ``trace_graph=False``): abstract consts + stage-0 specs
+    input_specs: Any = None
+    consts_spec: Any = None
 
     @property
     def stage_names(self) -> tuple[str, ...]:
@@ -127,6 +137,17 @@ class StagedSchedule:
     @property
     def streams(self) -> tuple[str, ...]:
         return tuple(s.stream for s in self.stages)
+
+    def covering_bucket(self, n: int) -> int:
+        """Smallest compiled batch bucket that fits ``n`` requests."""
+        if not self.batch_buckets:
+            return n
+        for b in self.batch_buckets:
+            if b >= n:
+                return b
+        raise ValueError(
+            f"{self.workload}/{self.variant}: admission group of {n} "
+            f"exceeds the largest compiled bucket {self.batch_buckets[-1]}")
 
     def describe(self) -> str:
         """One-line pipeline rendering: name[stream] -> name[stream]."""
@@ -141,11 +162,15 @@ class StagedSchedule:
 
 
 def _fmt_bytes(n: int) -> str:
-    for unit in ("B", "KB", "MB", "GB"):
-        if n < 1024 or unit == "GB":
-            return f"{n:.0f}{unit}" if unit == "B" else f"{n / 1:.1f}{unit}"
-        n /= 1024
-    return f"{n}B"
+    # 1023.95 threshold: anything that would render as "1024.0" after the
+    # one-decimal rounding is promoted to the next unit (1048575 bytes is
+    # "1.0MB", not "1024.0KB")
+    x = float(n)
+    for unit in ("B", "KB", "MB"):
+        if x < (1024 if unit == "B" else 1023.95):
+            return f"{x:.0f}B" if unit == "B" else f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}GB"
 
 
 def _graph_stats(g: OpGraph) -> dict:
@@ -179,24 +204,36 @@ def trace_pipeline(stages: tuple[StageSpec, ...], consts, input_specs
     return dfl.build(opgraph)
 
 
+def _abstract(tree):
+    """ShapeDtypeStruct skeleton of a pytree (non-array leaves pass through)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape") and hasattr(x, "dtype") else x, tree)
+
+
 def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
                      ingest: Callable, collect: Callable, *,
                      variant: str = "default", consts=None, input_specs=None,
-                     graph: OpGraph | None = None,
-                     trace_graph: bool = True) -> StagedSchedule:
+                     graph: OpGraph | None = None, trace_graph: bool = True,
+                     batch_buckets: tuple[int, ...] = ()) -> StagedSchedule:
     """Lower a stage list (+ its dataflow graph) to a StagedSchedule.
 
     ``input_specs``: pytree of ``jax.ShapeDtypeStruct`` for one staged
     request batch (stage 0's input).  When given, inter-stage buffer specs
     are derived by chaining ``jax.eval_shape`` through the stages, and —
     unless ``trace_graph`` is False (fast construction: no jaxpr walks,
-    schedule still fully executable) — each stage plus the composed
-    pipeline are traced with ``core.trace``: per-stage op statistics for
-    the stream-tag audit, and a :class:`DataflowGraph` for provenance
-    (``graph`` may instead supply a declared paper-scale ``OpGraph``, e.g.
-    from ``core.workloads``, where tracing the reduced executable model
-    would under-size the graph).  ``consts`` may be real arrays or
-    ShapeDtypeStructs; it is only inspected abstractly.
+    schedule still fully executable; ``predicted_overlap`` traces lazily
+    on first use) — each stage plus the composed pipeline are traced with
+    ``core.trace``: per-stage op statistics for the stream-tag audit, and
+    a :class:`DataflowGraph` for provenance (``graph`` may instead supply
+    a declared paper-scale ``OpGraph``, e.g. from ``core.workloads``,
+    where tracing the reduced executable model would under-size the
+    graph).  ``consts`` may be real arrays or ShapeDtypeStructs; it is
+    only inspected abstractly.
+
+    ``batch_buckets``: ascending compiled batch sizes (``input_specs``
+    must describe the largest); the executor pads a partial admission
+    group to the smallest covering bucket instead of the max.
     """
     stages = tuple(stages)
     if not stages:
@@ -204,6 +241,12 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
     names = [s.name for s in stages]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate stage names: {names}")
+    batch_buckets = tuple(batch_buckets)
+    if batch_buckets:
+        if list(batch_buckets) != sorted(set(batch_buckets)) \
+                or batch_buckets[0] < 1:
+            raise ValueError(f"batch_buckets must be ascending positive "
+                             f"sizes, got {batch_buckets}")
 
     buffers: tuple[BufferSpec, ...] = ()
     stage_costs: tuple[dict, ...] = ()
@@ -234,7 +277,30 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
         workload=workload, variant=variant, stages=stages,
         jit_stages=tuple(jax.jit(s.fn) for s in stages),
         ingest=ingest, collect=collect, buffers=buffers,
-        stage_costs=stage_costs, graph=df, source=source)
+        stage_costs=stage_costs, graph=df, source=source,
+        batch_buckets=batch_buckets,
+        input_specs=_abstract(input_specs) if input_specs is not None
+        else None,
+        consts_spec=_abstract(consts) if input_specs is not None else None)
+
+
+def _ensure_stage_costs(schedule: StagedSchedule):
+    """Lazily trace per-stage costs (+ the composed-pipeline graph) for
+    schedules compiled with ``input_specs`` but ``trace_graph=False``;
+    memoized on the schedule."""
+    if schedule.stage_costs or schedule.input_specs is None:
+        return
+    costs = []
+    spec = schedule.input_specs
+    for s in schedule.stages:
+        costs.append(_graph_stats(
+            trace_mod.extract(s.fn, schedule.consts_spec, spec)))
+        spec = jax.eval_shape(s.fn, schedule.consts_spec, spec)
+    schedule.stage_costs = tuple(costs)
+    if schedule.graph is None:
+        schedule.graph = trace_pipeline(schedule.stages, schedule.consts_spec,
+                                        schedule.input_specs)
+        schedule.source = "trace"
 
 
 def predicted_overlap(schedule: StagedSchedule, n_batches: int = 2) -> dict:
@@ -243,11 +309,13 @@ def predicted_overlap(schedule: StagedSchedule, n_batches: int = 2) -> dict:
     Splits the traced per-stage costs into the NN-stream prefix vs the
     symbolic tail and runs ``core.dataflow.interloop_overlap`` — the same
     step-③ model the DSE uses — so benchmarks can print predicted next to
-    measured speedups.
+    measured speedups.  Works on ``trace_graph=False`` schedules too:
+    stage costs are traced lazily on first use.
     """
+    _ensure_stage_costs(schedule)
     if not schedule.stage_costs:
         raise ValueError("schedule was compiled without input_specs "
-                         "(no traced stage costs)")
+                         "(no stage costs to trace)")
     t_nn = sum(sum(c["flops"].values()) for s, c in
                zip(schedule.stages, schedule.stage_costs) if s.stream == "nn")
     t_sy = sum(sum(c["flops"].values()) for s, c in

@@ -110,6 +110,27 @@ def test_interloop_overlap_pipeline_formula():
     assert r["pipelined"] == 100 + 3 * 100 + 50
     assert r["sequential"] == 4 * 150
     assert r["speedup"] > 1.3
+    # unbalanced steady state idles the shorter stream 25% of 2*stage
+    assert r["bubble"] == pytest.approx(0.25)
+
+
+def test_interloop_overlap_bubble_degenerate_cases():
+    """A single iteration has no pipeline slots, hence no bubble; balanced
+    streams pipeline bubble-free; the bubble stays clamped to [0, 1]."""
+    df = dfl.build(workloads.nvsa_graph())
+    one = dfl.interloop_overlap(df, t_nn_stream=100, t_vsa_stream=50,
+                                n_loops=1)
+    assert one["bubble"] == 0.0
+    assert one["pipelined"] == one["sequential"] == 150  # no overlap at n=1
+    assert one["speedup"] == 1.0
+    balanced = dfl.interloop_overlap(df, t_nn_stream=70, t_vsa_stream=70,
+                                     n_loops=8)
+    assert balanced["bubble"] == 0.0
+    assert balanced["speedup"] == pytest.approx(2 * 8 / 9)
+    for n in (2, 3, 16):
+        r = dfl.interloop_overlap(df, t_nn_stream=1, t_vsa_stream=10 ** 6,
+                                  n_loops=n)
+        assert 0.0 <= r["bubble"] <= 1.0
 
 
 # -- two-phase DSE (Algorithm 1) ----------------------------------------------

@@ -1,0 +1,312 @@
+"""Online-admission front-door tests: traffic models, the batch-full-or-
+deadline policy (driven deterministically on a virtual clock), shape
+bucketing, the engine's depth-k in-flight window + submit/drain API, and
+the warmup-aware stats split."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cbase
+from repro.models import nvsa
+from repro.serve import frontdoor as fd
+from repro.serve.reason import ReasonConfig, ReasonRequest, requests_from_batch
+
+
+class VirtualClock:
+    """Deterministic clock + sleep pair for driving the serve loop."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float):
+        assert dt >= 0
+        self.t += dt
+
+
+def _oracle_engine(model="nvsa", batch_size=4, buckets=(2, 4),
+                   max_inflight=1, schedule="overlap", d=64):
+    """Cheap symbolic-stream-only engine (no CNN params needed)."""
+    cfg = cbase.REASON_WORKLOADS[model].make_config(d=d)
+    consts = {"params": None,
+              "books": nvsa.nvsa_codebooks(cfg, jax.random.PRNGKey(1))}
+    eng = cbase.reason_engine(
+        model, cfg,
+        ReasonConfig(batch_size=batch_size, buckets=buckets,
+                     max_inflight=max_inflight, schedule=schedule),
+        consts=consts, variants=("oracle",), trace_graph=False)
+    return cfg, consts, eng
+
+
+def _oracle_requests(cfg, n, seed=3):
+    from repro.data import raven
+
+    return requests_from_batch(raven.generate_batch(cfg.raven, seed=seed,
+                                                    n=n))
+
+
+# -- traffic models ----------------------------------------------------------
+
+
+def test_pow2_buckets():
+    assert fd.pow2_buckets(8) == (2, 4, 8)
+    assert fd.pow2_buckets(6) == (2, 4, 6)
+    assert fd.pow2_buckets(2) == (2,)
+    assert fd.pow2_buckets(1) == (1,)
+    assert fd.pow2_buckets(8, min_bucket=1) == (1, 2, 4, 8)
+    with pytest.raises(ValueError):
+        fd.pow2_buckets(0)
+
+
+def test_poisson_arrivals_rate_and_determinism():
+    reqs = [ReasonRequest(uid=i) for i in range(400)]
+    a = list(fd.poisson_arrivals("m", reqs, rate_rps=50.0, seed=7))
+    b = list(fd.poisson_arrivals("m", reqs, rate_rps=50.0, seed=7))
+    assert [x.t for x in a] == [x.t for x in b]  # seeded => reproducible
+    gaps = np.diff([0.0] + [x.t for x in a])
+    assert (gaps > 0).all()
+    assert 1 / 50.0 * 0.8 < gaps.mean() < 1 / 50.0 * 1.2
+    with pytest.raises(ValueError, match="rate_rps"):
+        next(fd.poisson_arrivals("m", reqs, rate_rps=0.0))
+
+
+def test_poisson_arrivals_pull_requests_lazily():
+    pulled = []
+
+    def stream():
+        for i in range(5):
+            pulled.append(i)
+            yield ReasonRequest(uid=i)
+
+    it = fd.poisson_arrivals("m", stream(), rate_rps=10.0)
+    assert pulled == []          # nothing rendered before the first pull
+    next(it)
+    assert len(pulled) == 1
+
+
+def test_trace_arrivals_validation():
+    reqs = [ReasonRequest(uid=i) for i in range(2)]
+    out = list(fd.trace_arrivals("m", [0.1, 0.4], reqs))
+    assert [a.t for a in out] == [0.1, 0.4]
+    with pytest.raises(ValueError, match="nondecreasing"):
+        list(fd.trace_arrivals("m", [0.4, 0.1], reqs))
+    with pytest.raises(ValueError, match="more times"):
+        list(fd.trace_arrivals("m", [0.1, 0.2, 0.3], reqs))
+
+
+def test_merge_arrivals_orders_streams():
+    r = lambda u: ReasonRequest(uid=u)
+    s1 = fd.trace_arrivals("a", [0.0, 0.3], [r(0), r(1)])
+    s2 = fd.trace_arrivals("b", [0.1, 0.2], [r(0), r(1)])
+    merged = list(fd.merge_arrivals(s1, s2))
+    assert [(a.model, a.t) for a in merged] == \
+        [("a", 0.0), ("b", 0.1), ("b", 0.2), ("a", 0.3)]
+
+
+# -- the admission policy (virtual clock) ------------------------------------
+
+
+def test_admission_full_deadline_flush_and_buckets():
+    """4 back-to-back arrivals close `full`; a pair closes at the 20ms
+    deadline through the bucket-2 shape; stream-end flushes the tail."""
+    cfg, consts, eng = _oracle_engine(batch_size=4, buckets=(2, 4))
+    reqs = _oracle_requests(cfg, 9)
+    times = [0.0, 0.001, 0.002, 0.003,      # -> full group of 4
+             0.05, 0.051,                   # -> deadline group of 2
+             0.2, 0.21, 0.22]               # -> flush group of 3
+    clock = VirtualClock()
+    door = fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
+                        fd.FrontDoorConfig(deadline_s=0.02),
+                        clock=clock, sleep=clock.sleep)
+    rep = door.serve(fd.trace_arrivals("nvsa", times, reqs))
+
+    assert eng.clock is time.perf_counter  # serve restored the engine clock
+    assert [(g.size, g.bucket, g.close_reason) for g in rep.groups] == \
+        [(4, 4, "full"), (2, 2, "deadline"), (3, 4, "flush")]
+    assert len(rep.latencies) == 9
+    assert all(l.queue_s >= -1e-9 and l.service_s >= -1e-9
+               for l in rep.latencies)
+    # the deadline group's first (oldest) request waited exactly the deadline
+    dl = [l for l in rep.latencies if l.close_reason == "deadline"]
+    assert max(l.queue_s for l in dl) == pytest.approx(0.02, abs=1e-6)
+    # full group dispatched immediately on the closing arrival
+    full = [l for l in rep.latencies if l.close_reason == "full"]
+    assert max(l.queue_s for l in full) <= 0.004 + 1e-6
+    # answers match the offline engine run bit-exactly
+    offline = eng.run(consts, _oracle_requests(cfg, 9), variant="oracle")
+    for uid, res in rep.results["nvsa"].items():
+        np.testing.assert_array_equal(res.answer_logprobs,
+                                      offline[uid].answer_logprobs)
+
+
+def test_frontdoor_multiplexes_models():
+    """nvsa + prae behind one front-door: per-model groups, per-model
+    results, one time-ordered feed."""
+    ncfg, nconsts, neng = _oracle_engine("nvsa")
+    pcfg = cbase.REASON_WORKLOADS["prae"].make_config(d=64)
+    pconsts = {"params": None, "books": None}
+    peng = cbase.reason_engine(
+        "prae", pcfg, ReasonConfig(batch_size=4, buckets=(2, 4)),
+        consts=pconsts, variants=("oracle",), trace_graph=False)
+    clock = VirtualClock()
+    door = fd.FrontDoor({"nvsa": neng, "prae": peng},
+                        {"nvsa": nconsts, "prae": pconsts},
+                        fd.FrontDoorConfig(deadline_s=0.01),
+                        clock=clock, sleep=clock.sleep)
+    streams = [
+        fd.poisson_arrivals("nvsa", _oracle_requests(ncfg, 6, seed=5),
+                            rate_rps=300.0, seed=0),
+        fd.poisson_arrivals("prae", _oracle_requests(pcfg, 5, seed=6),
+                            rate_rps=300.0, seed=1),
+    ]
+    rep = door.serve(fd.merge_arrivals(*streams))
+    assert sorted(rep.results) == ["nvsa", "prae"]
+    assert len(rep.results["nvsa"]) == 6 and len(rep.results["prae"]) == 5
+    assert {g.model for g in rep.groups} == {"nvsa", "prae"}
+    assert rep.throughput_rps() > 0
+    assert rep.summary()  # renders without blowing up
+    p = rep.percentiles("queue_s", "prae")
+    assert set(p) == {"p50", "p95", "p99"} and p["p50"] <= p["p99"]
+
+
+def test_frontdoor_validation_errors():
+    cfg, consts, eng = _oracle_engine()
+    with pytest.raises(ValueError, match="at least one engine"):
+        fd.FrontDoor({}, {})
+    with pytest.raises(ValueError, match="no consts"):
+        fd.FrontDoor({"nvsa": eng}, {})
+    with pytest.raises(ValueError, match="unknown schedule"):
+        fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
+                     fd.FrontDoorConfig(schedule="warp"))
+    clock = VirtualClock()
+    door = fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
+                        clock=clock, sleep=clock.sleep)
+    reqs = _oracle_requests(cfg, 2)
+    with pytest.raises(ValueError, match="unknown model"):
+        door.serve(fd.trace_arrivals("mystery", [0.0], reqs[:1]))
+    with pytest.raises(ValueError, match="not time-ordered"):
+        door.serve(iter([fd.ArrivalRequest(0.5, "nvsa", reqs[0]),
+                         fd.ArrivalRequest(0.1, "nvsa", reqs[1])]))
+
+
+# -- engine group-level API --------------------------------------------------
+
+
+def test_engine_inflight_window_depth():
+    """max_inflight=2: the third submit must drain the first group."""
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=2)
+    reqs = _oracle_requests(cfg, 6)
+    results = {}
+    r1 = eng.submit(consts, reqs[0:2], results)
+    r2 = eng.submit(consts, reqs[2:4], results)
+    assert eng.inflight == 2 and r1.done_t is None and r2.done_t is None
+    r3 = eng.submit(consts, reqs[4:6], results)
+    assert r1.done_t is not None          # drained to make room
+    assert eng.inflight == 2              # r2, r3 still resident
+    assert sorted(results) == [0, 1]
+    recs = eng.drain_all(results)
+    assert [r.index for r in recs] == [r2.index, r3.index]
+    assert sorted(results) == list(range(6))
+    assert all(r.done_t >= r.dispatch_t for r in (r1, r2, r3))
+
+
+def test_engine_drain_ready_nonblocking():
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=4)
+    reqs = _oracle_requests(cfg, 4)
+    results = {}
+    eng.submit(consts, reqs[:2], results)
+    eng.submit(consts, reqs[2:], results)
+    deadline = time.time() + 30
+    while eng.inflight and time.time() < deadline:
+        eng.drain_ready(results)
+        time.sleep(0.005)
+    assert eng.inflight == 0 and len(results) == 4
+
+
+def test_engine_submit_rejections():
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,))
+    reqs = _oracle_requests(cfg, 4)
+    results = {}
+    with pytest.raises(ValueError, match="empty admission group"):
+        eng.submit(consts, [], results)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(consts, reqs[:3], results)
+    eng.submit(consts, reqs[:2], results)
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.submit(consts, reqs[:2], results)      # still in flight
+    with pytest.raises(ValueError, match="undrained in-flight"):
+        eng.run(consts, reqs[2:])
+    eng.drain_all(results)
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.submit(consts, reqs[:2], results)      # already in results
+    with pytest.raises(ValueError, match="max_inflight"):
+        cbase.reason_engine(
+            "nvsa", cfg, ReasonConfig(max_inflight=0),
+            consts=consts, variants=("oracle",), trace_graph=False)
+    with pytest.raises(ValueError, match="largest compiled bucket"):
+        cbase.reason_engine(
+            "nvsa", cfg, ReasonConfig(batch_size=8, buckets=(2, 4)),
+            consts=consts, variants=("oracle",), trace_graph=False)
+
+
+def test_covering_bucket():
+    cfg, consts, eng = _oracle_engine(batch_size=4, buckets=(2, 4))
+    sched = eng.schedules["oracle"]
+    assert sched.batch_buckets == (2, 4)
+    assert [sched.covering_bucket(n) for n in (1, 2, 3, 4)] == [2, 2, 4, 4]
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        sched.covering_bucket(5)
+
+
+# -- stats: warmup split + per-variant stage keys ----------------------------
+
+
+def test_stats_warmup_split_and_per_run_records():
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,))
+    reqs = _oracle_requests(cfg, 4)
+    eng.run(consts, reqs[:2])
+    assert eng.last_run["warmup"] is True          # compiled bucket 2
+    assert eng.stats["warmup"]["requests"] == 2
+    assert eng.stats["measured"]["requests"] == 0
+    warm_pps = eng.problems_per_s()                # warmup-only fallback
+    assert warm_pps > 0
+    eng.run(consts, reqs[2:])
+    assert eng.last_run["warmup"] is False
+    assert eng.stats["measured"]["requests"] == 2
+    # now measured-only: compile time no longer in the denominator
+    assert eng.problems_per_s() > warm_pps
+    # warmup wall time stays out of the measured throughput denominator
+    assert eng.stats["measured"]["wall_time_s"] < \
+        eng.stats["warmup"]["wall_time_s"]
+    assert [r["warmup"] for r in eng.runs] == [True, False]
+    # reset zeroes totals but remembers compiled shapes
+    eng.reset_stats()
+    assert eng.runs == [] and eng.problems_per_s() == 0.0
+    eng.run(consts, _oracle_requests(cfg, 2, seed=9))
+    assert eng.last_run["warmup"] is False
+
+
+def test_stage_times_do_not_collide_across_variants():
+    """Both nvsa variants end in a stage named `symbolic`; per-variant
+    nesting keeps oracle and cnn timings separate."""
+    cfg = cbase.REASON_WORKLOADS["nvsa"].make_config(d=64)
+    consts = cbase.REASON_WORKLOADS["nvsa"].make_consts(
+        cfg, jax.random.PRNGKey(0))
+    eng = cbase.reason_engine("nvsa", cfg, ReasonConfig(batch_size=2),
+                              consts=consts, trace_graph=False)
+    reqs = _oracle_requests(cfg, 2)
+    eng.run(consts, reqs, schedule="sequential", variant="cnn")
+    eng.run(consts, _oracle_requests(cfg, 2, seed=9),
+            schedule="sequential", variant="oracle")
+    st = eng.stats["stage_time_s"]
+    assert set(st["cnn"]) == {"frontend", "symbolic"}
+    assert set(st["oracle"]) == {"oracle", "symbolic"}
+    assert st["cnn"]["symbolic"] != st["oracle"]["symbolic"]
+    assert eng.last_run["stage_time_s"].keys() == st["oracle"].keys()

@@ -157,14 +157,15 @@ def test_generator_candidates_unique(style, seed):
 
 
 def _reason_engine(cfg, batch_size, model="nvsa", consts=None,
-                   variants=None):
+                   variants=None, buckets=None):
     from repro.configs import base as cbase
     from repro.serve.reason import ReasonConfig
 
     # trace_graph=False: these tests exercise execution equivalence; the
     # graph/buffer lowering itself is covered by test_schedule.py
     return cbase.reason_engine(model, cfg,
-                               ReasonConfig(batch_size=batch_size),
+                               ReasonConfig(batch_size=batch_size,
+                                            buckets=buckets),
                                consts=consts, variants=variants,
                                trace_graph=False)
 
@@ -265,6 +266,51 @@ def test_served_answer_independent_of_admission_group():
                                    grouped[req.uid].answer_logprobs,
                                    atol=1e-5)
         assert solo[req.uid].answer == grouped[req.uid].answer
+
+
+@pytest.mark.parametrize("model,variant", [
+    ("nvsa", "cnn"), ("prae", "oracle"), ("mimonet", "default"),
+    ("lvrf", "oracle")])
+def test_served_answer_bitwise_invariant_across_buckets(model, variant):
+    """Shape-bucketing regression (extends the PR 3 admission-group
+    independence test): a request's served answer must be BIT-identical
+    whether it arrives in a full batch, a padded partial batch, or any
+    compiled bucket size >= 2 — for every registered workload.  (Bucket 1
+    is excluded from the default ladder precisely because XLA's
+    degenerate-batch lowerings break bit-equality; see
+    frontdoor.pow2_buckets.)"""
+    from repro.configs import base as cbase
+
+    entry = cbase.REASON_WORKLOADS[model]
+    cfg = entry.make_config(d=64)
+    consts = {"params": None, "books": None} if (model, variant) == \
+        ("prae", "oracle") else entry.make_consts(cfg, jax.random.PRNGKey(0))
+    factory, _ = entry.make_requests(cfg, 5, seed=21)
+    reqs = list(factory())
+
+    # reference: all 5 requests in one full (unpadded) admission group
+    full = _reason_engine(cfg, batch_size=5, model=model, consts=consts,
+                          variants=(variant,)).run(consts, reqs,
+                                                   variant=variant)
+    # bucketed: groups of 4 (bucket 4) and 1 (bucket 2, one padded row)
+    eng = _reason_engine(cfg, batch_size=4, model=model, consts=consts,
+                         variants=(variant,), buckets=(2, 4))
+    bucketed = eng.run(consts, reqs, variant=variant)
+    # padded partial at the same bucket: 3 requests ride bucket 4
+    partial = eng.run(consts, reqs[:3], variant=variant)
+    assert eng.schedules[variant].batch_buckets == (2, 4)
+    assert len({r.batch for r in bucketed.values()}) == 2  # two groups
+
+    for uid in range(5):
+        np.testing.assert_array_equal(
+            full[uid].answer_logprobs, bucketed[uid].answer_logprobs,
+            err_msg=f"{model}/{variant} uid {uid} full-vs-bucketed")
+        assert np.array_equal(full[uid].answer, bucketed[uid].answer)
+    for uid in range(3):
+        np.testing.assert_array_equal(
+            full[uid].answer_logprobs, partial[uid].answer_logprobs,
+            err_msg=f"{model}/{variant} uid {uid} full-vs-padded-partial")
+        assert np.array_equal(full[uid].answer, partial[uid].answer)
 
 
 def test_bn_ema_updates_running_stats():

@@ -15,7 +15,8 @@ from repro.configs import base as cbase
 from repro.nn import init as nninit
 from repro.serve.reason import ReasonConfig, ReasonRequest
 from repro.serve.schedule import (STREAMS, StageSpec, StagedSchedule,
-                                  compile_schedule, predicted_overlap)
+                                  _fmt_bytes, compile_schedule,
+                                  predicted_overlap)
 
 
 def test_registry_covers_all_workloads():
@@ -138,9 +139,9 @@ def test_mimonet_served_matches_offline():
         off_logp = shifted - np.log(np.exp(shifted).sum(-1, keepdims=True))
         np.testing.assert_allclose(res[i].answer_logprobs, off_logp,
                                    atol=1e-5)
-    # sequential run exposes the per-stage timing breakdown
+    # sequential run exposes the per-stage timing breakdown (per variant)
     eng.run(consts, factory(), schedule="sequential")
-    assert set(eng.stats["stage_time_s"]) == set(
+    assert set(eng.stats["stage_time_s"]["default"]) == set(
         eng.schedules["default"].stage_names)
 
 
@@ -205,3 +206,52 @@ def test_compile_schedule_rejects_bad_stages():
            StageSpec("s", "vsa", lambda c, b: b)]
     with pytest.raises(ValueError, match="duplicate stage names"):
         compile_schedule("w", dup, lambda r: r, lambda o, i: {})
+    one = [StageSpec("s", "nn", lambda c, b: b)]
+    for bad in ((4, 2), (2, 2, 4), (0, 2)):
+        with pytest.raises(ValueError, match="batch_buckets"):
+            compile_schedule("w", one, lambda r: r, lambda o, i: {},
+                             batch_buckets=bad)
+
+
+def test_fmt_bytes_boundaries():
+    """Unit boundaries must never render a value >= 1024 of the smaller
+    unit (1048575 bytes is '1.0MB', not '1024.0KB')."""
+    assert _fmt_bytes(0) == "0B"
+    assert _fmt_bytes(1023) == "1023B"
+    assert _fmt_bytes(1024) == "1.0KB"
+    assert _fmt_bytes(1048575) == "1.0MB"          # the old '1024.0KB' bug
+    assert _fmt_bytes(1048576) == "1.0MB"
+    assert _fmt_bytes(1024 ** 3 - 1) == "1.0GB"
+    assert _fmt_bytes(1024 ** 3) == "1.0GB"
+    assert _fmt_bytes(1536) == "1.5KB"
+    # GB is the cap unit: values >= 1024GB stay in GB by design
+    assert _fmt_bytes(2 ** 40) == "1024.0GB"
+    assert _fmt_bytes(5 * 1024 ** 4) == "5120.0GB"
+    # values just inside the rounding window promote instead of rendering
+    # "1024.0" of the smaller unit
+    assert _fmt_bytes(1048524) == "1023.9KB"        # 1023.949KB: stays KB
+    assert _fmt_bytes(1048526) == "1.0MB"           # 1023.951KB: promotes
+    assert _fmt_bytes(int(1023.96 * 1024 ** 2)) == "1.0GB"
+
+
+def test_predicted_overlap_traces_lazily_without_trace_graph():
+    """A schedule compiled with input_specs but trace_graph=False used to
+    raise a misleading 'compiled without input_specs'; stage costs (and
+    the composed-pipeline graph) must instead be traced on first use."""
+    entry = cbase.REASON_WORKLOADS["nvsa"]
+    cfg = entry.make_config(d=64)
+    sched = cbase.compile_reason_schedule("nvsa", cfg, batch_size=2,
+                                          trace_graph=False)
+    assert sched.stage_costs == () and sched.graph is None
+    ovl = predicted_overlap(sched, n_batches=4)
+    assert ovl["speedup"] >= 1.0
+    # memoized on the schedule, matching an eagerly-traced compile
+    assert len(sched.stage_costs) == len(sched.stages)
+    assert sched.graph is not None and sched.source == "trace"
+    eager = cbase.compile_reason_schedule("nvsa", cfg, batch_size=2)
+    assert predicted_overlap(eager, n_batches=4) == ovl
+    # no input specs at all is still a (correctly-worded) error
+    bare = compile_schedule("w", [StageSpec("s", "nn", lambda c, b: b)],
+                            lambda r: r, lambda o, i: {})
+    with pytest.raises(ValueError, match="without input_specs"):
+        predicted_overlap(bare)
