@@ -53,6 +53,17 @@ def _best_of(fn, iters: int = 3) -> float:
     return best
 
 
+def _dse_point(schedule, max_pes: int = 4096):
+    """Explore the schedule's traced dataflow graph; returns (DesignConfig,
+    comma-free provenance tag) so every BENCH row can record which DSE
+    point served its measurement."""
+    from repro.core import dse
+    from repro.serve import schedule as sch
+
+    design = dse.explore(sch.ensure_graph(schedule), max_pes=max_pes)
+    return design, f"dse={design.tag()}"
+
+
 def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
                d: int = 64, iters: int = 3):
     from repro.configs import base as cbase
@@ -65,8 +76,10 @@ def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
                               consts=consts)
     default = entry.variants[0]
     sched = eng.schedules[default]
+    design, dse_tag = _dse_point(sched)
 
-    rows = []
+    rows = [(f"nsai/{model}/dse/t_best_cycles", design.t_best,
+             f"{dse_tag} points={design.searched_points}")]
     n = problems
 
     def stream(count, start=0):
@@ -74,8 +87,8 @@ def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
         return factory()
 
     # warm both schedules' jit caches (shared engine instance)
-    eng.run(consts, stream(batch_size), schedule="overlap")
-    eng.run(consts, stream(batch_size), schedule="sequential")
+    eng.run(stream(batch_size), schedule="overlap")
+    eng.run(stream(batch_size), schedule="sequential")
 
     # -- per-stage breakdown (paper Fig. 9's per-unit bars) -----------------
     # time each compiled stage in isolation on pre-staged buffers
@@ -89,18 +102,18 @@ def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
         jax.block_until_ready(staged)
 
     # -- schedules, end to end (ingest -> answer) ---------------------------
-    dt_seq = _best_of(lambda: eng.run(consts, stream(n),
+    dt_seq = _best_of(lambda: eng.run(stream(n),
                                       schedule="sequential"), iters)
     rows.append((f"nsai/{model}/sequential/problems_s", n / dt_seq,
                  "sync after every stage"))
-    dt_ovl = _best_of(lambda: eng.run(consts, stream(n),
+    dt_ovl = _best_of(lambda: eng.run(stream(n),
                                       schedule="overlap"), iters)
     rows.append((f"nsai/{model}/overlap/problems_s", n / dt_ovl,
                  "double-buffered"))
     rows.append((f"nsai/{model}/overlap_vs_sequential/speedup",
                  dt_seq / dt_ovl,
                  f"problems={n} batch={batch_size} "
-                 f"pipeline={'->'.join(sched.stage_names)}"))
+                 f"pipeline={'->'.join(sched.stage_names)} {dse_tag}"))
 
     if model == "nvsa":
         rows.extend(_bench_nvsa_extras(cbase, entry, cfg, consts, eng,
@@ -117,9 +130,9 @@ def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
     rows = []
     # symbolic-stream-only serving (oracle variant)
     factory, truth = entry.make_requests(cfg, n, seed=9000)
-    res = eng.run(consts, factory(), schedule="overlap", variant="oracle")
+    res = eng.run(factory(), schedule="overlap", variant="oracle")
     acc = entry.score(res, truth())
-    dt = _best_of(lambda: eng.run(consts, stream(n), schedule="overlap",
+    dt = _best_of(lambda: eng.run(stream(n), schedule="overlap",
                                   variant="oracle"), iters)
     rows.append(("nsai/nvsa/oracle_overlap/problems_s", n / dt,
                  f"accuracy={acc:.3f} circ path={vsa_ops.dispatch_path(d)}"))
@@ -130,8 +143,8 @@ def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
     mp_eng = cbase.reason_engine("nvsa", mp_cfg,
                                  ReasonConfig(batch_size=batch_size),
                                  consts=consts, variants=("cnn",))
-    mp_eng.run(consts, stream(batch_size), schedule="overlap")
-    dt = _best_of(lambda: mp_eng.run(consts, stream(n),
+    mp_eng.run(stream(batch_size), schedule="overlap")
+    dt = _best_of(lambda: mp_eng.run(stream(n),
                                      schedule="overlap"), iters)
     rows.append(("nsai/nvsa/mixed_int8_int4_overlap/problems_s", n / dt,
                  "nn=int8 via qmatmul / symb=int4"))
@@ -143,31 +156,47 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
                      deadline_ms: float = 10.0):
     """Latency vs offered load through the online front-door.
 
-    Offered rates are fractions of the engine's *measured* offline
-    overlapped throughput on this host, so the sweep spans under- and
-    over-load on any machine.  Each point serves ``problems`` Poisson
-    arrivals per schedule; every bucket's jit entry is compiled before
-    timing, so warmup never lands in a latency percentile.
+    The engine's serving configuration (batch buckets, in-flight window
+    depth) is DSE-derived from the workload's traced dataflow graph via
+    ``core.dse.serving_plan`` — every row's ``derived`` field records the
+    DSE point that served it.  Offered rates are fractions of the
+    engine's *measured* offline overlapped throughput on this host, so
+    the sweep spans under- and over-load on any machine.  Each point
+    serves ``problems`` Poisson arrivals per schedule (the schedule knob
+    is swept explicitly to keep the overlap-vs-sequential online
+    comparison); every bucket's jit entry is compiled before timing, so
+    warmup never lands in a latency percentile.
     """
+    import dataclasses
+
     from repro.configs import base as cbase
+    from repro.core import dse
     from repro.serve import frontdoor as fd
     from repro.serve.reason import ReasonConfig
 
     entry = cbase.REASON_WORKLOADS[model]
     cfg = entry.make_config(d=d)
     consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
-    buckets = fd.pow2_buckets(batch_size)
+    # DSE-derived serving plan (generator -> architecture, as deploy() does)
+    probe = cbase.compile_reason_schedule(
+        model, cfg, variant=entry.variants[0], batch_size=batch_size,
+        trace_graph=False)
+    design, dse_tag = _dse_point(probe)
+    plan = dse.serving_plan(design, max_batch=batch_size)
+    buckets = plan.buckets
     eng = cbase.reason_engine(
-        model, cfg, ReasonConfig(batch_size=batch_size, buckets=buckets),
+        model, cfg,
+        ReasonConfig(batch_size=plan.batch_size, buckets=buckets,
+                     max_inflight=plan.max_inflight, schedule=plan.schedule),
         consts=consts, variants=(entry.variants[0],), trace_graph=False)
     # warm every bucket's jit entry (schedules share the same jit_stages,
     # so one pass covers overlap and sequential alike)
     for b in buckets:
         warm, _ = entry.make_requests(cfg, b, seed=7000 + b)
-        eng.run(consts, warm())
+        eng.run(warm())
 
     factory, _ = entry.make_requests(cfg, problems, seed=8000)
-    eng.run(consts, factory())
+    eng.run(factory())
     base_pps = eng.last_run["problems_per_s"]
 
     rows = []
@@ -176,10 +205,12 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
         for sched in ("overlap", "sequential"):
             stream, _ = entry.make_requests(cfg, problems,
                                             seed=8100 + int(frac * 100))
+            # sweep the schedule knob on the shared engine (jit caches live
+            # on the StagedSchedules, so no recompilation)
+            eng.cfg = dataclasses.replace(eng.cfg, schedule=sched)
             door = fd.FrontDoor(
-                {model: eng}, {model: consts},
-                fd.FrontDoorConfig(deadline_s=deadline_ms / 1e3,
-                                   schedule=sched))
+                {model: eng},
+                fd.FrontDoorConfig(deadline_s=deadline_ms / 1e3))
             rep = door.serve(fd.poisson_arrivals(model, stream(), rate,
                                                  seed=int(frac * 100)))
             q = rep.percentiles("queue_s", model)
@@ -188,13 +219,14 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
             pre = f"nsai/{model}/frontdoor/{sched}/load_{frac:g}"
             # keep the derived column comma-free: rows print as 3-field CSV
             derived = (f"poisson {rate:.1f} req/s deadline={deadline_ms:g}ms "
-                       f"buckets={'/'.join(map(str, buckets))}")
+                       f"buckets={'/'.join(map(str, buckets))} "
+                       f"inflight={plan.max_inflight} {dse_tag}")
             hist = " ".join(f"{b}x{c}" for b, c in
                             rep.bucket_histogram(model).items())
             rows += [
                 (f"{pre}/offered_rps", rate, derived),
                 (f"{pre}/problems_s", rep.throughput_rps(model),
-                 f"served={len(rep.latencies)} groups={hist}"),
+                 f"served={len(rep.latencies)} groups={hist} {dse_tag}"),
                 (f"{pre}/queue_p50_ms", q["p50"] * 1e3, "arrival->dispatch"),
                 (f"{pre}/queue_p95_ms", q["p95"] * 1e3, "arrival->dispatch"),
                 (f"{pre}/service_p50_ms", s["p50"] * 1e3, "dispatch->done"),

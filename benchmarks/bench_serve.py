@@ -52,10 +52,11 @@ def bench_serve():
     rows.append(("serve/lockstep_4x32/tok_s", n_req * new / dt_lock,
                  f"dispatches={new}"))
 
-    # fused scan blocks
-    engine = Engine(step, init_caches, scfg)
-    engine.generate(params, prompts)  # warm up compile
-    out, dt_fused = _best_of(lambda: engine.generate(params, prompts))
+    # fused scan blocks (params bound: the engine implements the runtime
+    # protocol; generate/run no longer take params)
+    engine = Engine(step, init_caches, scfg, params=params)
+    engine.generate(prompts)  # warm up compile
+    out, dt_fused = _best_of(lambda: engine.generate(prompts))
     assert np.array_equal(out, ref), "fused decode diverged from lockstep"
     rows.append(("serve/fused_scan_4x32/tok_s", n_req * new / dt_fused,
                  f"dispatches={-(-new // scfg.decode_block)}"))
@@ -64,14 +65,14 @@ def bench_serve():
 
     # continuous batching: ragged 8-request queue through the 4-slot pool
     rng = np.random.default_rng(1)
-    cb = Engine(step, init_caches, scfg)
+    cb = Engine(step, init_caches, scfg, params=params)
     reqs = [Request(uid=i, prompt=rng.integers(
         0, cfg.vocab, (int(rng.integers(4, 16)),)).astype(np.int32),
         max_new_tokens=int(rng.integers(8, new))) for i in range(8)]
-    cb.run(params, [Request(uid=99, prompt=reqs[0].prompt, max_new_tokens=4)])
+    cb.run([Request(uid=99, prompt=reqs[0].prompt, max_new_tokens=4)])
     cb.stats.update(slot_steps=0, active_slot_steps=0)  # warm-up off the books
     t0 = time.perf_counter()
-    results = cb.run(params, reqs)
+    results = cb.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results.values())
     rows.append(("serve/continuous_8req_4slot/tok_s", toks / dt,

@@ -28,10 +28,13 @@ def serve_llama():
     cfg = arch.make_smoke()
     params = nninit.materialize(cbase.model_spec(arch, cfg), jax.random.PRNGKey(0))
     step, init_caches = cbase.serve_fns(arch, cfg, max_len=64)
+    # params are bound at construction: the engine implements the unified
+    # runtime protocol (submit/drain_ready/drain_all), and run() is the
+    # offline loop over it
     engine = Engine(step, init_caches,
                     ServeConfig(max_new_tokens=16, max_slots=4, max_len=64,
                                 decode_block=8, temperature=0.7, top_k=32,
-                                eos_id=1, seed=0))
+                                eos_id=1, seed=0), params=params)
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -39,7 +42,7 @@ def serve_llama():
                                         ).astype(np.int32))
             for i in range(8)]
     t0 = time.time()
-    results = engine.run(params, reqs)
+    results = engine.run(reqs)
     dt = time.time() - t0
     done = sum(1 for r in results.values())
     toks = sum(len(r.tokens) for r in results.values())

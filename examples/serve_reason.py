@@ -19,11 +19,15 @@ Part 3: every registered workload through the same path — PrAE (PMF-table
         registry, so a new workload shows up here by registration alone.
 Part 4: Tab. IV mixed precision on NVSA (nn int8 through the Pallas
         qmatmul kernel, symbolic int4) behind the same engine.
-Part 5: ONLINE serving — nvsa + mimonet multiplexed behind the
-        deadline-batched, shape-bucketed front-door (``serve.frontdoor``)
-        under Poisson arrivals: partial admission groups ride small
-        compiled buckets, and per-request queue/service latency
-        percentiles come back in the report.
+Part 5: ONLINE mixed serving via ``repro.serve.deploy`` — an LM arch
+        (stablelm-3b) and two NSAI workloads (nvsa + mimonet) deployed
+        behind ONE deadline-batched, shape-bucketed front-door under
+        Poisson arrivals.  The NSAI engines' serving knobs (batch
+        buckets, in-flight depth, overlap-vs-sequential schedule) are
+        DSE-derived from each workload's traced dataflow graph — the
+        paper's generator -> architecture loop — and the report covers
+        both request classes (tokens/s for LM rows, problems/s for NSAI
+        rows) with per-request queue/service latency percentiles.
 
 Run:  PYTHONPATH=src python examples/serve_reason.py
 """
@@ -53,11 +57,11 @@ def main():
           f"{engine.schedules['cnn'].describe()}")
     stream, truth = entry.make_requests(cfg, N_PROBLEMS, seed=100)
     warm, _ = entry.make_requests(cfg, BATCH, seed=0)
-    engine.run(consts, warm())  # warm up compile
-    engine.run(consts, warm(), schedule="sequential")
+    engine.run(warm())  # warm up compile
+    engine.run(warm(), schedule="sequential")
     for sched in ("sequential", "overlap"):
         t0 = time.time()
-        res = engine.run(consts, stream(), schedule=sched)
+        res = engine.run(stream(), schedule=sched)
         dt = time.time() - t0
         print(f"[serve_reason] nvsa/{sched}: {N_PROBLEMS} problems in "
               f"{dt:.2f}s ({N_PROBLEMS / dt:.1f} problems/s)")
@@ -68,7 +72,7 @@ def main():
           f"panel {first.answer}, logp {first.answer_logprobs.round(2)}")
 
     # Part 2 — symbolic stream only: oracle variant, accuracy 1.0
-    res = engine.run(consts, stream(), variant="oracle")
+    res = engine.run(stream(), variant="oracle")
     print(f"[serve_reason] oracle variant (symbolic stream only): "
           f"accuracy {entry.score(res, truth()):.3f}")
 
@@ -83,7 +87,7 @@ def main():
                                   consts=mconsts, variants=(variant,))
         mstream, mtruth = e.make_requests(mcfg, N_PROBLEMS, seed=100)
         t0 = time.time()
-        res = eng.run(mconsts, mstream())
+        res = eng.run(mstream())
         dt = time.time() - t0
         print(f"[serve_reason] {model}/{variant}: "
               f"{eng.schedules[variant].describe()}")
@@ -98,36 +102,29 @@ def main():
                                  ReasonConfig(batch_size=BATCH),
                                  consts=consts, variants=("cnn",))
     t0 = time.time()
-    mp_eng.run(consts, stream())
+    mp_eng.run(stream())
     print(f"[serve_reason] mixed precision nn=int8(qmatmul)/symb=int4: "
           f"{N_PROBLEMS} problems in {time.time() - t0:.2f}s (memory "
           f"{nvsa.nvsa_memory_bytes(cfg, consts['params']) / nvsa.nvsa_memory_bytes(mp_cfg, consts['params']):.1f}x smaller)")
 
-    # Part 5 — online: two workloads behind one deadline-batched front-door
-    from repro.serve import frontdoor as fd
+    # Part 5 — online mixed LM + NSAI serving through deploy(): the DSE
+    # reads each NSAI workload's traced dataflow graph and emits the
+    # serving configuration; one front-door admits both request classes
+    from repro.serve import Budget, Traffic, deploy
 
-    buckets = fd.pow2_buckets(BATCH)
-    engines, all_consts, streams = {}, {}, []
-    for i, model in enumerate(("nvsa", "mimonet")):
-        e = cbase.REASON_WORKLOADS[model]
-        mcfg = e.make_config(d=D)
-        mconsts = e.make_consts(mcfg, jax.random.PRNGKey(i))
-        eng = cbase.reason_engine(
-            model, mcfg,
-            ReasonConfig(batch_size=BATCH, buckets=buckets),
-            consts=mconsts, variants=(e.variants[0],), trace_graph=False)
-        for b in buckets:  # compile each bucket before taking latencies
-            warm, _ = e.make_requests(mcfg, b, seed=400 + b)
-            eng.run(mconsts, warm())
-        engines[model], all_consts[model] = eng, mconsts
-        mstream, _ = e.make_requests(mcfg, N_PROBLEMS, seed=300 + i)
-        streams.append(fd.poisson_arrivals(model, mstream(), rate_rps=40.0,
-                                           seed=i))
-    door = fd.FrontDoor(engines, all_consts,
-                        fd.FrontDoorConfig(deadline_s=0.02))
-    report = door.serve(fd.merge_arrivals(*streams))
+    deployment = deploy(
+        ["stablelm-3b", "nvsa", "mimonet"],
+        traffic=Traffic(rate_rps=40.0, deadline_s=0.02),
+        budget=Budget(max_pes=4096, max_batch=BATCH, max_slots=2,
+                      max_len=64, max_new_tokens=8),
+        options={"nvsa": {"d": D}, "mimonet": {"d": D}})
+    for line in deployment.summary().splitlines():
+        print(f"[serve_reason] deploy: {line}")
+    deployment.warmup()  # compile every serving shape before latencies
+    arrivals, _ = deployment.synthetic_traffic(N_PROBLEMS)
+    report = deployment.serve(arrivals)
     print(f"[serve_reason] front-door: poisson 40 req/s per model, "
-          f"deadline 20ms, buckets {buckets}")
+          f"deadline 20ms — one report, both request classes:")
     for line in report.summary().splitlines():
         print(f"[serve_reason]   {line}")
 

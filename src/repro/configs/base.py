@@ -645,7 +645,11 @@ def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
                   trace_graph: bool = True):
     """Compile all (or the given) variants of a workload and wrap them in
     the generic N-stage ``ReasonEngine``.  ``reason_cfg.buckets`` (when
-    set) compiles every variant with that tuple of batch-size buckets."""
+    set) compiles every variant with that tuple of batch-size buckets.
+    ``consts`` (the workload's constant pytree) is bound onto the engine,
+    which therefore implements the consts-free runtime protocol; with
+    ``consts=None`` the schedules compile against abstract shapes and the
+    engine can only be inspected, not served."""
     from repro.serve.reason import ReasonConfig, ReasonEngine
 
     entry = REASON_WORKLOADS.get(model)
@@ -659,7 +663,28 @@ def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
             batch_size=reason_cfg.buckets or reason_cfg.batch_size,
             trace_graph=trace_graph)
         for v in (variants or entry.variants)}
-    return ReasonEngine(schedules, reason_cfg)
+    return ReasonEngine(schedules, reason_cfg, consts=consts)
+
+
+def lm_engine(arch_id: str, serve_cfg=None, key=None):
+    """Materialize a smoke-scale arch and wrap it in the slot-pool LM
+    ``Engine`` with params bound — the LM counterpart of
+    :func:`reason_engine`, so both engine classes come out implementing
+    the unified runtime protocol.  Returns ``(engine, model_cfg)``
+    (callers need ``model_cfg.vocab`` to build token traffic)."""
+    import jax as _jax
+
+    from repro.configs import ARCHS
+    from repro.serve.engine import Engine, ServeConfig
+
+    arch = ARCHS[arch_id]
+    cfg = arch.make_smoke()
+    serve_cfg = serve_cfg or ServeConfig()
+    params = nninit.materialize(model_spec(arch, cfg),
+                                key if key is not None
+                                else _jax.random.PRNGKey(0))
+    step, init_caches = serve_fns(arch, cfg, max_len=serve_cfg.max_len)
+    return Engine(step, init_caches, serve_cfg, params=params), cfg
 
 
 def param_count(arch: ArchSpec, cfg) -> int:

@@ -47,6 +47,13 @@ class DesignConfig:
     def t_best(self) -> int:
         return min(self.t_para, self.t_seq) if self.mode == "parallel" else self.t_seq
 
+    def tag(self) -> str:
+        """Compact comma-free provenance tag (``HxWxN/nl:nv/mode``) —
+        recorded in BENCH_*.json rows and deployment reports so every
+        measurement says which DSE point served it."""
+        return (f"{self.H}x{self.W}x{self.N}"
+                f"/{self.nl_bar}:{self.nv_bar}/{self.mode}")
+
     def summary(self) -> dict:
         return {
             "AdArray (H, W, N)": (self.H, self.W, self.N),
@@ -188,6 +195,70 @@ def explore(df: DataflowGraph, max_pes: int = 16384, iter_max: int = 8,
     cfg = phase2(df, cfg, iter_max)
     mem = ana.memory_plan(df.graph, cfg.t_best, simd_lanes)
     return dataclasses.replace(cfg, mem=mem)
+
+
+# ---------------------------------------------------------------------------
+# Generator -> serving architecture (the deploy() loop)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """Serving-runtime knobs derived from one explored :class:`DesignConfig`.
+
+    This is the software half of the paper's generator->architecture loop:
+    ``repro.serve.deploy`` traces a workload's dataflow graph, runs
+    :func:`explore` over it, and configures the serving runtime from the
+    winning design point instead of hand-set config fields.
+    """
+
+    batch_size: int               # admission-group ceiling
+    buckets: tuple[int, ...]      # compiled batch-size buckets, ascending
+    max_inflight: int             # depth of the pipelined in-flight window
+    schedule: str                 # overlap | sequential (ReasonConfig knob)
+    design: DesignConfig          # the DSE point the knobs derive from
+
+
+def serving_plan(design: DesignConfig, max_batch: int = 8,
+                 inflight_cap: int = 4, min_bucket: int = 2) -> ServingPlan:
+    """Map an explored design point onto the serving runtime's knobs.
+
+    - **schedule**: Algorithm 1's mode decision carries over directly —
+      a ``parallel`` design (concurrent nn/vsa streams win analytically)
+      serves with the ``overlap`` pipelined schedule; a ``sequential``
+      design (unfolded array wins) serves with the synchronous schedule.
+    - **batch buckets**: the admission width maps requests across the
+      ``N`` sub-arrays, so the group ceiling is the largest power of two
+      <= N (clamped to [min_bucket, max_batch]); the covering-bucket
+      ladder below it comes from ``serve.frontdoor.pow2_buckets`` (whose
+      ``min_bucket=2`` default carries the XLA batch-1 bit-equality
+      caveat — documented there, not re-derived here).
+    - **max_inflight**: the in-flight window depth is the analytical
+      folded-vs-unfolded gain ``t_seq / t_para`` rounded (clamped to
+      [1, inflight_cap]) — the deeper the array's concurrency win, the
+      more groups the host keeps resident; a sequential design pipelines
+      nothing (depth 1).
+    """
+    # lazy import: serve.frontdoor is jax-free and does not import core,
+    # so borrowing its bucket ladder keeps one source of bucket policy
+    from repro.serve.frontdoor import pow2_buckets
+
+    if max_batch < 1 or min_bucket < 1:
+        raise ValueError("max_batch and min_bucket must be >= 1")
+    min_bucket = min(min_bucket, max_batch)
+    schedule = "overlap" if design.mode == "parallel" else "sequential"
+    batch = 1
+    while batch * 2 <= max(1, design.N):
+        batch *= 2
+    batch = max(min_bucket, min(max_batch, batch))
+    buckets = pow2_buckets(batch, min_bucket=min_bucket)
+    if schedule == "sequential":
+        depth = 1
+    else:
+        depth = max(1, min(inflight_cap,
+                           round(design.t_seq / max(1, design.t_para))))
+    return ServingPlan(batch_size=batch, buckets=buckets, max_inflight=depth,
+                       schedule=schedule, design=design)
 
 
 # ---------------------------------------------------------------------------

@@ -1,20 +1,28 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Serving launcher: ``python -m repro.launch.serve --workload <class>``.
 
-Three traffic classes:
+The traffic classes (and their model lists) derive from the serving
+runtime registry — ``repro.serve.runtime.TRAFFIC_CLASSES`` — not a
+hand-listed tuple; adding a workload/arch there is all it takes to show
+up here:
+
 - ``--workload lm`` (default): continuous-batching generation with the
   slot-pool engine (smoke-scale models on CPU; the decode_step is the same
   function the dry-run lowers for the 256/512-chip meshes).
 - ``--workload reason``: batched NSAI reasoning through the generic
   N-stage ReasonEngine.  ``--model`` choices derive from the workload
-  registry (``configs.base.REASON_WORKLOADS``: nvsa, prae, mimonet, lvrf
-  — adding a workload is one registry entry); the pipeline is compiled
-  from the workload's dataflow graph by ``serve.schedule``, with the
-  overlap/sequential schedule and Tab. IV precision knobs exposed, and a
-  per-stage timing breakdown printed for the sequential schedule.
-- ``--workload frontdoor``: *online* NSAI serving — several workload
-  engines (``--models nvsa,mimonet,lvrf``) multiplexed behind one
-  deadline-batched, shape-bucketed front-door (``serve.frontdoor``) fed
-  by per-model Poisson arrival streams at ``--rate`` req/s; reports
+  registry (``configs.base.REASON_WORKLOADS``: nvsa, prae, mimonet, lvrf);
+  the pipeline is compiled from the workload's dataflow graph by
+  ``serve.schedule``, with the overlap/sequential schedule and Tab. IV
+  precision knobs exposed, and a per-stage timing breakdown printed for
+  the sequential schedule.
+- ``--workload frontdoor``: *online mixed* serving through
+  ``repro.serve.deploy`` — any mix of LM archs and NSAI workloads
+  (``--models stablelm-3b,nvsa,mimonet``) behind one deadline-batched,
+  shape-bucketed front-door fed by per-model Poisson arrival streams at
+  ``--rate`` req/s.  The NSAI engines' serving knobs (batch buckets,
+  in-flight depth, schedule) are DSE-derived from each workload's traced
+  dataflow graph under ``--max-pes``; the report covers both request
+  classes (tokens/s for LM rows, problems/s for NSAI rows) plus
   per-model p50/p95/p99 queueing + service latency and bucket usage.
 """
 
@@ -26,10 +34,8 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCHS
 from repro.configs import base as cbase
-from repro.nn import init as nninit
-from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve import runtime as rt
 
 
 def serve_reason(args):
@@ -53,7 +59,7 @@ def serve_reason(args):
 
     stream, truth = entry.make_requests(cfg, args.requests, seed=0)
     t0 = time.time()
-    results = engine.run(consts, stream())
+    results = engine.run(stream())
     dt = time.time() - t0
     acc = entry.score(results, truth())
     # report the config's *actual* precision — workloads without Tab. IV
@@ -76,58 +82,76 @@ def serve_reason(args):
 
 
 def serve_frontdoor(args):
-    from repro.serve import frontdoor as fd
-    from repro.serve.reason import ReasonConfig
+    from repro.serve import Budget, Traffic, deploy
 
-    models = [m.strip() for m in args.models.split(",") if m.strip()]
-    buckets = fd.pow2_buckets(args.batch_size)
-    engines, consts, streams, truths = {}, {}, [], {}
-    for i, model in enumerate(models):
-        entry = cbase.REASON_WORKLOADS[model]
-        cfg = entry.make_config(d=args.d, nn_precision=args.nn_precision,
-                                symb_precision=args.symb_precision)
-        variant = "oracle" if args.oracle else entry.variants[0]
-        if variant not in entry.variants:
-            raise SystemExit(f"{model} has no {variant!r} variant "
-                             f"(available: {entry.variants})")
-        c = entry.make_consts(cfg, jax.random.PRNGKey(i))
-        eng = cbase.reason_engine(
-            model, cfg,
-            ReasonConfig(batch_size=args.batch_size, schedule=args.schedule,
-                         variant=variant, buckets=buckets,
-                         max_inflight=args.max_inflight),
-            consts=c, variants=(variant,), trace_graph=False)
-        for b in buckets:  # compile every bucket before taking latencies
-            warm, _ = entry.make_requests(cfg, b, seed=5000 + b)
-            eng.run(c, warm())
-        engines[model], consts[model] = eng, c
-        stream, truth = entry.make_requests(cfg, args.requests, seed=100 + i)
-        truths[model] = truth
-        streams.append(fd.poisson_arrivals(model, stream(), args.rate,
-                                           seed=i))
-        print(f"[frontdoor] {model}/{variant}: "
-              f"{eng.schedules[variant].describe()}")
-    door = fd.FrontDoor(engines, consts, fd.FrontDoorConfig(
-        deadline_s=args.deadline_ms / 1e3, schedule=args.schedule))
+    models = rt.resolve_models(
+        "frontdoor", [m.strip() for m in args.models.split(",") if m.strip()])
+    nsai = {m for m in models if m in cbase.REASON_WORKLOADS}
+    options = {m: {"d": args.d, "nn_precision": args.nn_precision,
+                   "symb_precision": args.symb_precision,
+                   **({"variant": "oracle"} if args.oracle else {})}
+               for m in nsai}
+    deployment = deploy(
+        models,
+        traffic=Traffic(rate_rps=args.rate,
+                        deadline_s=args.deadline_ms / 1e3),
+        budget=Budget(max_pes=args.max_pes, max_batch=args.batch_size,
+                      inflight_cap=args.max_inflight,
+                      max_slots=args.slots, max_len=args.cache_len,
+                      decode_block=args.decode_block,
+                      max_new_tokens=args.max_new),
+        options=options)
+    for line in deployment.summary().splitlines():
+        print(f"[deploy] {line}")
+    deployment.warmup()  # compile every serving shape before taking latencies
     print(f"[frontdoor] {len(models)} models x {args.requests} requests, "
           f"poisson {args.rate:.1f} req/s each, deadline "
-          f"{args.deadline_ms:.0f}ms, buckets {buckets}, "
-          f"max_inflight={args.max_inflight}")
-    report = door.serve(fd.merge_arrivals(*streams))
+          f"{args.deadline_ms:.0f}ms")
+    arrivals, truths = deployment.synthetic_traffic(args.requests)
+    report = deployment.serve(arrivals)
     for line in report.summary().splitlines():
         print(f"[frontdoor] {line}")
-    for model in models:
+    for model in sorted(truths):
         acc = cbase.REASON_WORKLOADS[model].score(report.results[model],
                                                   truths[model]())
         print(f"[frontdoor] {model} accuracy {acc:.3f}")
     return report
 
 
+def serve_lm(args):
+    from repro.serve.engine import Request, ServeConfig
+
+    eng, cfg = cbase.lm_engine(
+        args.arch,
+        ServeConfig(max_new_tokens=args.max_new, max_slots=args.slots,
+                    max_len=args.cache_len, decode_block=args.decode_block,
+                    temperature=args.temperature, top_k=args.top_k,
+                    eos_id=args.eos_id))
+    # (stateful_prefill for rwkv/griffin is forced by the serve_fns tag)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab, (args.prompt_len,)).astype(np.int32))
+        for i in range(args.requests)]
+    t0 = time.time()
+    results = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.tokens) for r in results.values())
+    print(f"[serve] arch={args.arch} requests={args.requests} "
+          f"slots={args.slots} prompt={args.prompt_len} new={args.max_new}")
+    print(f"[serve] {dt:.1f}s total, {toks/dt:.1f} tok/s, "
+          f"slot utilization {eng.utilization():.0%} (CPU smoke config)")
+    print(f"[serve] sample output ids: {results[0].tokens[:12].tolist()}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
+    # traffic classes + per-class model lists derive from the runtime
+    # registry (repro.serve.runtime.TRAFFIC_CLASSES)
     ap.add_argument("--workload", default="lm",
-                    choices=("lm", "reason", "frontdoor"))
-    ap.add_argument("--arch", default="llama3.2-3b", choices=sorted(ARCHS))
+                    choices=sorted(rt.TRAFFIC_CLASSES))
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=sorted(rt.TRAFFIC_CLASSES["lm"].models()))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -139,7 +163,7 @@ def main():
     ap.add_argument("--eos-id", type=int, default=None)
     # reasoning workload knobs (--model choices derive from the registry)
     ap.add_argument("--model", default="nvsa",
-                    choices=sorted(cbase.REASON_WORKLOADS))
+                    choices=sorted(rt.TRAFFIC_CLASSES["reason"].models()))
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--schedule", default="overlap",
                     choices=("overlap", "sequential"))
@@ -150,52 +174,25 @@ def main():
                     choices=("fp32", "bf16", "int8", "int4"))
     ap.add_argument("--oracle", action="store_true",
                     help="ground-truth perception (symbolic stream only)")
-    # online front-door knobs (--workload frontdoor)
+    # online front-door knobs (--workload frontdoor, served via deploy())
     ap.add_argument("--models", default="nvsa,mimonet,lvrf",
-                    help="comma list of workloads multiplexed behind the "
-                         "front-door")
+                    help="comma list of workloads (NSAI and/or LM archs) "
+                         "multiplexed behind the front-door")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="per-model Poisson offered load, req/s")
     ap.add_argument("--deadline-ms", type=float, default=20.0,
                     help="admission-group deadline after first arrival")
-    ap.add_argument("--max-inflight", type=int, default=1,
-                    help="dispatched-but-undrained groups per engine")
+    ap.add_argument("--max-inflight", type=int, default=4,
+                    help="cap on the DSE-derived in-flight window depth")
+    ap.add_argument("--max-pes", type=int, default=4096,
+                    help="AdArray PE budget handed to the DSE")
     args = ap.parse_args()
 
     if args.workload == "reason":
         return serve_reason(args)
     if args.workload == "frontdoor":
         return serve_frontdoor(args)
-
-    arch = ARCHS[args.arch]
-    cfg = arch.make_smoke()
-    params = nninit.materialize(cbase.model_spec(arch, cfg),
-                                jax.random.PRNGKey(0))
-    try:
-        step, init_caches = cbase.serve_fns(arch, cfg, max_len=args.cache_len)
-    except NotImplementedError as e:
-        raise SystemExit(str(e))
-    engine = Engine(step, init_caches, ServeConfig(
-        max_new_tokens=args.max_new, max_slots=args.slots,
-        max_len=args.cache_len, decode_block=args.decode_block,
-        temperature=args.temperature, top_k=args.top_k, eos_id=args.eos_id))
-    # (stateful_prefill for rwkv/griffin is forced by the serve_fns tag)
-
-    vocab = cfg.vocab  # serve_fns already rejected vlm/encdec kinds
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(
-        0, vocab, (args.prompt_len,)).astype(np.int32))
-        for i in range(args.requests)]
-    t0 = time.time()
-    results = engine.run(params, reqs)
-    dt = time.time() - t0
-    toks = sum(len(r.tokens) for r in results.values())
-    print(f"[serve] arch={args.arch} requests={args.requests} "
-          f"slots={args.slots} prompt={args.prompt_len} new={args.max_new}")
-    print(f"[serve] {dt:.1f}s total, {toks/dt:.1f} tok/s, "
-          f"slot utilization {engine.utilization():.0%} (CPU smoke config)")
-    print(f"[serve] sample output ids: {results[0].tokens[:12].tolist()}")
-    return results
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

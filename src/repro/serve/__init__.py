@@ -1,0 +1,22 @@
+"""The serving runtime package.
+
+One engine protocol (``serve.runtime.EngineProtocol``) serves every
+traffic class: the slot-pool LM ``Engine`` (``serve.engine``), the staged
+NSAI ``ReasonEngine`` (``serve.reason``), the deadline-batched
+``FrontDoor`` admission layer over any mix of them (``serve.frontdoor``),
+and ``deploy()`` — the DSE-driven generator->architecture entry point.
+
+Only lightweight names are imported eagerly; engine modules (which pull
+in jax) load on first use.
+"""
+
+from repro.serve.deploy import Budget, Deployment, Traffic, deploy
+from repro.serve.runtime import (EngineProtocol, GroupRecord,
+                                 TRAFFIC_CLASSES, TrafficClass,
+                                 resolve_models, work_unit_name, work_units)
+
+__all__ = [
+    "Budget", "Deployment", "EngineProtocol", "GroupRecord",
+    "TRAFFIC_CLASSES", "Traffic", "TrafficClass", "deploy",
+    "resolve_models", "work_unit_name", "work_units",
+]

@@ -1,0 +1,279 @@
+"""``deploy()``: the paper's generator -> serving-architecture loop.
+
+NSFlow's headline claim (paper Sec III, V) is *end-to-end*: a design
+architecture generator reads the workload's dataflow dependencies and
+emits the serving architecture.  This module closes that loop in the
+actual serving path:
+
+1. **trace** — each NSAI workload's staged pipeline is compiled and its
+   :class:`~repro.core.dataflow.DataflowGraph` traced from the composed
+   stages (``serve.schedule.ensure_graph`` — the same jaxpr-derived graph
+   the analytic side consumes).
+2. **explore** — ``core.dse.explore`` runs Algorithm 1 over the graph
+   under the deployment :class:`Budget` (PE count), picking the AdArray
+   shape, mode, and static nn/vsa partition.
+3. **derive** — ``core.dse.serving_plan`` maps the winning design point
+   onto the serving runtime's knobs (batch buckets, ``max_inflight``,
+   overlap-vs-sequential schedule), and the engines are compiled from the
+   *plan* instead of hand-set ``ReasonConfig`` fields.
+
+LM workloads (token-in/token-out archs) have a single homogeneous nn
+stream — the dual-stream AdArray DSE has nothing to partition — so their
+slot-pool engines are sized from the :class:`Budget` directly (``designs``
+records ``None`` for them).
+
+The result is a :class:`Deployment`: one :class:`~repro.serve.frontdoor.
+FrontDoor` over every engine, so mixed LM + NSAI arrival streams serve
+through a single admission layer.  ``Deployment.report()`` surfaces the
+chosen ``DesignConfig.summary()`` per workload, so benchmark records can
+say which DSE point served each measurement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Mapping
+
+from repro.serve.frontdoor import (ArrivalRequest, FrontDoor,
+                                   FrontDoorConfig, FrontDoorReport,
+                                   merge_arrivals, poisson_arrivals)
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """What the deployment is sized to serve (the ``traffic`` argument)."""
+
+    rate_rps: float = 20.0        # per-model Poisson offered load
+    deadline_s: float = 0.02      # admission-group deadline
+    poll_s: float = 0.002         # front-door drain poll while in flight
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """Resource envelope the generator explores under."""
+
+    max_pes: int = 4096           # AdArray PE budget handed to the DSE
+    max_batch: int = 8            # admission-group ceiling (NSAI buckets)
+    inflight_cap: int = 4         # ceiling on the DSE-derived window depth
+    max_slots: int = 4            # LM slot-pool size
+    max_len: int = 128            # LM per-slot KV capacity
+    decode_block: int = 8         # LM tokens per fused decode dispatch
+    max_new_tokens: int = 24      # LM default generation budget
+
+
+@dataclasses.dataclass
+class Deployment:
+    """One deployed serving runtime: protocol engines + one front-door.
+
+    ``classes[model]`` is the runtime traffic class ("reason" | "lm");
+    ``designs`` / ``plans`` carry the DSE point and derived serving plan
+    for NSAI models (None for LM models); ``configs`` the per-model model
+    config (an ``NVSAConfig``-style workload config or an arch smoke
+    config — whatever the model class builds traffic from).
+    """
+
+    engines: dict[str, Any]
+    door: FrontDoor
+    classes: dict[str, str]
+    designs: dict[str, Any]
+    plans: dict[str, Any]
+    configs: dict[str, Any]
+    variants: dict[str, str | None]
+    traffic: Traffic
+    budget: Budget
+    seed: int = 0
+
+    def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
+        """Serve one merged arrival stream through the front-door."""
+        return self.door.serve(arrivals)
+
+    def report(self) -> dict:
+        """Per-model deployment record, incl. the chosen DSE point."""
+        out = {}
+        for m, eng in self.engines.items():
+            design, plan = self.designs[m], self.plans[m]
+            if self.classes[m] == "reason":
+                serving = {
+                    "batch_size": eng.cfg.batch_size,
+                    "buckets": tuple(eng.cfg.buckets or ()),
+                    "max_inflight": eng.cfg.max_inflight,
+                    "schedule": eng.cfg.schedule,
+                    "variant": self.variants[m],
+                }
+            else:
+                serving = {
+                    "max_slots": eng.cfg.max_slots,
+                    "max_len": eng.cfg.max_len,
+                    "decode_block": eng.cfg.decode_block,
+                }
+            out[m] = {
+                "class": self.classes[m],
+                "design": design.summary() if design is not None else None,
+                "searched_points": getattr(design, "searched_points", None),
+                "serving": serving,
+            }
+        return out
+
+    def summary(self) -> str:
+        """One line per model: class, serving knobs, DSE provenance."""
+        lines = []
+        for m, rec in self.report().items():
+            design = self.designs[m]
+            if design is not None:
+                dse = (f"dse={design.tag()} "
+                       f"({design.searched_points} points)")
+            else:
+                dse = "dse=n/a (single nn stream)"
+            knobs = " ".join(f"{k}={v}" for k, v in rec["serving"].items())
+            lines.append(f"{m} [{rec['class']}]: {knobs} | {dse}")
+        return "\n".join(lines)
+
+    # -- synthetic traffic + warmup (launcher / benchmark helpers) ----------
+
+    def _streams(self, n: int, seed: int):
+        """Per-model lazy request streams + NSAI ground-truth thunks."""
+        import numpy as np
+
+        from repro.configs import base as cbase
+        from repro.serve.engine import Request
+
+        streams, truths = {}, {}
+        for i, m in enumerate(self.engines):
+            if self.classes[m] == "reason":
+                factory, truth = cbase.REASON_WORKLOADS[m].make_requests(
+                    self.configs[m], n, seed=seed + i)
+                streams[m], truths[m] = factory(), truth
+            else:
+                cfg, scfg = self.configs[m], self.engines[m].cfg
+                plen = max(1, min(16, scfg.max_len - scfg.max_new_tokens))
+                rng = np.random.default_rng(seed + i)
+
+                def lm_stream(rng=rng, vocab=cfg.vocab, plen=plen):
+                    for uid in range(n):
+                        yield Request(uid=uid, prompt=rng.integers(
+                            0, vocab, (plen,)).astype(np.int32))
+
+                streams[m] = lm_stream()
+        return streams, truths
+
+    def synthetic_traffic(self, n: int, seed: int = 100):
+        """A merged Poisson arrival feed of ``n`` requests per model at
+        the deployment's offered rate.  Returns ``(arrivals, truths)``
+        where ``truths[model]()`` lazily materializes ground truth for
+        NSAI models (absent for LM models)."""
+        streams, truths = self._streams(n, seed)
+        arrivals = merge_arrivals(*(
+            poisson_arrivals(m, s, self.traffic.rate_rps, seed=seed + j)
+            for j, (m, s) in enumerate(streams.items())))
+        return arrivals, truths
+
+    def warmup(self):
+        """Compile every serving shape before traffic arrives: each NSAI
+        bucket's jit entry and the LM prefill + decode block — so online
+        latency percentiles never include jit compile."""
+        from repro.configs import base as cbase
+
+        for m, eng in self.engines.items():
+            if self.classes[m] == "reason":
+                for b in eng.cfg.buckets or (eng.cfg.batch_size,):
+                    factory, _ = cbase.REASON_WORKLOADS[m].make_requests(
+                        self.configs[m], b, seed=5000 + b)
+                    eng.run(factory())
+            else:
+                streams, _ = self._streams(eng.cfg.max_slots, seed=5000)
+                eng.run(list(streams[m]))
+        return self
+
+
+def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
+           budget: Budget | None = None, *, seed: int = 0,
+           options: Mapping[str, Mapping[str, Any]] | None = None,
+           clock: Callable[[], float] = time.perf_counter,
+           sleep: Callable[[float], None] = time.sleep) -> Deployment:
+    """Deploy a mixed set of workloads behind one front-door.
+
+    ``workloads``: model names from the runtime registry — NSAI workload
+    ids (``configs.base.REASON_WORKLOADS``: nvsa, prae, mimonet, lvrf)
+    and/or servable LM arch ids (llama3.2-3b, stablelm-3b, ...), freely
+    mixed.  ``options[model]`` passes per-model config kwargs (NSAI:
+    ``make_config`` knobs like ``d`` / ``nn_precision`` plus an optional
+    ``variant``; LM: ``ServeConfig`` field overrides).
+
+    For each NSAI workload the serving configuration is *derived*, not
+    hand-set: the staged pipeline's dataflow graph is traced, explored by
+    ``core.dse.explore`` under ``budget.max_pes``, and the winning design
+    point mapped to batch buckets / ``max_inflight`` / schedule by
+    ``core.dse.serving_plan`` (see the module docstring).
+    """
+    import jax
+
+    from repro.configs import base as cbase
+    from repro.core import dse
+    from repro.serve import runtime as rt
+    from repro.serve import schedule as sch
+    from repro.serve.engine import ServeConfig
+    from repro.serve.reason import ReasonConfig
+
+    traffic = traffic or Traffic()
+    budget = budget or Budget()
+    options = dict(options or {})
+    models = rt.resolve_models("frontdoor", workloads)
+    if not models:
+        raise ValueError("deploy needs at least one workload")
+
+    engines: dict[str, Any] = {}
+    classes: dict[str, str] = {}
+    designs: dict[str, Any] = {}
+    plans: dict[str, Any] = {}
+    configs: dict[str, Any] = {}
+    variants: dict[str, str | None] = {}
+    root = jax.random.PRNGKey(seed)
+    for i, m in enumerate(models):
+        key = jax.random.fold_in(root, i)
+        opts = dict(options.get(m, {}))
+        if m in cbase.REASON_WORKLOADS:
+            entry = cbase.REASON_WORKLOADS[m]
+            variant = opts.pop("variant", None) or entry.variants[0]
+            cfg = entry.make_config(**opts)
+            # generator step: trace the exact pipeline the schedule will
+            # execute (abstract consts — nothing materialized yet) and
+            # explore the design space over its dataflow graph
+            probe = cbase.compile_reason_schedule(
+                m, cfg, variant=variant, batch_size=budget.max_batch,
+                trace_graph=False)
+            design = dse.explore(sch.ensure_graph(probe),
+                                 max_pes=budget.max_pes)
+            plan = dse.serving_plan(design, max_batch=budget.max_batch,
+                                    inflight_cap=budget.inflight_cap)
+            consts = entry.make_consts(cfg, key)
+            eng = cbase.reason_engine(
+                m, cfg,
+                ReasonConfig(batch_size=plan.batch_size,
+                             schedule=plan.schedule, variant=variant,
+                             max_inflight=plan.max_inflight,
+                             buckets=plan.buckets),
+                consts=consts, variants=(variant,), trace_graph=False)
+            classes[m], designs[m], plans[m] = "reason", design, plan
+            variants[m] = variant
+        else:
+            # resolve_models already validated every name against the
+            # frontdoor registry, so non-NSAI names are servable LM archs
+            scfg = dataclasses.replace(
+                ServeConfig(max_slots=budget.max_slots,
+                            max_len=budget.max_len,
+                            decode_block=budget.decode_block,
+                            max_new_tokens=budget.max_new_tokens), **opts)
+            eng, cfg = cbase.lm_engine(m, scfg, key=key)
+            classes[m], designs[m], plans[m] = "lm", None, None
+            variants[m] = None
+        engines[m], configs[m] = eng, cfg
+
+    door = FrontDoor(engines,
+                     FrontDoorConfig(deadline_s=traffic.deadline_s,
+                                     poll_s=traffic.poll_s),
+                     clock=clock, sleep=sleep)
+    return Deployment(engines=engines, door=door, classes=classes,
+                      designs=designs, plans=plans, configs=configs,
+                      variants=variants, traffic=traffic, budget=budget,
+                      seed=seed)

@@ -17,6 +17,32 @@ from the queue at the next block boundary.
 This is the NSFlow inter-loop overlap story mapped onto serving: admission
 (prefill) of waiting requests and decode of resident requests are disjoint
 compute streams scheduled back-to-back over one shared slot pool.
+
+The engine implements the unified :class:`~repro.serve.runtime.
+EngineProtocol` natively — model parameters are bound at construction, so
+callers schedule *traffic*, not model state:
+
+- ``submit(group)`` dispatches one admission group: requests join the FIFO
+  queue and free slots are prefilled immediately (the group's
+  :class:`~repro.serve.runtime.GroupRecord` gets ``dispatch_t`` stamped at
+  the prefill of its first admitted request).
+- ``drain_ready()`` advances bounded work — one decode block, with freed
+  slots refilled at the boundary — and hands out whatever requests have
+  finished (``{uid: Result}``).  The front-door calls it while it would
+  otherwise sleep waiting for traffic, which is how decode makes progress
+  between arrivals in the single-threaded serve loop.
+- ``drain_all()`` runs queue + resident slots to completion.
+- ``run(requests)`` is the offline loop over the three calls above
+  (admission groups of ``admission_cap``, then drain everything) — token
+  streams are byte-identical to serving the same uids online because
+  sampling is keyed by (seed, uid, token index), never by slot, admission
+  order, or co-residents.
+
+Stats are split so jit warmup cannot pollute throughput numbers: a run that
+compiled a new shape (the first decode block, a new padded prefill length)
+is accounted under ``stats["warmup"]``, steady-state runs under
+``stats["measured"]`` (which ``tokens_per_s()`` reports), with per-run
+records in ``engine.runs`` — mirroring ``ReasonEngine``.
 """
 
 from __future__ import annotations
@@ -24,11 +50,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable, Sequence
+from typing import Callable, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve import runtime as rt
+from repro.serve.runtime import GroupRecord
 
 
 @dataclasses.dataclass
@@ -83,6 +112,19 @@ class _Slot:
     served: int = 0           # requests completed by this slot (reuse stat)
 
 
+def _fresh_stats(max_slots: int) -> dict:
+    return {
+        "requests": 0, "tokens": 0, "decode_blocks": 0,
+        "slot_steps": 0, "active_slot_steps": 0, "prefills": 0,
+        "decode_time_s": 0.0, "wall_time_s": 0.0,
+        "slots_served": [0] * max_slots,
+        # wall-time split: runs that compiled a new shape (first decode
+        # block, new padded prefill length) land in "warmup", steady-state
+        # runs in "measured" (``work`` == generated tokens for LM traffic)
+        **rt.fresh_split_stats(),
+    }
+
+
 class Engine:
     """Continuous-batching generation over an arch adapter's decode_step.
 
@@ -92,10 +134,17 @@ class Engine:
     caches its per-slot capacity must be at least ``cfg.max_len`` (the engine
     cannot see the length axis generically — ``configs.base.serve_fns`` takes
     the same ``max_len``, pass one value to both).
+
+    ``params`` is the model's parameter pytree, bound at construction so the
+    engine implements the params-free :class:`~repro.serve.runtime.
+    EngineProtocol` (``configs.base.lm_engine`` binds it for you).  ``clock``
+    is the timestamp source for :class:`~repro.serve.runtime.GroupRecord`
+    stamps (the front-door injects its own so queue/service latencies share
+    one origin).
     """
 
     def __init__(self, decode_step: Callable, init_caches: Callable,
-                 cfg: ServeConfig):
+                 cfg: ServeConfig, params=None, clock=time.perf_counter):
         # configs.base.serve_fns tags init_caches for archs whose cumulative
         # recurrent state would be silently corrupted by bucketed pad steps —
         # honor the tag so no caller has to remember to set the flag
@@ -104,6 +153,8 @@ class Engine:
             cfg = dataclasses.replace(cfg, stateful_prefill=True)
         self.cfg = cfg
         self.init_caches = init_caches
+        self.params = params
+        self.clock = clock
         self._raw_decode_step = decode_step
         # batch axis per cache leaf: the one axis whose size tracks `batch`
         # (probed at 2 vs 1 so any max_slots >= 1 works)
@@ -130,12 +181,22 @@ class Engine:
         # not leading may still warn as non-donatable; that's benign)
         self._merge = jax.jit(self._make_merge(), donate_argnums=(0,))
         self._sample_jit = jax.jit(self._sample)
-        self.stats = {
-            "requests": 0, "tokens": 0, "decode_blocks": 0,
-            "slot_steps": 0, "active_slot_steps": 0, "prefills": 0,
-            "decode_time_s": 0.0, "wall_time_s": 0.0,
-            "slots_served": [0] * cfg.max_slots,
-        }
+        self.stats = _fresh_stats(cfg.max_slots)
+        self.runs: list[dict] = []    # per-run records from run()
+        # protocol state: FIFO queue, lazily-allocated slot pool, finished
+        # results awaiting a drain call, and open (undrained) group records
+        self._queue: collections.deque = collections.deque()
+        self._slots = [_Slot() for _ in range(cfg.max_slots)]
+        self._caches = None           # allocated on first submit
+        self._state: dict | None = None
+        self._ready: dict[int, Result] = {}
+        self._resident: set[int] = set()   # queued or slot-resident uids
+        self._open: list[GroupRecord] = []
+        self._rec_left: dict[int, int] = {}    # rec.index -> unfinished uids
+        self._uid_rec: dict[int, GroupRecord] = {}
+        self._next_index = 0
+        self._warmed: set = set()     # compiled shapes (prefill len, decode)
+        self._cold_run = False
 
     # -- device-side pieces -------------------------------------------------
 
@@ -258,15 +319,35 @@ class Engine:
                 f"request {req.uid}: prompt {plen} + budget {budget} "
                 f"exceeds max_len {self.cfg.max_len}")
 
-    def _admit(self, params, caches, queue, slots, state):
+    def _ensure_pool(self):
+        if self._caches is None:
+            cfg = self.cfg
+            self._caches = self.init_caches(cfg.max_slots)
+            self._state = {
+                "tok": np.full((cfg.max_slots,), cfg.pad_id, np.int32),
+                "pos": np.zeros((cfg.max_slots,), np.int32),
+                "active": np.zeros((cfg.max_slots,), bool),
+                "budget": np.zeros((cfg.max_slots,), np.int32),
+                # per-slot PRNG stream roots (keyed by the resident
+                # request's uid) + per-request token counters — see
+                # ServeConfig.seed
+                "keys": np.zeros((cfg.max_slots, 2), np.uint32),
+                "gen": np.zeros((cfg.max_slots,), np.int32),
+            }
+
+    def _active(self) -> bool:
+        return self._state is not None and bool(self._state["active"].any())
+
+    def _admit(self):
         """Fill free slots from the queue with one ragged batched prefill."""
         cfg = self.cfg
+        slots, state = self._slots, self._state
         free = [i for i, s in enumerate(slots) if s.request is None]
-        if not free or not queue:
-            return caches
+        if not free or not self._queue:
+            return
         group = []
-        while free and queue:
-            group.append((free.pop(0), queue.popleft()))
+        while free and self._queue:
+            group.append((free.pop(0), self._queue.popleft()))
         for slot_idx, req in group:
             slots[slot_idx].request = req
             slots[slot_idx].tokens = []
@@ -284,6 +365,10 @@ class Engine:
             plan = [(group, -(-plen_max // bucket) * bucket)]
 
         for items, padded in plan:
+            shape_key = ("prefill", padded)
+            if shape_key not in self._warmed:
+                self._warmed.add(shape_key)
+                self._cold_run = True
             tokens = np.full((cfg.max_slots, padded), cfg.pad_id, np.int32)
             plens = np.zeros((cfg.max_slots,), np.int32)
             admit = np.zeros((cfg.max_slots,), bool)
@@ -292,12 +377,17 @@ class Engine:
                 tokens[slot_idx, : len(p)] = p
                 plens[slot_idx] = len(p)
                 admit[slot_idx] = True
+                # the group's first work hits the device here
+                rec = self._uid_rec.get(req.uid)
+                if rec is not None and rec.dispatch_t is None:
+                    rec.dispatch_t = self.clock()
 
             scratch = self.init_caches(cfg.max_slots)
-            scratch, last_logits = self._prefill(params, scratch,
+            scratch, last_logits = self._prefill(self.params, scratch,
                                                  jnp.asarray(tokens),
                                                  jnp.asarray(plens))
-            caches = self._merge(caches, scratch, jnp.asarray(admit))
+            self._caches = self._merge(self._caches, scratch,
+                                       jnp.asarray(admit))
             self.stats["prefills"] += 1
 
             # first token: sample from each admitted request's own stream at
@@ -316,19 +406,18 @@ class Engine:
                 state["gen"][slot_idx] = 1
             # a first token can already finish the request (EOS / budget 1)
             for slot_idx, req in items:
-                self._push_token(slots, state, slot_idx, int(first[slot_idx]))
-        return caches
+                self._push_token(slot_idx, int(first[slot_idx]))
 
-    def _push_token(self, slots, state, i, token):
+    def _push_token(self, i: int, token: int):
         """Record one generated token; retire the slot when done."""
         cfg = self.cfg
-        slot = slots[i]
+        slot, state = self._slots[i], self._state
         slot.tokens.append(token)
         state["budget"][i] -= 1
         hit_eos = cfg.eos_id is not None and token == cfg.eos_id
         if hit_eos or state["budget"][i] <= 0:
             req = slot.request
-            self._results[req.uid] = Result(
+            self._ready[req.uid] = Result(
                 uid=req.uid, tokens=np.asarray(slot.tokens, np.int32),
                 prompt_len=len(req.prompt), finished_by_eos=hit_eos, slot=i)
             self.stats["requests"] += 1
@@ -337,64 +426,182 @@ class Engine:
             slot.served += 1
             slot.request = None
             state["active"][i] = False
+            self._resident.discard(req.uid)
+            rec = self._uid_rec.pop(req.uid, None)
+            if rec is not None:
+                self._rec_left[rec.index] -= 1
+                if not self._rec_left[rec.index]:
+                    del self._rec_left[rec.index]
+                    rec.done_t = self.clock()
+                    self._open.remove(rec)
 
-    def run(self, params, requests: Sequence[Request]) -> dict[int, Result]:
-        """Serve all requests to completion; returns {uid: Result}."""
-        cfg = self.cfg
-        for req in requests:  # fail fast, before any request is served
+    def _decode_once(self):
+        """One fused decode block over the resident slots."""
+        if "decode" not in self._warmed:
+            self._warmed.add("decode")
+            self._cold_run = True
+        state, slots = self._state, self._slots
+        t0 = time.perf_counter()
+        (caches, tok, pos, active, budget, gen, toks, valid) = \
+            self._decode_block(
+                self.params, self._caches, jnp.asarray(state["tok"]),
+                jnp.asarray(state["pos"]), jnp.asarray(state["active"]),
+                jnp.asarray(state["budget"]), jnp.asarray(state["keys"]),
+                jnp.asarray(state["gen"]))
+        self._caches = caches
+        toks, valid = np.asarray(toks), np.asarray(valid)
+        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_blocks"] += 1
+        self.stats["slot_steps"] += toks.size
+        self.stats["active_slot_steps"] += int(valid.sum())
+        state["tok"] = np.array(tok)  # copies: host mirrors stay writable
+        state["pos"] = np.array(pos)
+        state["gen"] = np.array(gen)
+        # replay emissions on the host mirror (handles retirement)
+        for k in range(toks.shape[0]):
+            for i in np.nonzero(valid[k])[0]:
+                if slots[i].request is not None:
+                    self._push_token(int(i), int(toks[k, i]))
+
+    def _step(self):
+        """One scheduler step: admit waiting requests, decode one block,
+        refill freed slots at the boundary."""
+        self._admit()
+        if self._active():
+            self._decode_once()
+            self._admit()
+
+    def _take_ready(self) -> dict[int, Result]:
+        out, self._ready = self._ready, {}
+        return out
+
+    # -- group-level API (the front-door drives these) ----------------------
+
+    @property
+    def admission_cap(self) -> int:
+        """Largest admission group ``submit`` accepts (the slot pool)."""
+        return self.cfg.max_slots
+
+    @property
+    def inflight(self) -> int:
+        """Dispatched-but-undrained admission groups."""
+        return len(self._open)
+
+    def submit(self, group: Sequence[Request]) -> GroupRecord:
+        """Dispatch one admission group: enqueue, prefill what fits.
+
+        Requests that don't fit the free slots wait in the FIFO queue and
+        are prefilled as slots retire (during ``drain_*`` calls).  The
+        returned :class:`GroupRecord` gets ``dispatch_t`` stamped at the
+        prefill of the group's first admitted request and ``done_t`` when
+        its last request finishes.
+        """
+        group = list(group)
+        if self.params is None:
+            raise ValueError(
+                "engine has no params bound — pass params= to Engine "
+                "(configs.base.lm_engine binds them for you)")
+        if not group:
+            raise ValueError("empty admission group")
+        if len(group) > self.admission_cap:
+            raise ValueError(f"admission group of {len(group)} exceeds "
+                             f"the {self.admission_cap}-slot pool")
+        for req in group:
             self._validate(req)
-        uids = [req.uid for req in requests]
+        uids = [r.uid for r in group]
+        dupes = sorted({u for u in uids if uids.count(u) > 1} |
+                       {u for u in uids
+                        if u in self._resident or u in self._ready})
+        if dupes:
+            raise ValueError(f"duplicate request uids: {dupes} "
+                             "(results are keyed by uid)")
+        self._ensure_pool()
+        rec = GroupRecord(uids=tuple(uids), index=self._next_index,
+                          variant="lm", bucket=self.cfg.max_slots,
+                          size=len(group))
+        self._next_index += 1
+        self._open.append(rec)
+        self._rec_left[rec.index] = len(group)
+        for req in group:
+            self._uid_rec[req.uid] = rec
+            self._resident.add(req.uid)
+        self._queue.extend(group)
+        self._admit()
+        return rec
+
+    def drain_ready(self) -> dict[int, Result]:
+        """Advance bounded work — one decode block, freed slots refilled —
+        and return every finished result ``{uid: Result}``.  The
+        front-door calls this while it would otherwise sleep waiting for
+        traffic; decode progress between arrivals happens here."""
+        if self._queue or self._active():
+            self._step()
+        return self._take_ready()
+
+    def drain_all(self) -> dict[int, Result]:
+        """Serve queue + resident slots to completion (blocking) and
+        return all finished results ``{uid: Result}``."""
+        while self._queue or self._active():
+            self._step()
+        return self._take_ready()
+
+    # -- the offline loop ---------------------------------------------------
+
+    def run(self, requests: Iterable[Request]) -> dict[int, Result]:
+        """Serve all requests to completion; returns {uid: Result}.
+
+        The offline loop over the group-level protocol: admission groups
+        of ``admission_cap`` are submitted (the first fills the slot pool
+        with one ragged prefill, the rest queue), then ``drain_all`` runs
+        the continuous-batching loop — byte-identical to the pre-protocol
+        monolithic loop because admission order and the per-request
+        sampling streams are unchanged.
+
+        Appends a per-run record to ``self.runs`` ({requests, tokens,
+        wall_time_s, warmup, tokens_per_s}); runs that jit-compiled a new
+        shape are flagged ``warmup`` and excluded from the cumulative
+        measured stats that ``tokens_per_s()`` reports.
+        """
+        reqs = list(requests)
+        for req in reqs:  # fail fast, before any request is served
+            self._validate(req)
+        uids = [req.uid for req in reqs]
         if len(set(uids)) != len(uids):
             dupes = sorted({u for u in uids if uids.count(u) > 1})
             raise ValueError(f"duplicate request uids: {dupes} "
                              "(results are keyed by uid)")
-        t_start = time.time()
-        queue = collections.deque(requests)
-        slots = [_Slot() for _ in range(cfg.max_slots)]
-        self._results: dict[int, Result] = {}
-        caches = self.init_caches(cfg.max_slots)
-        state = {
-            "tok": np.full((cfg.max_slots,), cfg.pad_id, np.int32),
-            "pos": np.zeros((cfg.max_slots,), np.int32),
-            "active": np.zeros((cfg.max_slots,), bool),
-            "budget": np.zeros((cfg.max_slots,), np.int32),
-            # per-slot PRNG stream roots (keyed by the resident request's
-            # uid) + per-request token counters — see ServeConfig.seed
-            "keys": np.zeros((cfg.max_slots, 2), np.uint32),
-            "gen": np.zeros((cfg.max_slots,), np.int32),
-        }
+        if self._open or self._queue or self._active() or self._ready:
+            raise ValueError("engine has undrained in-flight requests "
+                             "(call drain_all first)")
+        self._cold_run = False
+        tok0 = self.stats["tokens"]
+        t_start = time.perf_counter()
+        cap = self.admission_cap
+        for i in range(0, len(reqs), cap):
+            self.submit(reqs[i: i + cap])
+        results = self.drain_all()
+        dt = time.perf_counter() - t_start
+        toks = self.stats["tokens"] - tok0
+        self.stats["wall_time_s"] += dt
+        kind = "warmup" if self._cold_run else "measured"
+        self.stats[kind]["requests"] += len(results)
+        self.stats[kind]["work"] += toks
+        self.stats[kind]["wall_time_s"] += dt
+        self.runs.append({
+            "requests": len(results), "tokens": toks, "wall_time_s": dt,
+            "warmup": self._cold_run,
+            "tokens_per_s": toks / dt if dt else 0.0,
+        })
+        return results
 
-        while queue or state["active"].any():
-            caches = self._admit(params, caches, queue, slots, state)
-            if not state["active"].any():
-                continue  # everything admitted retired on its first token
-            t0 = time.time()
-            (caches, tok, pos, active, budget, gen, toks, valid) = \
-                self._decode_block(
-                    params, caches, jnp.asarray(state["tok"]),
-                    jnp.asarray(state["pos"]), jnp.asarray(state["active"]),
-                    jnp.asarray(state["budget"]), jnp.asarray(state["keys"]),
-                    jnp.asarray(state["gen"]))
-            toks, valid = np.asarray(toks), np.asarray(valid)
-            self.stats["decode_time_s"] += time.time() - t0
-            self.stats["decode_blocks"] += 1
-            self.stats["slot_steps"] += toks.size
-            self.stats["active_slot_steps"] += int(valid.sum())
-            state["tok"] = np.array(tok)  # copies: host mirrors stay writable
-            state["pos"] = np.array(pos)
-            state["gen"] = np.array(gen)
-            # replay emissions on the host mirror (handles retirement)
-            for k in range(toks.shape[0]):
-                for i in np.nonzero(valid[k])[0]:
-                    if slots[i].request is not None:
-                        self._push_token(slots, state, int(i), int(toks[k, i]))
-
-        self.stats["wall_time_s"] += time.time() - t_start
-        return self._results
+    @property
+    def last_run(self) -> dict | None:
+        """Per-run stats record of the most recent ``run()``."""
+        return self.runs[-1] if self.runs else None
 
     # -- convenience APIs ---------------------------------------------------
 
-    def generate(self, params, prompts, max_new_tokens: int | None = None
+    def generate(self, prompts, max_new_tokens: int | None = None
                  ) -> np.ndarray:
         """Batch API: prompts (B, P) array or list of ragged 1-D arrays.
 
@@ -406,7 +613,7 @@ class Engine:
         prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
         reqs = [Request(uid=i, prompt=p, max_new_tokens=budget)
                 for i, p in enumerate(prompts)]
-        results = self.run(params, reqs)
+        results = self.run(reqs)
         out = np.full((len(prompts), budget), cfg.pad_id, np.int32)
         for uid, res in results.items():
             out[uid, : len(res.tokens)] = res.tokens
@@ -418,12 +625,26 @@ class Engine:
             return 0.0
         return self.stats["active_slot_steps"] / self.stats["slot_steps"]
 
+    def tokens_per_s(self) -> float:
+        """Measured steady-state generation throughput — warmup runs (the
+        ones that jit-compiled a new shape) are excluded; falls back to
+        the warmup totals when only warmup runs exist (see
+        :func:`repro.serve.runtime.measured_rate`)."""
+        return rt.measured_rate(self.stats)
+
+    def reset_stats(self):
+        """Zero the cumulative stats and per-run records (jit caches and
+        the warmed-shape set survive — compilations are not forgotten)."""
+        self.stats = _fresh_stats(self.cfg.max_slots)
+        self.runs = []
+
 
 class LockstepEngine:
     """The seed engine: one XLA dispatch per token, greedy, no EOS handling.
 
     Kept as the benchmark baseline for ``benchmarks/bench_serve.py`` — do not
-    use for serving.
+    use for serving (it predates the runtime protocol and takes params
+    explicitly).
     """
 
     def __init__(self, decode_step: Callable, init_caches: Callable,

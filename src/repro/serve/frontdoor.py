@@ -1,42 +1,49 @@
-"""Online admission for NSAI serving: the deadline-batched front-door.
+"""Online admission for mixed serving traffic: the deadline-batched front-door.
 
 NSFlow's pitch is *real-time* NSAI acceleration, but an engine that only
-accepts pre-collected request lists (``ReasonEngine.run``) makes a trickle
-of traffic pay full-batch latency and a burst pay padding waste.  This
-module is the front-door that turns **arrival-timed** online traffic into
-admission groups the staged-pipeline engine can serve well:
+accepts pre-collected request lists (``ReasonEngine.run`` / ``Engine.run``)
+makes a trickle of traffic pay full-batch latency and a burst pay padding
+waste.  This module is the front-door that turns **arrival-timed** online
+traffic into admission groups any :class:`~repro.serve.runtime.
+EngineProtocol` engine can serve well:
 
 - **batch-full-or-deadline admission**: a group closes the moment it
   reaches the admission cap (``full``) or ``deadline_s`` after its first
   request arrived (``deadline``) — bursts fill batches, trickles wait at
   most one deadline.  When the arrival stream ends, open groups close
   immediately (``flush``).
-- **shape bucketing**: a closed partial group is padded by the engine to
-  the smallest *covering bucket* of the schedule's compiled batch sizes
-  (``StagedSchedule.batch_buckets``, e.g. 1/2/4/8) instead of the max —
-  see ``pow2_buckets``.
-- **multiplexing**: one front-door serves several workload engines (e.g.
-  nvsa + mimonet + lvrf); each arrival names its model, groups are formed
-  per model, and every engine keeps its own in-flight window
-  (``ReasonConfig.max_inflight``) on the shared host.
+- **shape bucketing**: a closed partial group is padded by the NSAI
+  engine to the smallest *covering bucket* of the schedule's compiled
+  batch sizes (``StagedSchedule.batch_buckets``, e.g. 2/4/8) instead of
+  the max — see ``pow2_buckets``.  The LM engine's bucket is its slot
+  pool.
+- **multiplexing over the protocol**: one front-door serves any mix of
+  engines — NSAI staged pipelines (nvsa, mimonet, ...) *and* slot-pool LM
+  engines (llama3.2-3b, stablelm-3b, ...) — because it only drives the
+  unified ``submit`` / ``drain_ready`` / ``drain_all`` surface.  Each
+  arrival names its model, groups are formed per model, and every engine
+  keeps its own in-flight window on the shared host.
 - **per-request latency accounting**: arrival -> dispatch (queueing) and
   dispatch -> answers-on-host (service) per request, with p50/p95/p99
-  summaries (:meth:`FrontDoorReport.percentiles`) — the numbers the
-  ``bench_nsai.py`` latency-vs-offered-load sweep reports.
+  summaries (:meth:`FrontDoorReport.percentiles`) and per-class
+  throughput in each class's own unit (tokens/s for LM rows, problems/s
+  for NSAI rows — see :meth:`FrontDoorReport.work_per_s`).
 
 The serve loop is single-threaded and event-driven: it admits due
 arrivals, closes groups by the policy, dispatches them asynchronously
-through ``ReasonEngine.submit`` (host staging overlaps device compute),
-and while waiting for traffic drains any groups whose device buffers have
-already materialized (``drain_ready``) so ``done`` timestamps are not
-deferred to the next dispatch.  ``clock``/``sleep`` are injectable — tests
-drive the policy deterministically on a virtual clock; benchmarks use real
-time.
+through ``submit`` (host staging overlaps device compute), and while
+waiting for traffic calls ``drain_ready`` on every engine — which both
+collects groups whose device buffers have already materialized (so
+``done`` timestamps are not deferred to the next dispatch) *and* lets
+engines that need host pumping (the LM slot pool) advance one decode
+block per call.  ``clock``/``sleep`` are injectable — tests drive the
+policy deterministically on a virtual clock; benchmarks use real time.
 
 Traffic models: :func:`poisson_arrivals` (open-loop Poisson at a given
 offered rate), :func:`trace_arrivals` (replay explicit timestamps), and
 :func:`merge_arrivals` to interleave per-model streams into one time-
-ordered front-door feed.
+ordered front-door feed (stable on ties: equal timestamps keep each
+stream's FIFO order, earlier-argument streams first).
 """
 
 from __future__ import annotations
@@ -48,8 +55,8 @@ from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
-from repro.serve.reason import (GroupRecord, ReasonEngine, ReasonRequest,
-                                ReasonResult, SCHEDULES)
+from repro.serve import runtime as rt
+from repro.serve.runtime import EngineProtocol, GroupRecord
 
 
 # ---------------------------------------------------------------------------
@@ -59,14 +66,18 @@ from repro.serve.reason import (GroupRecord, ReasonEngine, ReasonRequest,
 
 @dataclasses.dataclass(frozen=True)
 class ArrivalRequest:
-    """One request with its offered arrival time (seconds, stream origin)."""
+    """One request with its offered arrival time (seconds, stream origin).
+
+    ``request`` is any protocol request envelope (``serve.engine.Request``,
+    ``serve.reason.ReasonRequest`` — anything the named model's engine
+    accepts)."""
 
     t: float
     model: str
-    request: ReasonRequest
+    request: Any
 
 
-def poisson_arrivals(model: str, requests: Iterable[ReasonRequest],
+def poisson_arrivals(model: str, requests: Iterable[Any],
                      rate_rps: float, seed: int = 0, start_s: float = 0.0
                      ) -> Iterator[ArrivalRequest]:
     """Open-loop Poisson traffic: exponential inter-arrival gaps at
@@ -83,7 +94,7 @@ def poisson_arrivals(model: str, requests: Iterable[ReasonRequest],
 
 
 def trace_arrivals(model: str, times_s: Sequence[float],
-                   requests: Iterable[ReasonRequest]
+                   requests: Iterable[Any]
                    ) -> Iterator[ArrivalRequest]:
     """Replay an explicit arrival-time trace (must be nondecreasing).
     Times and requests must pair up exactly — a length mismatch in either
@@ -107,7 +118,13 @@ def trace_arrivals(model: str, times_s: Sequence[float],
 
 def merge_arrivals(*streams: Iterable[ArrivalRequest]
                    ) -> Iterator[ArrivalRequest]:
-    """Interleave time-ordered per-model streams into one ordered feed."""
+    """Interleave time-ordered per-model streams into one ordered feed.
+
+    ``heapq.merge`` is stable: arrivals with equal timestamps come out in
+    argument order, and each stream's own FIFO order is always preserved —
+    simultaneous cross-model arrivals therefore admit deterministically
+    (regression-tested; the admission policy depends on it).
+    """
     return heapq.merge(*streams, key=lambda a: a.t)
 
 
@@ -141,9 +158,9 @@ def pow2_buckets(max_batch: int, min_bucket: int = 2) -> tuple[int, ...]:
 class RequestLatency:
     """Per-request timing through the front-door (seconds from serve start).
 
-    ``queue_s`` = arrival -> first stage dispatched (admission wait + any
-    blocking on the in-flight window); ``service_s`` = dispatch -> answers
-    materialized on the host."""
+    ``queue_s`` = arrival -> first work dispatched (admission wait + any
+    blocking on the in-flight window / slot pool); ``service_s`` =
+    dispatch -> answers materialized on the host."""
 
     uid: int
     model: str
@@ -184,9 +201,14 @@ class ServedGroup:
 
 @dataclasses.dataclass
 class FrontDoorReport:
-    """Results + latency accounting of one ``FrontDoor.serve`` call."""
+    """Results + latency accounting of one ``FrontDoor.serve`` call.
 
-    results: dict[str, dict[int, ReasonResult]]   # model -> uid -> result
+    ``results`` maps model -> uid -> the engine's own result type
+    (``Result`` with generated ``tokens`` for LM engines, ``ReasonResult``
+    with an ``answer`` for NSAI engines) — one report covers both request
+    classes."""
+
+    results: dict[str, dict[int, Any]]
     latencies: list[RequestLatency]
     groups: list[ServedGroup]
     wall_time_s: float
@@ -205,6 +227,21 @@ class FrontDoorReport:
         n = sum(1 for l in self.latencies
                 if model is None or l.model == model)
         return n / self.wall_time_s if self.wall_time_s else 0.0
+
+    def work_per_s(self, model: str | None = None) -> float:
+        """Served throughput in the class's own work unit: generated
+        tokens/s for LM models, problems/s for NSAI models (mixing models
+        of different classes sums their units — pass ``model`` for a
+        meaningful number)."""
+        total = sum(rt.work_units(r)
+                    for m, res in self.results.items()
+                    if model is None or m == model
+                    for r in res.values())
+        return total / self.wall_time_s if self.wall_time_s else 0.0
+
+    def work_unit(self, model: str) -> str:
+        """'tok' (LM) or 'prob' (NSAI) for one model's served results."""
+        return rt.work_unit_name(self.results.get(model, {}).values())
 
     def bucket_histogram(self, model: str | None = None) -> dict[int, int]:
         hist: dict[int, int] = {}
@@ -226,6 +263,7 @@ class FrontDoorReport:
                             self.bucket_histogram(model).items())
             lines.append(
                 f"{model}: {n} served @ {self.throughput_rps(model):.1f}/s"
+                f" ({self.work_per_s(model):.1f} {self.work_unit(model)}/s)"
                 f" | queue p50/p95 {q['p50'] * 1e3:.1f}/{q['p95'] * 1e3:.1f}ms"
                 f" | service p50/p95 {s['p50'] * 1e3:.1f}/"
                 f"{s['p95'] * 1e3:.1f}ms"
@@ -242,22 +280,24 @@ class FrontDoorReport:
 class FrontDoorConfig:
     # close an admission group this long after its first request arrived
     deadline_s: float = 0.02
-    # admission cap per group (None = each engine's cfg.batch_size)
+    # admission cap per group (None = each engine's ``admission_cap``)
     max_batch: int | None = None
-    schedule: str = "overlap"     # overlap | sequential
     # while groups are in flight, sleeps are capped at this poll interval
-    # so ready groups get drained (and done-stamped) promptly
+    # so ready groups get drained (and done-stamped) promptly — and so
+    # LM engines, which decode one block per drain_ready call, make
+    # progress between arrivals
     poll_s: float = 0.002
 
 
 class FrontDoor:
-    """Deadline-batched, shape-bucketed admission over one or more engines.
+    """Deadline-batched, shape-bucketed admission over protocol engines.
 
-    ``engines`` maps model name -> :class:`ReasonEngine`; ``consts`` maps
-    the same names to each workload's constant pytree.  ``serve`` consumes
-    a time-ordered :class:`ArrivalRequest` stream (use
-    :func:`merge_arrivals` for several models) and returns a
-    :class:`FrontDoorReport`.
+    ``engines`` maps model name -> any :class:`~repro.serve.runtime.
+    EngineProtocol` implementation (``ReasonEngine``, the LM ``Engine``,
+    or a mix) — model constants are bound inside each engine, so the
+    front-door schedules traffic only.  ``serve`` consumes a time-ordered
+    :class:`ArrivalRequest` stream (use :func:`merge_arrivals` for
+    several models) and returns a :class:`FrontDoorReport`.
 
     ``clock``/``sleep`` default to real time; tests inject a virtual pair
     to drive the admission policy deterministically.  The engines' record
@@ -265,35 +305,29 @@ class FrontDoor:
     ``serve`` so queue/service latencies share one origin.
     """
 
-    def __init__(self, engines: Mapping[str, ReasonEngine],
-                 consts: Mapping[str, Any],
+    def __init__(self, engines: Mapping[str, EngineProtocol],
                  cfg: FrontDoorConfig | None = None,
                  clock: Callable[[], float] = time.perf_counter,
                  sleep: Callable[[float], None] = time.sleep):
         if not engines:
             raise ValueError("front-door needs at least one engine")
         cfg = cfg or FrontDoorConfig()
-        if cfg.schedule not in SCHEDULES:
-            raise ValueError(f"unknown schedule {cfg.schedule!r}")
         if cfg.deadline_s < 0:
             raise ValueError("deadline_s must be >= 0")
-        missing = set(engines) - set(consts)
-        if missing:
-            raise ValueError(f"no consts for models: {sorted(missing)}")
         self.engines = dict(engines)
-        self.consts = {m: consts[m] for m in engines}
         self.cfg = cfg
         self._clock = clock
         self._sleep = sleep
-        self.caps = {m: min(cfg.max_batch or eng.cfg.batch_size,
-                            eng.cfg.batch_size)
+        self.caps = {m: min(cfg.max_batch or eng.admission_cap,
+                            eng.admission_cap)
                      for m, eng in self.engines.items()}
         if any(c < 1 for c in self.caps.values()):
             raise ValueError(f"admission caps must be >= 1: {self.caps}")
 
     def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
         """Serve one arrival stream to completion (single-threaded event
-        loop; see module docstring for the policy)."""
+        loop; see module docstring for the policy).  An empty stream
+        returns a well-formed empty report."""
         saved_clocks = {m: eng.clock for m, eng in self.engines.items()}
         for eng in self.engines.values():
             eng.clock = self._clock
@@ -304,10 +338,13 @@ class FrontDoor:
                 eng.clock = saved_clocks[m]
 
     def _serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
-        results: dict[str, dict[int, ReasonResult]] = \
-            {m: {} for m in self.engines}
+        results: dict[str, dict[int, Any]] = {m: {} for m in self.engines}
         pending: dict[str, list[ArrivalRequest]] = \
             {m: [] for m in self.engines}
+        # serve-lifetime duplicate guard: engines intentionally allow uid
+        # reuse after a drain, so a duplicate that slips past a mid-serve
+        # drain would silently overwrite the earlier answer in `results`
+        seen: dict[str, set] = {m: set() for m in self.engines}
         # (model, engine record, close_reason, close_s, [arrival times])
         submitted: list[tuple[str, GroupRecord, str, float, list[float]]] = []
 
@@ -319,9 +356,7 @@ class FrontDoor:
         def close_group(model: str, reason: str):
             group = pending[model]
             pending[model] = []
-            rec = self.engines[model].submit(
-                self.consts[model], [a.request for a in group],
-                results[model], schedule=self.cfg.schedule)
+            rec = self.engines[model].submit([a.request for a in group])
             submitted.append((model, rec, reason, now(),
                               [a.t for a in group]))
 
@@ -343,6 +378,12 @@ class FrontDoor:
                                      "use merge_arrivals")
                 last_t = nxt.t
                 model = nxt.model
+                uid = nxt.request.uid
+                if uid in seen[model]:
+                    raise ValueError(f"duplicate request uid {uid} for "
+                                     f"model {model!r} (results are keyed "
+                                     "by uid)")
+                seen[model].add(uid)
                 pending[model].append(nxt)
                 nxt = next(it, None)
                 if len(pending[model]) >= self.caps[model]:
@@ -363,20 +404,26 @@ class FrontDoor:
             dt = min(events) - now()
             if dt > 0:
                 # the device keeps working while the host waits; collect
-                # whatever finished so done-stamps aren't deferred
+                # whatever finished so done-stamps aren't deferred, and
+                # let host-pumped engines (LM decode) advance a block
                 inflight = 0
                 for model, eng in self.engines.items():
-                    eng.drain_ready(results[model])
+                    results[model].update(eng.drain_ready())
                     inflight += eng.inflight
                 self._sleep(min(dt, self.cfg.poll_s) if inflight else dt)
 
         for model, eng in self.engines.items():
-            eng.drain_all(results[model])
+            results[model].update(eng.drain_all())
         wall = now()
 
         latencies: list[RequestLatency] = []
         groups: list[ServedGroup] = []
         for model, rec, reason, close_s, arr_times in submitted:
+            if rec.dispatch_t is None or rec.done_t is None:
+                raise RuntimeError(
+                    f"{model}: engine left group {rec.index} unstamped "
+                    f"(dispatch_t={rec.dispatch_t}, done_t={rec.done_t}) "
+                    "after drain_all — protocol violation")
             dispatch_s = rec.dispatch_t - t0
             done_s = rec.done_t - t0
             groups.append(ServedGroup(

@@ -37,15 +37,20 @@ every stage, finish a group completely before touching the next) that
 Fig. 9 folded-vs-unfolded comparison; it is also where the per-stage
 timing breakdown is measured (timing a stage requires blocking on it).
 
-Two entry points:
+The engine implements the unified :class:`~repro.serve.runtime.
+EngineProtocol` natively — its workload constants (params / codebooks /
+binding keys) are bound at construction, so callers schedule traffic, not
+model state.  Two entry points:
 
-- ``run(consts, requests)`` — the offline loop: admit fixed-size groups
-  from an iterable and serve them all (benchmarks, tests, batch jobs).
-- ``submit(consts, group, results)`` / ``drain_ready`` / ``drain_all`` —
-  the group-level API the **online front-door** (``serve.frontdoor``)
+- ``run(requests)`` — the offline loop: admit fixed-size groups from an
+  iterable and serve them all (benchmarks, tests, batch jobs).  It is
+  literally a loop over the group-level API below.
+- ``submit(group)`` / ``drain_ready()`` / ``drain_all()`` — the
+  group-level protocol the **online front-door** (``serve.frontdoor``)
   drives: it forms admission groups by its batch-full-or-deadline policy
   and dispatches each as it closes, with per-group dispatch/done
-  timestamps returned as :class:`GroupRecord`\\ s.
+  timestamps returned as :class:`~repro.serve.runtime.GroupRecord`\\ s and
+  finished answers collected from the drain calls (``{uid: result}``).
 
 A partial group is padded to the smallest *covering bucket* of the
 schedule's compiled batch sizes (``StagedSchedule.batch_buckets``), not to
@@ -72,6 +77,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import runtime as rt
+from repro.serve.runtime import GroupRecord  # re-export (envelope lives there)
 from repro.serve.schedule import StagedSchedule
 
 SCHEDULES = ("overlap", "sequential")
@@ -119,40 +126,25 @@ class ReasonResult:
     rule_posteriors: np.ndarray | None = None
 
 
-@dataclasses.dataclass
-class GroupRecord:
-    """Provenance + timing of one dispatched admission group.
-
-    ``dispatch_t`` is stamped (engine clock) when the group's first stage
-    is enqueued on the device.  For the default ``drain_stage == 0`` that
-    is after the blocking drain of older groups, so arrival→dispatch is
-    queueing and dispatch→done is service; a schedule with ``drain_stage
-    > 0`` intentionally enqueues its early stages *before* draining, so
-    that drain wait lands in service time (the group really is being
-    worked on).  ``done_t`` is None until the group is drained (answers
-    materialized on the host).
-    """
-
-    uids: tuple[int, ...]
-    index: int                    # engine-lifetime group counter
-    variant: str
-    bucket: int                   # compiled batch size the group ran at
-    size: int                     # real requests in the group (<= bucket)
-    dispatch_t: float | None = None
-    done_t: float | None = None
+# GroupRecord note: ``dispatch_t`` is stamped when the group's first stage
+# is enqueued on the device.  For the default ``drain_stage == 0`` that is
+# after the blocking drain of older groups, so arrival→dispatch is queueing
+# and dispatch→done is service; a schedule with ``drain_stage > 0``
+# intentionally enqueues its early stages *before* draining, so that drain
+# wait lands in service time (the group really is being worked on).
 
 
 def _fresh_stats() -> dict:
     return {
         "requests": 0, "batches": 0,
-        # wall-time split: runs that compiled a new (variant, bucket)
-        # shape land in "warmup", steady-state runs in "measured"
-        "measured": {"requests": 0, "wall_time_s": 0.0},
-        "warmup": {"requests": 0, "wall_time_s": 0.0},
         # cumulative sequential-schedule stage times, keyed per variant so
         # same-named stages of different variants (oracle vs cnn) never
         # merge: {variant: {stage_name: seconds}}
         "stage_time_s": {},
+        # wall-time split: runs that compiled a new (variant, bucket)
+        # shape land in "warmup", steady-state runs in "measured"
+        # (``work`` == requests for reasoning traffic: one problem each)
+        **rt.fresh_split_stats(),
     }
 
 
@@ -162,16 +154,18 @@ class ReasonEngine:
     ``schedules`` maps variant name -> compiled :class:`StagedSchedule`
     (a single schedule is accepted too).  Stage jit caches live on the
     schedules, so sharing schedules across engines shares compilations.
-    ``run(consts, requests)`` feeds every request batch through the
-    schedule's stages; ``consts`` is the workload's constant pytree
-    (params / codebooks / binding keys) handed to every stage.
-    ``clock`` is the timestamp source for :class:`GroupRecord`\\ s (the
-    front-door injects its own so queue/service latencies share one
-    origin).
+    ``consts`` is the workload's constant pytree (params / codebooks /
+    binding keys) handed to every stage — bound here so the engine
+    implements the consts-free :class:`~repro.serve.runtime.
+    EngineProtocol` (``configs.base.reason_engine`` binds it for you).
+    ``run(requests)`` feeds every request batch through the schedule's
+    stages.  ``clock`` is the timestamp source for
+    :class:`~repro.serve.runtime.GroupRecord`\\ s (the front-door injects
+    its own so queue/service latencies share one origin).
     """
 
     def __init__(self, schedules: StagedSchedule | Mapping[str, StagedSchedule],
-                 cfg: ReasonConfig, clock=time.perf_counter):
+                 cfg: ReasonConfig, consts=None, clock=time.perf_counter):
         if isinstance(schedules, StagedSchedule):
             schedules = {schedules.variant: schedules}
         if not schedules:
@@ -194,14 +188,21 @@ class ReasonEngine:
             raise ValueError(f"unknown variant {self.default_variant!r}; "
                              f"compiled: {sorted(self.schedules)}")
         self.cfg = cfg
+        self.consts = consts
         self.clock = clock
         self.stats = _fresh_stats()
         self.runs: list[dict] = []    # per-run records from run()
         self._inflight: collections.deque = collections.deque()
+        self._ready: dict[int, ReasonResult] = {}  # collected, undrained
         self._next_index = 0
         self._warmed: set[tuple[str, int]] = set()  # (variant, bucket) run
         self._cold_run = False
         self._run_stage_time: dict[str, float] = {}
+
+    @property
+    def admission_cap(self) -> int:
+        """Largest admission group ``submit`` accepts (protocol surface)."""
+        return self.cfg.batch_size
 
     # -- host-side staging --------------------------------------------------
 
@@ -245,14 +246,17 @@ class ReasonEngine:
 
         return jax.tree.map(stack, *trees), bucket
 
-    def _collect(self, results: dict, batch: list[ReasonRequest], out,
+    def _collect(self, batch: list[ReasonRequest], out,
                  rec: GroupRecord, sched: StagedSchedule):
-        """Materialize one group's answers on the host (blocks if pending)."""
+        """Materialize one group's answers on the host (blocks if pending).
+
+        Finished results land in the engine's ready buffer until a drain
+        call hands them out."""
         host = jax.tree.map(np.asarray, out)
         for i, req in enumerate(batch):  # padded rows have no request
             fields = sched.collect(host, i)
-            results[req.uid] = ReasonResult(uid=req.uid, batch=rec.index,
-                                            **fields)
+            self._ready[req.uid] = ReasonResult(uid=req.uid, batch=rec.index,
+                                                **fields)
         rec.done_t = self.clock()
         self.stats["requests"] += len(batch)
 
@@ -274,7 +278,7 @@ class ReasonEngine:
 
     # -- group-level API (the front-door drives these) ----------------------
 
-    def submit(self, consts, group: list[ReasonRequest], results: dict,
+    def submit(self, group: list[ReasonRequest],
                schedule: str | None = None, variant: str | None = None
                ) -> GroupRecord:
         """Dispatch one admission group through the compiled pipeline.
@@ -284,10 +288,17 @@ class ReasonEngine:
         in-flight window (``cfg.max_inflight``) is full, the oldest group
         is drained (blocking) at the schedule's drain point before the new
         first stage is dispatched — its record (already returned by the
-        earlier ``submit``) gets ``done_t`` stamped in place.  Under
-        ``sequential`` the group is served synchronously (accumulating the
-        per-stage timing breakdown) and returned complete.
+        earlier ``submit``) gets ``done_t`` stamped in place, and its
+        answers wait in the ready buffer for the next ``drain_*`` call.
+        Under ``sequential`` the group is served synchronously
+        (accumulating the per-stage timing breakdown) and returned
+        complete.
         """
+        consts = self.consts
+        if consts is None:
+            raise ValueError(
+                "engine has no consts bound — pass consts= to ReasonEngine "
+                "(configs.base.reason_engine binds them for you)")
         schedule, variant, sched = self._resolve(schedule, variant)
         sequential = schedule == "sequential"
         if not group:
@@ -296,10 +307,13 @@ class ReasonEngine:
             raise ValueError(f"admission group of {len(group)} exceeds "
                              f"batch_size {self.cfg.batch_size}")
         pending = {u for g, *_ in self._inflight for u in (r.uid for r in g)}
+        seen: set = set()
         for req in group:
-            if req.uid in results or req.uid in pending:
+            if req.uid in self._ready or req.uid in pending \
+                    or req.uid in seen:
                 raise ValueError(f"duplicate request uid {req.uid} "
                                  "(results are keyed by uid)")
+            seen.add(req.uid)
         bufs, bucket = self._stage(group, sched)
         if (variant, bucket) not in self._warmed:
             self._warmed.add((variant, bucket))
@@ -316,7 +330,7 @@ class ReasonEngine:
                 # on one shared host device only adds contention (see
                 # module docstring)
                 while len(self._inflight) >= self.cfg.max_inflight:
-                    self._drain_one(results)
+                    self._drain_one()
             if si == 0:
                 rec.dispatch_t = self.clock()
             t0 = time.perf_counter()
@@ -330,37 +344,41 @@ class ReasonEngine:
                     self._run_stage_time.get(name, 0.0) + dt
         self.stats["batches"] += 1
         if sequential:
-            self._collect(results, group, bufs, rec, sched)
+            self._collect(group, bufs, rec, sched)
         else:
             self._inflight.append((group, bufs, rec, sched))
         return rec
 
-    def _drain_one(self, results: dict) -> GroupRecord | None:
+    def _drain_one(self) -> GroupRecord | None:
         if not self._inflight:
             return None
         group, bufs, rec, sched = self._inflight.popleft()
-        self._collect(results, group, bufs, rec, sched)
+        self._collect(group, bufs, rec, sched)
         return rec
 
-    def drain_all(self, results: dict) -> list[GroupRecord]:
-        """Drain every in-flight group, oldest first (blocking)."""
-        out = []
-        while self._inflight:
-            out.append(self._drain_one(results))
+    def _take_ready(self) -> dict[int, "ReasonResult"]:
+        out, self._ready = self._ready, {}
         return out
 
-    def drain_ready(self, results: dict) -> list[GroupRecord]:
-        """Drain in-flight groups whose device buffers have already
+    def drain_all(self) -> dict[int, "ReasonResult"]:
+        """Drain every in-flight group, oldest first (blocking), and
+        return all finished results ``{uid: ReasonResult}``."""
+        while self._inflight:
+            self._drain_one()
+        return self._take_ready()
+
+    def drain_ready(self) -> dict[int, "ReasonResult"]:
+        """Collect in-flight groups whose device buffers have already
         materialized — non-blocking, oldest first (the front-door calls
-        this while it would otherwise sleep waiting for traffic)."""
-        out = []
+        this while it would otherwise sleep waiting for traffic) — and
+        return every finished result ``{uid: ReasonResult}``."""
         while self._inflight:
             _, bufs, _, _ = self._inflight[0]
             if not all(l.is_ready() for l in jax.tree.leaves(bufs)
                        if hasattr(l, "is_ready")):
                 break
-            out.append(self._drain_one(results))
-        return out
+            self._drain_one()
+        return self._take_ready()
 
     @property
     def inflight(self) -> int:
@@ -369,19 +387,20 @@ class ReasonEngine:
 
     # -- the offline loop ---------------------------------------------------
 
-    def run(self, consts, requests: Iterable[ReasonRequest],
+    def run(self, requests: Iterable[ReasonRequest],
             schedule: str | None = None, variant: str | None = None
             ) -> dict[int, "ReasonResult"]:
         """Serve all requests; returns {uid: ReasonResult}.
 
-        ``overlap``: pipelined — ingest/stage the next group while the
-        device runs the in-flight window, drain the oldest group's
-        answers, then dispatch the new group's stages asynchronously; host
-        work never blocks the device.  ``sequential``: synchronize after
-        each stage, one group at a time, accumulating the per-stage timing
-        breakdown.  ``schedule`` / ``variant`` override the config per
-        call (stage jit caches live on the StagedSchedule, so benchmarks
-        can compare schedules on one engine instance).
+        The offline loop over the group-level protocol: ``overlap`` —
+        pipelined: ingest/stage the next group while the device runs the
+        in-flight window, drain the oldest group's answers, then dispatch
+        the new group's stages asynchronously; host work never blocks the
+        device.  ``sequential``: synchronize after each stage, one group
+        at a time, accumulating the per-stage timing breakdown.
+        ``schedule`` / ``variant`` override the config per call (stage jit
+        caches live on the StagedSchedule, so benchmarks can compare
+        schedules on one engine instance).
 
         Appends a per-run record to ``self.runs`` ({schedule, variant,
         requests, wall_time_s, warmup, stage_time_s, problems_per_s});
@@ -390,10 +409,9 @@ class ReasonEngine:
         ``problems_per_s()`` reports.
         """
         schedule, variant, _ = self._resolve(schedule, variant)
-        if self._inflight:
+        if self._inflight or self._ready:
             raise ValueError("engine has undrained in-flight groups "
                              "(call drain_all first)")
-        results: dict[int, ReasonResult] = {}
         self._cold_run = False
         self._run_stage_time = {}
         t_start = time.perf_counter()
@@ -401,12 +419,12 @@ class ReasonEngine:
             # staging the next group (incl. any lazy per-request
             # preprocessing in the `requests` iterable) overlaps the
             # in-flight window on the device
-            self.submit(consts, batch, results, schedule=schedule,
-                        variant=variant)
-        self.drain_all(results)
+            self.submit(batch, schedule=schedule, variant=variant)
+        results = self.drain_all()
         dt = time.perf_counter() - t_start
         kind = "warmup" if self._cold_run else "measured"
         self.stats[kind]["requests"] += len(results)
+        self.stats[kind]["work"] += len(results)
         self.stats[kind]["wall_time_s"] += dt
         self.runs.append({
             "schedule": schedule, "variant": variant,
@@ -425,16 +443,10 @@ class ReasonEngine:
     def problems_per_s(self) -> float:
         """Measured steady-state throughput — warmup runs (the ones that
         jit-compiled a new shape) are excluded; ``stats["warmup"]`` keeps
-        their totals separately.  If *only* warmup runs exist (e.g. a
-        single long run whose last ragged group first-touched a small
-        bucket), falls back to the all-runs number rather than reporting
-        0 — check ``stats["measured"]["requests"]`` to tell them apart."""
-        m, w = self.stats["measured"], self.stats["warmup"]
-        if m["wall_time_s"]:
-            return m["requests"] / m["wall_time_s"]
-        if w["wall_time_s"]:
-            return w["requests"] / w["wall_time_s"]
-        return 0.0
+        their totals separately, and only-warmup stats fall back to the
+        all-runs number (see :func:`repro.serve.runtime.measured_rate`;
+        ``work`` == requests for reasoning traffic)."""
+        return rt.measured_rate(self.stats)
 
     def reset_stats(self):
         """Zero the cumulative stats and per-run records (jit caches and

@@ -303,6 +303,20 @@ def _ensure_stage_costs(schedule: StagedSchedule):
         schedule.source = "trace"
 
 
+def ensure_graph(schedule: StagedSchedule) -> dfl.DataflowGraph:
+    """The schedule's :class:`DataflowGraph`, tracing lazily (memoized) for
+    schedules compiled with ``trace_graph=False`` — this is what
+    ``repro.serve.deploy`` hands to ``core.dse.explore`` to derive the
+    serving configuration from the workload's dataflow dependencies."""
+    if schedule.graph is None:
+        _ensure_stage_costs(schedule)
+    if schedule.graph is None:
+        raise ValueError(
+            f"{schedule.workload}/{schedule.variant}: schedule was compiled "
+            "without input_specs — no graph to trace")
+    return schedule.graph
+
+
 def predicted_overlap(schedule: StagedSchedule, n_batches: int = 2) -> dict:
     """Analytical overlap prediction for the compiled schedule.
 

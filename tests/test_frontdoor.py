@@ -1,7 +1,7 @@
 """Online-admission front-door tests: traffic models, the batch-full-or-
 deadline policy (driven deterministically on a virtual clock), shape
-bucketing, the engine's depth-k in-flight window + submit/drain API, and
-the warmup-aware stats split."""
+bucketing, the engine's depth-k in-flight window + protocol submit/drain
+API, and the warmup-aware stats split."""
 
 import time
 
@@ -108,6 +108,30 @@ def test_merge_arrivals_orders_streams():
         [("a", 0.0), ("b", 0.1), ("b", 0.2), ("a", 0.3)]
 
 
+def test_merge_arrivals_tie_break_is_stable():
+    """Equal timestamps across models must preserve per-stream FIFO order
+    AND earlier-argument stream priority: heapq.merge is stable, and the
+    admission policy (which model's group a simultaneous arrival joins
+    first) depends on that.  Pinned so a future reimplementation (e.g. a
+    naive sort on t alone) cannot silently reorder simultaneous traffic."""
+    r = lambda u: ReasonRequest(uid=u)
+    # all four arrivals of each stream collide pairwise at t=0.0/0.1/0.1/0.2
+    times = [0.0, 0.1, 0.1, 0.2]
+    s1 = fd.trace_arrivals("a", times, [r(0), r(1), r(2), r(3)])
+    s2 = fd.trace_arrivals("b", times, [r(0), r(1), r(2), r(3)])
+    merged = [(a.model, a.request.uid, a.t) for a in
+              fd.merge_arrivals(s1, s2)]
+    # ties: stream "a" (first argument) wins, each stream stays FIFO
+    assert merged == [
+        ("a", 0, 0.0), ("b", 0, 0.0),
+        ("a", 1, 0.1), ("a", 2, 0.1), ("b", 1, 0.1), ("b", 2, 0.1),
+        ("a", 3, 0.2), ("b", 3, 0.2),
+    ]
+    for model in ("a", "b"):
+        uids = [u for m, u, _ in merged if m == model]
+        assert uids == sorted(uids)      # per-stream FIFO preserved
+
+
 # -- the admission policy (virtual clock) ------------------------------------
 
 
@@ -120,8 +144,7 @@ def test_admission_full_deadline_flush_and_buckets():
              0.05, 0.051,                   # -> deadline group of 2
              0.2, 0.21, 0.22]               # -> flush group of 3
     clock = VirtualClock()
-    door = fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
-                        fd.FrontDoorConfig(deadline_s=0.02),
+    door = fd.FrontDoor({"nvsa": eng}, fd.FrontDoorConfig(deadline_s=0.02),
                         clock=clock, sleep=clock.sleep)
     rep = door.serve(fd.trace_arrivals("nvsa", times, reqs))
 
@@ -138,7 +161,7 @@ def test_admission_full_deadline_flush_and_buckets():
     full = [l for l in rep.latencies if l.close_reason == "full"]
     assert max(l.queue_s for l in full) <= 0.004 + 1e-6
     # answers match the offline engine run bit-exactly
-    offline = eng.run(consts, _oracle_requests(cfg, 9), variant="oracle")
+    offline = eng.run(_oracle_requests(cfg, 9), variant="oracle")
     for uid, res in rep.results["nvsa"].items():
         np.testing.assert_array_equal(res.answer_logprobs,
                                       offline[uid].answer_logprobs)
@@ -155,7 +178,6 @@ def test_frontdoor_multiplexes_models():
         consts=pconsts, variants=("oracle",), trace_graph=False)
     clock = VirtualClock()
     door = fd.FrontDoor({"nvsa": neng, "prae": peng},
-                        {"nvsa": nconsts, "prae": pconsts},
                         fd.FrontDoorConfig(deadline_s=0.01),
                         clock=clock, sleep=clock.sleep)
     streams = [
@@ -169,23 +191,40 @@ def test_frontdoor_multiplexes_models():
     assert len(rep.results["nvsa"]) == 6 and len(rep.results["prae"]) == 5
     assert {g.model for g in rep.groups} == {"nvsa", "prae"}
     assert rep.throughput_rps() > 0
+    # NSAI rows report in problems: one work unit per request
+    assert rep.work_unit("nvsa") == "prob"
+    assert rep.work_per_s("nvsa") == pytest.approx(rep.throughput_rps("nvsa"))
     assert rep.summary()  # renders without blowing up
     p = rep.percentiles("queue_s", "prae")
     assert set(p) == {"p50", "p95", "p99"} and p["p50"] <= p["p99"]
 
 
+def test_frontdoor_empty_stream_well_formed_report():
+    """An empty arrival stream must return a well-formed empty report, not
+    crash or hang: per-model result dicts present, no latencies/groups,
+    NaN percentiles, zero throughput, empty summary."""
+    cfg, consts, eng = _oracle_engine()
+    clock = VirtualClock()
+    door = fd.FrontDoor({"nvsa": eng}, clock=clock, sleep=clock.sleep)
+    rep = door.serve(iter([]))
+    assert rep.results == {"nvsa": {}}
+    assert rep.latencies == [] and rep.groups == []
+    assert rep.wall_time_s >= 0 and np.isfinite(rep.wall_time_s)
+    assert rep.throughput_rps() == 0.0 and rep.work_per_s() == 0.0
+    assert all(np.isnan(v) for v in rep.percentiles().values())
+    assert rep.bucket_histogram() == {}
+    assert rep.summary() == ""
+    assert eng.inflight == 0
+
+
 def test_frontdoor_validation_errors():
     cfg, consts, eng = _oracle_engine()
     with pytest.raises(ValueError, match="at least one engine"):
-        fd.FrontDoor({}, {})
-    with pytest.raises(ValueError, match="no consts"):
-        fd.FrontDoor({"nvsa": eng}, {})
-    with pytest.raises(ValueError, match="unknown schedule"):
-        fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
-                     fd.FrontDoorConfig(schedule="warp"))
+        fd.FrontDoor({})
+    with pytest.raises(ValueError, match="deadline_s"):
+        fd.FrontDoor({"nvsa": eng}, fd.FrontDoorConfig(deadline_s=-1.0))
     clock = VirtualClock()
-    door = fd.FrontDoor({"nvsa": eng}, {"nvsa": consts},
-                        clock=clock, sleep=clock.sleep)
+    door = fd.FrontDoor({"nvsa": eng}, clock=clock, sleep=clock.sleep)
     reqs = _oracle_requests(cfg, 2)
     with pytest.raises(ValueError, match="unknown model"):
         door.serve(fd.trace_arrivals("mystery", [0.0], reqs[:1]))
@@ -194,7 +233,22 @@ def test_frontdoor_validation_errors():
                          fd.ArrivalRequest(0.1, "nvsa", reqs[1])]))
 
 
-# -- engine group-level API --------------------------------------------------
+def test_frontdoor_rejects_duplicate_uid_across_whole_serve():
+    """Engines allow uid reuse after a drain, so the front-door must
+    guard serve-lifetime uniqueness itself: a duplicate arriving after
+    its predecessor was already served would otherwise silently
+    overwrite the earlier answer in the report's results dict."""
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,))
+    reqs = _oracle_requests(cfg, 4)
+    dup = reqs[:2] + reqs[:1]           # uid 0 arrives again much later
+    clock = VirtualClock()
+    door = fd.FrontDoor({"nvsa": eng}, fd.FrontDoorConfig(deadline_s=0.01),
+                        clock=clock, sleep=clock.sleep)
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        door.serve(fd.trace_arrivals("nvsa", [0.0, 0.001, 5.0], dup))
+
+
+# -- engine group-level API (the runtime protocol) ---------------------------
 
 
 def test_engine_inflight_window_depth():
@@ -202,16 +256,13 @@ def test_engine_inflight_window_depth():
     cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
                                       max_inflight=2)
     reqs = _oracle_requests(cfg, 6)
-    results = {}
-    r1 = eng.submit(consts, reqs[0:2], results)
-    r2 = eng.submit(consts, reqs[2:4], results)
+    r1 = eng.submit(reqs[0:2])
+    r2 = eng.submit(reqs[2:4])
     assert eng.inflight == 2 and r1.done_t is None and r2.done_t is None
-    r3 = eng.submit(consts, reqs[4:6], results)
+    r3 = eng.submit(reqs[4:6])
     assert r1.done_t is not None          # drained to make room
     assert eng.inflight == 2              # r2, r3 still resident
-    assert sorted(results) == [0, 1]
-    recs = eng.drain_all(results)
-    assert [r.index for r in recs] == [r2.index, r3.index]
+    results = eng.drain_all()
     assert sorted(results) == list(range(6))
     assert all(r.done_t >= r.dispatch_t for r in (r1, r2, r3))
 
@@ -220,32 +271,33 @@ def test_engine_drain_ready_nonblocking():
     cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
                                       max_inflight=4)
     reqs = _oracle_requests(cfg, 4)
+    eng.submit(reqs[:2])
+    eng.submit(reqs[2:])
     results = {}
-    eng.submit(consts, reqs[:2], results)
-    eng.submit(consts, reqs[2:], results)
     deadline = time.time() + 30
     while eng.inflight and time.time() < deadline:
-        eng.drain_ready(results)
+        results.update(eng.drain_ready())
         time.sleep(0.005)
+    results.update(eng.drain_all())  # collect stragglers deterministically
     assert eng.inflight == 0 and len(results) == 4
 
 
 def test_engine_submit_rejections():
     cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,))
     reqs = _oracle_requests(cfg, 4)
-    results = {}
     with pytest.raises(ValueError, match="empty admission group"):
-        eng.submit(consts, [], results)
+        eng.submit([])
     with pytest.raises(ValueError, match="exceeds"):
-        eng.submit(consts, reqs[:3], results)
-    eng.submit(consts, reqs[:2], results)
+        eng.submit(reqs[:3])
     with pytest.raises(ValueError, match="duplicate request uid"):
-        eng.submit(consts, reqs[:2], results)      # still in flight
+        eng.submit([reqs[0], reqs[0]])     # duplicate inside one group
+    eng.submit(reqs[:2])
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.submit(reqs[:2])      # still in flight
     with pytest.raises(ValueError, match="undrained in-flight"):
-        eng.run(consts, reqs[2:])
-    eng.drain_all(results)
-    with pytest.raises(ValueError, match="duplicate request uid"):
-        eng.submit(consts, reqs[:2], results)      # already in results
+        eng.run(reqs[2:])
+    undrained = eng.drain_all()
+    assert sorted(undrained) == [0, 1]
     with pytest.raises(ValueError, match="max_inflight"):
         cbase.reason_engine(
             "nvsa", cfg, ReasonConfig(max_inflight=0),
@@ -254,6 +306,10 @@ def test_engine_submit_rejections():
         cbase.reason_engine(
             "nvsa", cfg, ReasonConfig(batch_size=8, buckets=(2, 4)),
             consts=consts, variants=("oracle",), trace_graph=False)
+    nc, _, unbound = _oracle_engine(batch_size=2, buckets=(2,))
+    unbound.consts = None
+    with pytest.raises(ValueError, match="no consts bound"):
+        unbound.submit(reqs[:2])
 
 
 def test_covering_bucket():
@@ -271,13 +327,13 @@ def test_covering_bucket():
 def test_stats_warmup_split_and_per_run_records():
     cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,))
     reqs = _oracle_requests(cfg, 4)
-    eng.run(consts, reqs[:2])
+    eng.run(reqs[:2])
     assert eng.last_run["warmup"] is True          # compiled bucket 2
     assert eng.stats["warmup"]["requests"] == 2
     assert eng.stats["measured"]["requests"] == 0
     warm_pps = eng.problems_per_s()                # warmup-only fallback
     assert warm_pps > 0
-    eng.run(consts, reqs[2:])
+    eng.run(reqs[2:])
     assert eng.last_run["warmup"] is False
     assert eng.stats["measured"]["requests"] == 2
     # now measured-only: compile time no longer in the denominator
@@ -289,7 +345,7 @@ def test_stats_warmup_split_and_per_run_records():
     # reset zeroes totals but remembers compiled shapes
     eng.reset_stats()
     assert eng.runs == [] and eng.problems_per_s() == 0.0
-    eng.run(consts, _oracle_requests(cfg, 2, seed=9))
+    eng.run(_oracle_requests(cfg, 2, seed=9))
     assert eng.last_run["warmup"] is False
 
 
@@ -302,8 +358,8 @@ def test_stage_times_do_not_collide_across_variants():
     eng = cbase.reason_engine("nvsa", cfg, ReasonConfig(batch_size=2),
                               consts=consts, trace_graph=False)
     reqs = _oracle_requests(cfg, 2)
-    eng.run(consts, reqs, schedule="sequential", variant="cnn")
-    eng.run(consts, _oracle_requests(cfg, 2, seed=9),
+    eng.run(reqs, schedule="sequential", variant="cnn")
+    eng.run(_oracle_requests(cfg, 2, seed=9),
             schedule="sequential", variant="oracle")
     st = eng.stats["stage_time_s"]
     assert set(st["cnn"]) == {"frontend", "symbolic"}

@@ -185,7 +185,7 @@ def test_served_nvsa_oracle_matches_offline(problem_batch):
     consts = {"params": None, "books": books}
     eng = _reason_engine(cfg, batch_size=8, consts=consts,
                          variants=("oracle",))
-    res = eng.run(consts, requests_from_batch(batch), variant="oracle")
+    res = eng.run(requests_from_batch(batch), variant="oracle")
     n = len(batch["answer"])
     served = np.stack([res[i].answer_logprobs for i in range(n)])
     np.testing.assert_allclose(served, off_logp, atol=1e-5)
@@ -202,7 +202,7 @@ def test_served_prae_oracle_accuracy(problem_batch):
     consts = {"params": None, "books": None}
     eng = _reason_engine(cfg, batch_size=8, model="prae", consts=consts,
                          variants=("oracle",))
-    res = eng.run(consts, requests_from_batch(batch), variant="oracle")
+    res = eng.run(requests_from_batch(batch), variant="oracle")
     n = len(batch["answer"])
     acc = float(np.mean([res[i].answer == batch["answer"][i]
                          for i in range(n)]))
@@ -235,7 +235,7 @@ def test_served_nvsa_cnn_matches_offline(nn, sy, qmm):
     # batch_size=4 -> 6 requests split into a full + ragged pipeline batch
     eng = _reason_engine(cfg, batch_size=4, consts=consts,
                          variants=("cnn",))
-    res = eng.run(consts, requests_from_batch(batch))
+    res = eng.run(requests_from_batch(batch))
     served = np.stack([res[i].answer_logprobs for i in range(6)])
     np.testing.assert_allclose(served, off_logp, atol=1e-5)
     np.testing.assert_array_equal(
@@ -257,11 +257,11 @@ def test_served_answer_independent_of_admission_group():
     reqs = requests_from_batch(batch)
 
     eng = _reason_engine(cfg, batch_size=5, consts=consts, variants=("cnn",))
-    grouped = eng.run(consts, reqs)
+    grouped = eng.run(reqs)
     solo_eng = _reason_engine(cfg, batch_size=1, consts=consts,
                               variants=("cnn",))
     for req in reqs:
-        solo = solo_eng.run(consts, [req])
+        solo = solo_eng.run([req])
         np.testing.assert_allclose(solo[req.uid].answer_logprobs,
                                    grouped[req.uid].answer_logprobs,
                                    atol=1e-5)
@@ -290,14 +290,14 @@ def test_served_answer_bitwise_invariant_across_buckets(model, variant):
 
     # reference: all 5 requests in one full (unpadded) admission group
     full = _reason_engine(cfg, batch_size=5, model=model, consts=consts,
-                          variants=(variant,)).run(consts, reqs,
+                          variants=(variant,)).run(reqs,
                                                    variant=variant)
     # bucketed: groups of 4 (bucket 4) and 1 (bucket 2, one padded row)
     eng = _reason_engine(cfg, batch_size=4, model=model, consts=consts,
                          variants=(variant,), buckets=(2, 4))
-    bucketed = eng.run(consts, reqs, variant=variant)
+    bucketed = eng.run(reqs, variant=variant)
     # padded partial at the same bucket: 3 requests ride bucket 4
-    partial = eng.run(consts, reqs[:3], variant=variant)
+    partial = eng.run(reqs[:3], variant=variant)
     assert eng.schedules[variant].batch_buckets == (2, 4)
     assert len({r.batch for r in bucketed.values()}) == 2  # two groups
 
@@ -365,9 +365,9 @@ def test_reason_pipeline_deterministic_and_order_invariant():
     # 10 reqs -> ragged last batch
     eng = _reason_engine(cfg, batch_size=4, consts=consts,
                          variants=("oracle",))
-    golden = eng.run(consts, reqs, variant="oracle")
-    rerun = eng.run(consts, reqs, variant="oracle")
-    shuffled = eng.run(consts, list(reversed(reqs)), variant="oracle")
+    golden = eng.run(reqs, variant="oracle")
+    rerun = eng.run(reqs, variant="oracle")
+    shuffled = eng.run(list(reversed(reqs)), variant="oracle")
     for res in (rerun, shuffled):
         assert sorted(res) == sorted(golden)
         for uid in golden:

@@ -111,7 +111,7 @@ def test_compiled_nvsa_matches_handwired_pipeline_bitexact():
     eng = cbase.reason_engine("nvsa", cfg, ReasonConfig(batch_size=4),
                               consts=consts, variants=("cnn",),
                               trace_graph=False)
-    res = eng.run(consts, requests_from_batch(batch))
+    res = eng.run(requests_from_batch(batch))
     served = np.stack([res[i].answer_logprobs for i in range(8)])
     np.testing.assert_array_equal(served, hand)  # bit-exact
 
@@ -128,7 +128,7 @@ def test_mimonet_served_matches_offline():
                               consts=consts, trace_graph=False)
     factory, _ = entry.make_requests(cfg, 5, seed=0)
     reqs = list(factory())
-    res = eng.run(consts, iter(reqs))  # 5 reqs -> full + ragged batch
+    res = eng.run(iter(reqs))  # 5 reqs -> full + ragged batch
 
     imgs = jnp.asarray(np.stack([r.images for r in reqs]), jnp.float32)
     off = np.asarray(mm.forward(consts["params"], consts["keys"], cfg, imgs))
@@ -140,7 +140,7 @@ def test_mimonet_served_matches_offline():
         np.testing.assert_allclose(res[i].answer_logprobs, off_logp,
                                    atol=1e-5)
     # sequential run exposes the per-stage timing breakdown (per variant)
-    eng.run(consts, factory(), schedule="sequential")
+    eng.run(factory(), schedule="sequential")
     assert set(eng.stats["stage_time_s"]["default"]) == set(
         eng.schedules["default"].stage_names)
 
@@ -160,7 +160,7 @@ def test_lvrf_served_matches_offline(capsys):
                               consts=consts, variants=("oracle",),
                               trace_graph=False)
     batch = raven.generate_batch(cfg.raven, seed=3, n=6)
-    res = eng.run(consts, requests_from_batch(batch), variant="oracle")
+    res = eng.run(requests_from_batch(batch), variant="oracle")
 
     ctx = [jnp.asarray(x) for x in nv.oracle_pmfs(
         cfg, jnp.asarray(batch["context_attrs"]))]
@@ -190,11 +190,11 @@ def test_registry_and_engine_errors():
     eng = cbase.reason_engine("mimonet", mcfg, ReasonConfig(batch_size=2),
                               consts=mconsts, trace_graph=False)
     with pytest.raises(ValueError, match="request 7"):
-        eng.run(mconsts, [ReasonRequest(uid=7)])
+        eng.run([ReasonRequest(uid=7)])
     with pytest.raises(ValueError, match="unknown variant"):
-        eng.run(mconsts, [], variant="oracle")
+        eng.run([], variant="oracle")
     with pytest.raises(ValueError, match="duplicate request uid"):
-        eng.run(mconsts, [ReasonRequest(uid=1), ReasonRequest(uid=1)])
+        eng.run([ReasonRequest(uid=1), ReasonRequest(uid=1)])
 
 
 def test_compile_schedule_rejects_bad_stages():
