@@ -74,4 +74,9 @@ def bench_kernels():
     from repro.kernels.circ_conv import ref as cref
     us_ref = _bench(lambda a, b: cref.circ_elem_ref(a, b, "conv"), x, y)
     rows.append(("kernels/circ_elem_ref_xla/us", us_ref, "oracle"))
-    return rows
+
+    # stamp every row with the active lowering plan so measurements are
+    # attributable to the backend that produced them
+    from repro.backend import registry
+    btag = f"backend={registry.get_plan().tag()}"
+    return [(name, us, f"{derived} {btag}") for name, us, derived in rows]

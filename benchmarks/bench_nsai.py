@@ -64,6 +64,15 @@ def _dse_point(schedule, max_pes: int = 4096):
     return design, f"dse={design.tag()}"
 
 
+def _stamp_backend(rows):
+    """Append the active lowering-plan tag to every row's provenance so
+    measurements are attributable to the backend that produced them."""
+    from repro.backend import registry
+
+    btag = f"backend={registry.get_plan().tag()}"
+    return [(name, val, f"{derived} {btag}") for name, val, derived in rows]
+
+
 def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
                d: int = 64, iters: int = 3):
     from repro.configs import base as cbase
@@ -118,7 +127,7 @@ def bench_nsai(model: str = "nvsa", problems: int = 32, batch_size: int = 4,
     if model == "nvsa":
         rows.extend(_bench_nvsa_extras(cbase, entry, cfg, consts, eng,
                                        stream, n, batch_size, d, iters))
-    return rows
+    return _stamp_backend(rows)
 
 
 def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
@@ -233,7 +242,7 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
                 (f"{pre}/service_p95_ms", s["p95"] * 1e3, "dispatch->done"),
                 (f"{pre}/total_p99_ms", t["p99"] * 1e3, "arrival->done"),
             ]
-    return rows
+    return _stamp_backend(rows)
 
 
 def main():

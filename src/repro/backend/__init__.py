@@ -1,0 +1,19 @@
+"""Backend negotiation: one lowering registry from kernels to ``deploy()``.
+
+``repro.backend.registry`` owns every compute-path decision the stack
+makes — which lowering (compiled Pallas, Pallas interpret, XLA reference)
+serves each heterogeneous kernel on the current platform.  Kernel wrappers
+consult the *active* :class:`~repro.backend.registry.LoweringPlan` instead
+of private platform tests; ``repro.serve.deploy`` negotiates a plan once
+per deployment and records it; ``REPRO_BACKEND`` forces fallbacks for
+graceful-degradation runs.
+"""
+
+from repro.backend.registry import (KERNELS, KernelSpec, Lowering,
+                                    LoweringPlan, active, get_plan,
+                                    negotiate, replay_tolerance, use_plan)
+
+__all__ = [
+    "KERNELS", "KernelSpec", "Lowering", "LoweringPlan", "active",
+    "get_plan", "negotiate", "replay_tolerance", "use_plan",
+]

@@ -602,7 +602,7 @@ REASON_MODELS = tuple(REASON_WORKLOADS)
 def compile_reason_schedule(model: str, cfg, variant: str | None = None,
                             consts=None,
                             batch_size: int | tuple[int, ...] = 4,
-                            trace_graph: bool = True):
+                            trace_graph: bool = True, plan=None):
     """Lower one registry entry to an executable ``StagedSchedule``.
 
     ``consts`` may be the real constant pytree (params/codebooks) or None —
@@ -615,6 +615,9 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
     4, 8)``): the schedule's ``input_specs``/buffers describe the largest,
     and the engine pads a partial admission group to the smallest covering
     bucket instead of the max.
+
+    ``plan``: a :class:`~repro.backend.registry.LoweringPlan` to compile
+    under (None = the active plan); recorded on the schedule.
     """
     from repro.serve import schedule as sch
 
@@ -637,12 +640,12 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
         entry.ingest(cfg, variant), entry.collect(cfg), variant=variant,
         consts=consts,
         input_specs=entry.input_specs(cfg, max_batch, variant),
-        trace_graph=trace_graph, batch_buckets=buckets)
+        trace_graph=trace_graph, batch_buckets=buckets, plan=plan)
 
 
 def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
                   variants: tuple[str, ...] | None = None,
-                  trace_graph: bool = True):
+                  trace_graph: bool = True, plan=None):
     """Compile all (or the given) variants of a workload and wrap them in
     the generic N-stage ``ReasonEngine``.  ``reason_cfg.buckets`` (when
     set) compiles every variant with that tuple of batch-size buckets.
@@ -661,7 +664,7 @@ def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
         v: compile_reason_schedule(
             model, cfg, variant=v, consts=consts,
             batch_size=reason_cfg.buckets or reason_cfg.batch_size,
-            trace_graph=trace_graph)
+            trace_graph=trace_graph, plan=plan)
         for v in (variants or entry.variants)}
     return ReasonEngine(schedules, reason_cfg, consts=consts)
 

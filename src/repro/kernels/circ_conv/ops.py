@@ -1,7 +1,10 @@
 """Jit'd public wrappers for the circ_conv kernel with shape handling.
 
-Dispatch policy: Pallas kernel (interpret-mode on CPU, compiled on TPU) for
-power-of-two ``d``; exact XLA gather reference otherwise.
+Dispatch policy comes from the active :class:`~repro.backend.registry.
+LoweringPlan` (``repro.backend.registry``): compiled Pallas on TPU/GPU,
+interpret mode on CPU, and the exact XLA gather reference whenever the
+plan forces ``xla`` or the block dim fails the kernel's pow2/size
+capability predicate.
 """
 
 from __future__ import annotations
@@ -10,22 +13,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import registry
 from repro.kernels.circ_conv import kernel, ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _is_pow2(d: int) -> bool:
-    return (d & (d - 1)) == 0
-
-
 def _circ_elem_dispatch(af: jax.Array, bf: jax.Array, mode: str) -> jax.Array:
-    d = af.shape[-1]
-    if _is_pow2(d) and d >= 8:
-        return kernel.circ_elem(af, bf, mode=mode, interpret=_interpret())
-    return ref.circ_elem_ref(af, bf, mode)
+    plan = registry.get_plan()
+    low = plan.select("circ_conv", size=af.shape[-1])
+    if low.is_ref:
+        return ref.circ_elem_ref(af, bf, mode)
+    return kernel.circ_elem(af, bf, mode=mode,
+                            interpret=plan.run_interpret(low))
 
 
 # Custom VJPs so the Pallas kernels are trainable. Circular-conv calculus:
@@ -87,8 +85,11 @@ def circ_bind(a: jax.Array, b: jax.Array, mode: str = "conv") -> jax.Array:
 
 def circ_bind_dict(x: jax.Array, dictionary: jax.Array, mode: str = "conv") -> jax.Array:
     """x: (N, blocks, d) vs dictionary: (M, blocks, d) -> (N, M, blocks, d)."""
-    if _is_pow2(x.shape[-1]) and x.shape[-1] >= 8:
-        out = kernel.circ_dict(x, dictionary, mode=mode, interpret=_interpret())
-    else:
+    plan = registry.get_plan()
+    low = plan.select("circ_conv", size=x.shape[-1])
+    if low.is_ref:
         out = ref.circ_dict_ref(x, dictionary, mode)
+    else:
+        out = kernel.circ_dict(x, dictionary, mode=mode,
+                               interpret=plan.run_interpret(low))
     return jnp.swapaxes(out, 1, 2)  # (N, B, M, d) -> (N, M, B, d)

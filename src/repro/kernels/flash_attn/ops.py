@@ -5,24 +5,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.backend import registry
 from repro.kernels.flash_attn import kernel, ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,
-              causal: bool = True, use_kernel: bool = True) -> jax.Array:
-    """q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) (pre-repeated GQA groups)."""
+              causal: bool = True, use_kernel: bool | None = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) (pre-repeated GQA groups).
+
+    ``use_kernel`` forces the path explicitly; None (default) consults the
+    active :class:`~repro.backend.registry.LoweringPlan`.
+    """
     b, sq, h, hd = q.shape
     skv = k.shape[1]
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    plan = registry.get_plan()
+    low = plan.select("flash_attn")
+    if use_kernel is None:
+        use_kernel = not low.is_ref
     if use_kernel:
         out = kernel.flash_attention(qf, kf, vf, scale=scale, causal=causal,
-                                     interpret=_interpret())
+                                     interpret=plan.run_interpret(low))
     else:
         out = ref.flash_attention_ref(qf, kf, vf, scale=scale, causal=causal)
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

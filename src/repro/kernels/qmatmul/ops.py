@@ -1,15 +1,12 @@
-"""Public quantized-matmul API: quantize helpers + kernel dispatch."""
+"""Public quantized-matmul API: quantize helpers + registry-driven dispatch."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.backend import registry
 from repro.kernels.qmatmul import kernel, ref
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def quantize_rows(x: jax.Array, bits: int = 8):
@@ -43,15 +40,22 @@ def pack_int4(q: jax.Array) -> jax.Array:
 
 
 def qmatmul(x_q, w_q, x_scale, w_scale, int4: bool = False, out_dtype=jnp.float32,
-            use_kernel: bool = True, **block_kw):
+            use_kernel: bool | None = None, **block_kw):
+    """``use_kernel`` forces the path explicitly; None (default) consults
+    the active :class:`~repro.backend.registry.LoweringPlan`."""
+    plan = registry.get_plan()
+    low = plan.select("qmatmul")
+    if use_kernel is None:
+        use_kernel = not low.is_ref
     if use_kernel:
         return kernel.qmatmul(x_q, w_q, x_scale, w_scale, int4=int4,
-                              interpret=_interpret(), out_dtype=out_dtype, **block_kw)
+                              interpret=plan.run_interpret(low),
+                              out_dtype=out_dtype, **block_kw)
     return ref.qmatmul_ref(x_q, w_q, x_scale, w_scale, int4=int4, out_dtype=out_dtype)
 
 
 def qdense(x: jax.Array, w: jax.Array, bits_x: int = 8, bits_w: int = 8,
-           out_dtype=jnp.bfloat16, use_kernel: bool = True) -> jax.Array:
+           out_dtype=jnp.bfloat16, use_kernel: bool | None = None) -> jax.Array:
     """Quantize-on-the-fly dense layer: x (M, K) f, w (K, N) f -> (M, N)."""
     n = w.shape[1]
     x_q, x_s = quantize_rows(x, bits_x)

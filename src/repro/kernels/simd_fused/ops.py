@@ -1,26 +1,31 @@
-"""Public wrapper for the fused SIMD-unit kernel."""
+"""Public wrapper for the fused SIMD-unit kernel (registry-driven dispatch)."""
 
 from __future__ import annotations
 
+import functools
+
 import jax
 
+from repro.backend import registry
 from repro.kernels.simd_fused import kernel, ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-import functools
+def _run_kernel(q, dictionary, temp):
+    plan = registry.get_plan()
+    low = plan.select("simd_fused", size=q.shape[-1])
+    if low.is_ref:
+        return ref.fused_match_prob_ref(q, dictionary, temp)
+    return kernel.fused_match_prob(q, dictionary, temp,
+                                   interpret=plan.run_interpret(low))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _fused_kernel(q, dictionary, temp):
-    return kernel.fused_match_prob(q, dictionary, temp, interpret=_interpret())
+    return _run_kernel(q, dictionary, temp)
 
 
 def _fused_fwd(q, dictionary, temp):
-    out = kernel.fused_match_prob(q, dictionary, temp, interpret=_interpret())
+    out = _run_kernel(q, dictionary, temp)
     return out, (q, dictionary)
 
 
@@ -36,7 +41,12 @@ _fused_kernel.defvjp(_fused_fwd, _fused_bwd)
 
 
 def fused_match_prob(q: jax.Array, dictionary: jax.Array, temp: float = 1.0,
-                     use_kernel: bool = True) -> jax.Array:
+                     use_kernel: bool | None = None) -> jax.Array:
+    """``use_kernel`` forces the path explicitly; None (default) consults
+    the active :class:`~repro.backend.registry.LoweringPlan`."""
+    if use_kernel is None:
+        use_kernel = not registry.active("simd_fused",
+                                         size=q.shape[-1]).is_ref
     if use_kernel:
         return _fused_kernel(q, dictionary, temp)
     return ref.fused_match_prob_ref(q, dictionary, temp)

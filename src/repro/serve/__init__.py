@@ -4,7 +4,9 @@ One engine protocol (``serve.runtime.EngineProtocol``) serves every
 traffic class: the slot-pool LM ``Engine`` (``serve.engine``), the staged
 NSAI ``ReasonEngine`` (``serve.reason``), the deadline-batched
 ``FrontDoor`` admission layer over any mix of them (``serve.frontdoor``),
-and ``deploy()`` — the DSE-driven generator->architecture entry point.
+``deploy()`` — the DSE-driven generator->architecture entry point, which
+also negotiates the kernel :class:`~repro.backend.registry.LoweringPlan`
+once per deployment — and golden-trace record/replay (``serve.trace``).
 
 Only lightweight names are imported eagerly; engine modules (which pull
 in jax) load on first use.
@@ -14,9 +16,11 @@ from repro.serve.deploy import Budget, Deployment, Traffic, deploy
 from repro.serve.runtime import (EngineProtocol, GroupRecord,
                                  TRAFFIC_CLASSES, TrafficClass,
                                  resolve_models, work_unit_name, work_units)
+from repro.serve.trace import GoldenTrace, ReplayReport, TraceDiff, record
 
 __all__ = [
-    "Budget", "Deployment", "EngineProtocol", "GroupRecord",
-    "TRAFFIC_CLASSES", "Traffic", "TrafficClass", "deploy",
-    "resolve_models", "work_unit_name", "work_units",
+    "Budget", "Deployment", "EngineProtocol", "GoldenTrace", "GroupRecord",
+    "ReplayReport", "TRAFFIC_CLASSES", "TraceDiff", "Traffic",
+    "TrafficClass", "deploy", "record", "resolve_models", "work_unit_name",
+    "work_units",
 ]

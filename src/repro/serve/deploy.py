@@ -35,6 +35,7 @@ import dataclasses
 import time
 from typing import Any, Callable, Iterable, Mapping
 
+from repro.backend import registry as backend_registry
 from repro.serve.frontdoor import (ArrivalRequest, FrontDoor,
                                    FrontDoorConfig, FrontDoorReport,
                                    merge_arrivals, poisson_arrivals)
@@ -83,14 +84,34 @@ class Deployment:
     traffic: Traffic
     budget: Budget
     seed: int = 0
+    # the LoweringPlan negotiated once at deploy() time; every NSAI
+    # schedule compiled under it (None only for hand-built Deployments)
+    backend: backend_registry.LoweringPlan | None = None
+    # the per-model option kwargs deploy() was called with — kept so a
+    # recorded golden trace can re-deploy the same models for replay
+    options: dict = dataclasses.field(default_factory=dict)
 
     def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
         """Serve one merged arrival stream through the front-door."""
         return self.door.serve(arrivals)
 
+    def backend_record(self) -> dict | None:
+        """The negotiated LoweringPlan as a plain record: platform, how it
+        was chosen (negotiated vs env/explicit override), and the headline
+        lowering per registered kernel."""
+        if self.backend is None:
+            return None
+        return {
+            "platform": self.backend.platform,
+            "source": self.backend.source,
+            "lowerings": self.backend.tags(),
+        }
+
     def report(self) -> dict:
-        """Per-model deployment record, incl. the chosen DSE point."""
+        """Per-model deployment record, incl. the chosen DSE point and the
+        negotiated per-kernel backend lowerings."""
         out = {}
+        backend = self.backend_record()
         for m, eng in self.engines.items():
             design, plan = self.designs[m], self.plans[m]
             if self.classes[m] == "reason":
@@ -112,12 +133,15 @@ class Deployment:
                 "design": design.summary() if design is not None else None,
                 "searched_points": getattr(design, "searched_points", None),
                 "serving": serving,
+                "backend": backend,
             }
         return out
 
     def summary(self) -> str:
-        """One line per model: class, serving knobs, DSE provenance."""
+        """One line per model: class, serving knobs, DSE + backend tags."""
         lines = []
+        backend = f"backend={self.backend.tag()}" if self.backend else \
+            "backend=n/a"
         for m, rec in self.report().items():
             design = self.designs[m]
             if design is not None:
@@ -126,7 +150,7 @@ class Deployment:
             else:
                 dse = "dse=n/a (single nn stream)"
             knobs = " ".join(f"{k}={v}" for k, v in rec["serving"].items())
-            lines.append(f"{m} [{rec['class']}]: {knobs} | {dse}")
+            lines.append(f"{m} [{rec['class']}]: {knobs} | {dse} | {backend}")
         return "\n".join(lines)
 
     # -- synthetic traffic + warmup (launcher / benchmark helpers) ----------
@@ -189,6 +213,7 @@ class Deployment:
 def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
            budget: Budget | None = None, *, seed: int = 0,
            options: Mapping[str, Mapping[str, Any]] | None = None,
+           backend: str | backend_registry.LoweringPlan | None = None,
            clock: Callable[[], float] = time.perf_counter,
            sleep: Callable[[float], None] = time.sleep) -> Deployment:
     """Deploy a mixed set of workloads behind one front-door.
@@ -205,6 +230,14 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     ``core.dse.explore`` under ``budget.max_pes``, and the winning design
     point mapped to batch buckets / ``max_inflight`` / schedule by
     ``core.dse.serving_plan`` (see the module docstring).
+
+    ``backend``: the kernel-lowering choice for the whole deployment —
+    None negotiates against the runtime (honoring ``REPRO_BACKEND``), a
+    string is an explicit override spec (``"xla"`` or
+    ``"circ_conv=xla,qmatmul=pallas"``), or pass a pre-built
+    :class:`~repro.backend.registry.LoweringPlan`.  Negotiation happens
+    exactly once here; every NSAI schedule compiles under the resulting
+    plan and ``Deployment.report()`` records the per-kernel choices.
     """
     import jax
 
@@ -221,6 +254,10 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     models = rt.resolve_models("frontdoor", workloads)
     if not models:
         raise ValueError("deploy needs at least one workload")
+    if isinstance(backend, backend_registry.LoweringPlan):
+        lowering_plan = backend
+    else:
+        lowering_plan = backend_registry.negotiate(override=backend)
 
     engines: dict[str, Any] = {}
     classes: dict[str, str] = {}
@@ -241,7 +278,7 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
             # explore the design space over its dataflow graph
             probe = cbase.compile_reason_schedule(
                 m, cfg, variant=variant, batch_size=budget.max_batch,
-                trace_graph=False)
+                trace_graph=False, plan=lowering_plan)
             design = dse.explore(sch.ensure_graph(probe),
                                  max_pes=budget.max_pes)
             plan = dse.serving_plan(design, max_batch=budget.max_batch,
@@ -253,7 +290,8 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
                              schedule=plan.schedule, variant=variant,
                              max_inflight=plan.max_inflight,
                              buckets=plan.buckets),
-                consts=consts, variants=(variant,), trace_graph=False)
+                consts=consts, variants=(variant,), trace_graph=False,
+                plan=lowering_plan)
             classes[m], designs[m], plans[m] = "reason", design, plan
             variants[m] = variant
         else:
@@ -276,4 +314,6 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     return Deployment(engines=engines, door=door, classes=classes,
                       designs=designs, plans=plans, configs=configs,
                       variants=variants, traffic=traffic, budget=budget,
-                      seed=seed)
+                      seed=seed, backend=lowering_plan,
+                      options={m: dict(options.get(m, {})) for m in models
+                               if options.get(m)})

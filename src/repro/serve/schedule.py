@@ -37,11 +37,13 @@ schedule (its overlap-vs-sequential gate).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
+from repro.backend import registry
 from repro.core import dataflow as dfl
 from repro.core import trace as trace_mod
 from repro.core.opgraph import OpGraph
@@ -129,6 +131,11 @@ class StagedSchedule:
     # compiled with ``trace_graph=False``): abstract consts + stage-0 specs
     input_specs: Any = None
     consts_spec: Any = None
+    # the LoweringPlan baked into jit_stages: every stage traces (and
+    # therefore compiles) under this plan, so the kernel lowerings a
+    # deployment negotiated are pinned per schedule, independent of
+    # whatever plan is active when the executor later calls the jits.
+    plan: registry.LoweringPlan | None = None
 
     @property
     def stage_names(self) -> tuple[str, ...]:
@@ -211,11 +218,25 @@ def _abstract(tree):
         if hasattr(x, "shape") and hasattr(x, "dtype") else x, tree)
 
 
+def _plan_scoped(fn: Callable, plan: registry.LoweringPlan) -> Callable:
+    """Bind a stage fn to a LoweringPlan: tracing (and hence the lowering
+    choices jit bakes into its cache) always happens under ``plan``."""
+
+    @functools.wraps(fn)
+    def scoped(consts, bufs):
+        with registry.use_plan(plan):
+            return fn(consts, bufs)
+
+    return scoped
+
+
 def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
                      ingest: Callable, collect: Callable, *,
                      variant: str = "default", consts=None, input_specs=None,
                      graph: OpGraph | None = None, trace_graph: bool = True,
-                     batch_buckets: tuple[int, ...] = ()) -> StagedSchedule:
+                     batch_buckets: tuple[int, ...] = (),
+                     plan: registry.LoweringPlan | None = None
+                     ) -> StagedSchedule:
     """Lower a stage list (+ its dataflow graph) to a StagedSchedule.
 
     ``input_specs``: pytree of ``jax.ShapeDtypeStruct`` for one staged
@@ -234,6 +255,11 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
     ``batch_buckets``: ascending compiled batch sizes (``input_specs``
     must describe the largest); the executor pads a partial admission
     group to the smallest covering bucket instead of the max.
+
+    ``plan``: the :class:`~repro.backend.registry.LoweringPlan` the
+    schedule compiles under (None = the plan active now, via
+    ``registry.get_plan()``).  Stage fns are wrapped so both the buffer/
+    cost tracing here and the later jit tracing happen under that plan.
     """
     stages = tuple(stages)
     if not stages:
@@ -247,6 +273,10 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
                 or batch_buckets[0] < 1:
             raise ValueError(f"batch_buckets must be ascending positive "
                              f"sizes, got {batch_buckets}")
+    if plan is None:
+        plan = registry.get_plan()
+    stages = tuple(dataclasses.replace(s, fn=_plan_scoped(s.fn, plan))
+                   for s in stages)
 
     buffers: tuple[BufferSpec, ...] = ()
     stage_costs: tuple[dict, ...] = ()
@@ -281,7 +311,8 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
         batch_buckets=batch_buckets,
         input_specs=_abstract(input_specs) if input_specs is not None
         else None,
-        consts_spec=_abstract(consts) if input_specs is not None else None)
+        consts_spec=_abstract(consts) if input_specs is not None else None,
+        plan=plan)
 
 
 def _ensure_stage_costs(schedule: StagedSchedule):

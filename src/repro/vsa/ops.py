@@ -10,10 +10,16 @@ and its inverse, circular correlation (unbinding). Bundling is normalized
 superposition; similarity is the blockwise mean of dot products.
 
 Compute paths:
-- ``bind``/``unbind`` route through the Pallas circulant-matmul kernel (TPU
-  target; interpret-mode on CPU) for power-of-two ``d`` above a size
-  threshold, else through the exact gather reference below.
-- ``*_ref`` functions here are the pure-jnp oracles used by kernel tests.
+- ``bind``/``unbind``/``match_prob`` dispatch through the backend lowering
+  registry (``repro.backend.registry``): the active
+  :class:`~repro.backend.registry.LoweringPlan` picks compiled Pallas
+  (TPU/GPU), Pallas interpret mode (CPU), or the exact gather/XLA
+  reference per kernel — registered there with its capability predicates
+  (power-of-two ``d``, the ``dispatch_min_size`` perf threshold below
+  which XLA wins anyway) and overridable via ``REPRO_BACKEND``.
+  ``dispatch_path`` reports the resolved route for a given ``d``.
+- ``*_ref`` functions here are the pure-jnp oracles used by kernel tests
+  (and double as the registry's ``xla`` lowering of ``circ_conv``).
 """
 
 from __future__ import annotations
@@ -23,6 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.backend import registry
 
 
 # ---------------------------------------------------------------------------
@@ -69,18 +77,17 @@ def circ_corr_fft(a: jax.Array, b: jax.Array) -> jax.Array:
 # Public API (kernel-dispatching)
 # ---------------------------------------------------------------------------
 
-_KERNEL_MIN_D = 128  # below this the XLA gather reference is faster anyway
-
-
 def dispatch_path(d: int) -> str:
-    """Which implementation ``bind``/``unbind`` route to for block dim ``d``.
+    """Which implementation ``bind``/``unbind`` route to for block dim ``d``
+    under the active :class:`~repro.backend.registry.LoweringPlan`.
 
-    "kernel" = Pallas circulant-matmul (power-of-two d at or above the size
-    threshold); "gather" = the exact XLA gather reference. Exposed so the
-    kernel-conformance tests can assert the routing, not just the numerics.
+    "kernel" = a Pallas lowering of ``circ_conv`` (power-of-two d at or
+    above the registry's ``dispatch_min_size``); "gather" = the exact XLA
+    gather reference. Exposed so the kernel-conformance tests can assert
+    the routing, not just the numerics.
     """
-    return "kernel" if (d >= _KERNEL_MIN_D and (d & (d - 1)) == 0) \
-        else "gather"
+    low = registry.active("circ_conv", size=d, dispatch=True)
+    return "gather" if low.is_ref else "kernel"
 
 
 def _use_kernel(a: jax.Array, use_kernel: bool | None) -> bool:
@@ -146,7 +153,8 @@ def match_prob(q: jax.Array, dictionary: jax.Array, temp: float = 1.0,
     """
     d = q.shape[-1]
     if use_kernel is None:
-        use_kernel = d >= _KERNEL_MIN_D
+        use_kernel = not registry.active("simd_fused", size=d,
+                                         dispatch=True).is_ref
     if use_kernel:
         from repro.kernels.simd_fused import ops as k_ops
 

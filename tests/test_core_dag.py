@@ -55,6 +55,7 @@ def test_vsa_runtime_positive_and_monotone(nvec, d, n):
 
 
 def test_trace_classifies_kernels():
+    from repro.backend import registry
     from repro.vsa import ops as vsa
 
     def f(a, b, w):
@@ -65,7 +66,11 @@ def test_trace_classifies_kernels():
     a = jax.ShapeDtypeStruct((4, 2, 128), jnp.float32)
     b = jax.ShapeDtypeStruct((4, 2, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 64), jnp.float32)
-    g = trace.extract(f, a, b, w)
+    # pin the negotiated plan: the point of this test is classifying the
+    # *Pallas* circ_conv path, which a REPRO_BACKEND=xla override (the
+    # forced-fallback CI leg) would otherwise route to gather+dot_general
+    with registry.use_plan(registry.negotiate(override="")):
+        g = trace.extract(f, a, b, w)
     kinds = {n.kind for n in g}
     assert "vsa" in kinds and "nn" in kinds and "simd" in kinds
     vsa_nodes = g.vsa_nodes()

@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.backend import registry
 from repro.kernels.circ_conv import kernel as ck, ops as cops, ref as cref
 from repro.kernels.qmatmul import kernel as qk, ops as qops, ref as qref
 from repro.kernels.simd_fused import kernel as sk, ref as sref
@@ -67,10 +68,69 @@ def test_nonpow2_d_routes_to_gather_fallback(d):
 
 
 def test_pow2_d_above_threshold_routes_to_kernel():
-    assert vsa.dispatch_path(128) == "kernel"
-    assert vsa.dispatch_path(256) == "kernel"
-    assert vsa.dispatch_path(64) == "gather"   # below size threshold
-    assert vsa.dispatch_path(192) == "gather"  # above threshold, not pow2
+    # pin the negotiated plan: routing assertions must hold regardless of
+    # any REPRO_BACKEND override in the environment (the forced-fallback
+    # CI leg runs this suite under REPRO_BACKEND=xla)
+    with registry.use_plan(registry.negotiate(override="")):
+        assert vsa.dispatch_path(128) == "kernel"
+        assert vsa.dispatch_path(256) == "kernel"
+        assert vsa.dispatch_path(64) == "gather"   # below size threshold
+        assert vsa.dispatch_path(192) == "gather"  # above thresh, not pow2
+
+
+# -- registry sweep: every registered lowering of every kernel ---------------
+#
+# The cases parametrize straight from the lowering registry, so a kernel or
+# lowering added there is conformance-tested here automatically.  Each case
+# drives the *public ops wrapper* under a plan forcing one lowering and
+# compares against the same wrapper under the kernel's exact ``xla``
+# reference lowering, with the tolerance the registry declares for its
+# equivalence class (0.0 = bit-exact).
+
+_LOWERING_CASES = [(name, low.name)
+                   for name, spec in registry.KERNELS.items()
+                   for low in spec.lowerings]
+
+
+def _run_kernel_under(kernel, plan):
+    key = jax.random.PRNGKey(42)
+    if kernel == "circ_conv":
+        a = jax.random.normal(key, (3, 2, 32))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (3, 2, 32))
+        with registry.use_plan(plan):
+            return np.asarray(cops.circ_bind(a, b, "conv"))
+    if kernel == "qmatmul":
+        x = jax.random.normal(key, (5, 24))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (24, 9))
+        with registry.use_plan(plan):
+            return np.asarray(qops.qdense(x, w, out_dtype=jnp.float32))
+    if kernel == "simd_fused":
+        from repro.kernels.simd_fused import ops as sops
+        q = vsa.random_codebook(key, 6, 2, 32)
+        dic = vsa.random_codebook(jax.random.fold_in(key, 1), 4, 2, 32)
+        with registry.use_plan(plan):
+            return np.asarray(sops.fused_match_prob(q, dic, 0.7))
+    assert kernel == "flash_attn"
+    from repro.kernels.flash_attn import ops as fops
+    q = jax.random.normal(key, (2, 12, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 12, 2, 16))
+    with registry.use_plan(plan):
+        return np.asarray(fops.flash_mha(q, k, v, scale=0.25))
+
+
+@pytest.mark.parametrize("kernel,lowering", _LOWERING_CASES)
+def test_registry_lowering_conformance(kernel, lowering):
+    low = registry.KERNELS[kernel].by_name(lowering)
+    out = _run_kernel_under(
+        kernel, registry.negotiate(override=f"{kernel}={lowering}"))
+    ref = _run_kernel_under(
+        kernel, registry.negotiate(override=f"{kernel}=xla"))
+    if low.equivalence == "epsilon":
+        np.testing.assert_allclose(out, ref, atol=low.epsilon,
+                                   rtol=low.epsilon)
+    else:
+        np.testing.assert_array_equal(out, ref)
 
 
 @pytest.mark.parametrize("mode", ["conv", "corr"])

@@ -21,8 +21,13 @@ def test_end_to_end_pipeline_on_traced_model():
            for n in cfg.raven.attr_sizes]
     cand = [jax.ShapeDtypeStruct((4, 8, n), jnp.float32)
             for n in cfg.raven.attr_sizes]
-    g = trace.extract(lambda c1, c2: nvsa.reason(cfg, codebooks, c1, c2),
-                      ctx, cand)
+    # pin the negotiated plan: the vsa-node assertion needs the Pallas
+    # circ_conv path, which a REPRO_BACKEND=xla override (the CI
+    # forced-fallback leg) would route to gather+dot_general
+    from repro.backend import registry
+    with registry.use_plan(registry.negotiate(override="")):
+        g = trace.extract(lambda c1, c2: nvsa.reason(cfg, codebooks, c1, c2),
+                          ctx, cand)
     assert len(g.vsa_nodes()) > 0, "kernel ops must be classified as vsa"
     df = dataflow.build(g)
     design = dse.explore(df, max_pes=16384)

@@ -1,0 +1,118 @@
+"""Golden-trace record -> replay round trip (the serving-side analogue of
+NSFlow's golden-vector RTL validation).
+
+One nvsa deployment at d=128 — large enough that the default CPU plan
+actually engages the Pallas interpret lowerings (d below the registry's
+``dispatch_min_size`` would route everything to the gather reference and
+the cross-plan leg would compare xla against itself).  The recorded trace
+must replay bit-exact under the same plan and within the registry-declared
+epsilon under the forced all-XLA fallback plan.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.backend import registry
+from repro.serve import Budget, GoldenTrace, Traffic, deploy, record
+from repro.serve import trace as trace_mod
+
+N_REQUESTS = 6
+
+
+@pytest.fixture(scope="module")
+def golden(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("trace") / "golden.jsonl")
+    # pin the recorded plan to the pure platform negotiation: the
+    # cross-plan leg below must stay meaningful even when the suite runs
+    # under a REPRO_BACKEND override (the forced-fallback CI leg)
+    dep = deploy(["nvsa"], Traffic(rate_rps=500.0, deadline_s=0.004),
+                 Budget(max_batch=2, inflight_cap=2), seed=3,
+                 options={"nvsa": {"d": 128}},
+                 backend=registry.negotiate(override=""))
+    arrivals, _ = dep.synthetic_traffic(N_REQUESTS, seed=11)
+    report, trace = record(dep, arrivals, path)
+    return dep, report, trace, path
+
+
+def test_record_covers_everything_served(golden):
+    dep, report, trace, path = golden
+    served = {(m, uid) for m, res in report.results.items() for uid in res}
+    assert len(served) == N_REQUESTS
+    assert set(trace.requests) == served == set(trace.results)
+    assert [tuple(g["uids"]) for g in trace.groups] == \
+        [tuple(g.uids) for g in report.groups]
+    # the default CPU plan must exercise a non-ref circ_conv path at d=128,
+    # otherwise the cross-plan leg below is vacuous
+    assert trace.recorded_tags == dep.backend.tags()
+    assert not dep.backend.select("circ_conv", size=128,
+                                  dispatch=True).is_ref
+
+
+def test_trace_file_is_loadable_and_digests_hold(golden):
+    _, _, trace, path = golden
+    loaded = GoldenTrace.load(path)
+    assert loaded.header["deploy"]["workloads"] == ["nvsa"]
+    assert loaded.recorded_tags == trace.recorded_tags
+    for key, line in loaded.requests.items():
+        arrays = {k: trace_mod._dec_array(v)
+                  for k, v in line["arrays"].items()}
+        assert trace_mod._digest(arrays) == line["digest"], key
+
+
+def test_replay_same_plan_is_bit_exact(golden):
+    dep, _, trace, _ = golden
+    # same engines, same jit caches — the strictest same-plan replay
+    diff = trace.diff(trace.replay(deployment=dep))
+    assert diff.tolerance == 0.0
+    assert diff.n_compared == N_REQUESTS
+    assert diff.ok, diff.describe()
+    assert diff.max_abs_err == 0.0
+
+
+def test_replay_fresh_deployment_same_plan_is_bit_exact(golden):
+    _, _, trace, path = golden
+    # re-deploy from the recorded spec: consts regenerate from the seed,
+    # schedules recompile — answers must still be bit-identical
+    diff = GoldenTrace.load(path).replay_and_diff(
+        backend=registry.negotiate(override=""))
+    assert diff.tolerance == 0.0
+    assert diff.ok, diff.describe()
+
+
+def test_replay_forced_xla_plan_within_registry_epsilon(golden):
+    _, _, trace, path = golden
+    diff = GoldenTrace.load(path).replay_and_diff(backend="xla")
+    assert diff.replayed_tags == {k: "xla" for k in registry.KERNELS}
+    # tolerance comes from the registry's equivalence classes, not a
+    # hand-picked constant
+    expected = registry.replay_tolerance(trace.recorded_tags,
+                                         diff.replayed_tags)
+    assert diff.tolerance == pytest.approx(expected) and expected > 0.0
+    assert diff.n_compared == N_REQUESTS
+    assert diff.ok, diff.describe()
+    # integer answers survive the lowering change exactly
+    assert not any(f.field == "answer" for f in diff.failures)
+
+
+def test_diff_flags_corrupted_answer(golden):
+    dep, _, trace, _ = golden
+    rep = trace.replay(deployment=dep)
+    key = next(iter(rep.results))
+    rep.results[key].answer = int(rep.results[key].answer) + 1
+    diff = trace.diff(rep)
+    assert not diff.ok
+    assert any(f.field == "answer" and f.exact_mismatch
+               for f in diff.failures)
+
+
+def test_header_records_deploy_spec(golden):
+    _, _, _, path = golden
+    with open(path) as f:
+        header = json.loads(f.readline())
+    assert header["kind"] == "header"
+    assert header["backend"]["platform"]
+    assert header["deploy"]["seed"] == 3
+    assert header["deploy"]["options"] == {"nvsa": {"d": 128}}
+    assert header["models"]["nvsa"]["class"] == "reason"
