@@ -16,6 +16,15 @@ engine and reports reasoning-problems/s for:
     deadline-batched, shape-bucketed front-door (``serve.frontdoor``),
     reporting achieved problems/s plus p50/p95 queueing and service
     latency (and total p99) per schedule at each load point.
+  - ``--scaling``: a paper-style **symbolic-scaling sweep** — runtime as
+    the VSA dimension grows (NSFlow's headline: 150x symbolic scale ->
+    only 4x runtime), with the fused whole-pipeline schedule (one jit
+    dispatch per admission group) tracked as a ratio against the staged
+    schedule (K dispatches) at every scale point.  ``--check`` gates the
+    largest scale point: one dispatch per fused group, zero fallbacks,
+    and the fused wall clock not behind staged beyond a 10% noise floor
+    (dispatch savings are O(100us)/group, so strict wall-clock ordering
+    is unmeasurable over scheduler noise on shared runners).
 
 The request stream is a lazy generator — per-request rendering runs inside
 the pipeline, exactly the preprocessing a serving frontend would do — so
@@ -36,6 +45,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import re
 import sys
 import time
 
@@ -160,6 +170,81 @@ def _bench_nvsa_extras(cbase, entry, cfg, consts, eng, stream, n,
     return rows
 
 
+def bench_scaling(model: str, problems: int = 32, batch_size: int = 4,
+                  dims=(64, 128), iters: int = 3):
+    """Symbolic-scaling sweep: fused vs staged runtime as the VSA dim grows.
+
+    The paper's scalability claim is that symbolic scale-up must not scale
+    runtime proportionally (150x scale -> 4x runtime, Fig. 10); the serving
+    analogue measured here is the problems/s curve over the VSA block dim
+    for both pipeline schedules, with ``fused_vs_staged`` (staged time /
+    fused time; >= 1.0 means the single-dispatch pipeline wins) a tracked
+    ratio per scale point.  RAVEN reasoners sweep their symbolic-only
+    ``oracle`` variant so the curve is the symbolic stream's, not the CNN
+    frontend's.  Rows record the schedule's fused-negotiation outcome and
+    the measured per-group dispatch counts (K staged vs 1 fused).
+    """
+    from repro.configs import base as cbase
+    from repro.serve.reason import ReasonConfig
+
+    entry = cbase.REASON_WORKLOADS[model]
+    variant = "oracle" if "oracle" in entry.variants else entry.variants[0]
+    rows = []
+    fused_dts = {}
+    for d in dims:
+        cfg = entry.make_config(d=d)
+        consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+        eng = cbase.reason_engine(
+            model, cfg, ReasonConfig(batch_size=batch_size, variant=variant),
+            consts=consts, variants=(variant,), trace_graph=False)
+        sched = eng.schedules[variant]
+
+        def stream(count, start=0):
+            factory, _ = entry.make_requests(cfg, count, seed=9500 + start)
+            return factory()
+
+        # warm both paths' jit caches before timing
+        eng.run(stream(batch_size), schedule="overlap")
+        eng.run(stream(batch_size), schedule="fused")
+
+        # measured per-group dispatch counts (the K -> 1 claim)
+        d0, b0 = eng.stats["dispatches"], eng.stats["batches"]
+        eng.run(stream(problems), schedule="overlap")
+        disp_staged = (eng.stats["dispatches"] - d0) / \
+            max(1, eng.stats["batches"] - b0)
+        d0, b0 = eng.stats["dispatches"], eng.stats["batches"]
+        f0 = eng.stats["fused_fallback_groups"]
+        eng.run(stream(problems), schedule="fused")
+        disp_fused = (eng.stats["dispatches"] - d0) / \
+            max(1, eng.stats["batches"] - b0)
+        fallbacks = eng.stats["fused_fallback_groups"] - f0
+
+        n = problems
+        dt_staged = _best_of(lambda: eng.run(stream(n), schedule="overlap"),
+                             iters)
+        dt_fused = _best_of(lambda: eng.run(stream(n), schedule="fused"),
+                            iters)
+        fused_dts[d] = dt_fused
+        pre = f"nsai/{model}/scaling/d{d}"
+        neg = (f"variant={variant} fused_eq={sched.fused_equivalence} "
+               f"diff={'/'.join(sched.fused_lowering_diff) or 'none'}")
+        rows += [
+            (f"{pre}/staged_problems_s", n / dt_staged,
+             f"{neg} dispatches_per_group={disp_staged:g}"),
+            (f"{pre}/fused_problems_s", n / dt_fused,
+             f"{neg} dispatches_per_group={disp_fused:g} "
+             f"fallback_groups={fallbacks}"),
+            (f"{pre}/fused_vs_staged/ratio", dt_staged / dt_fused,
+             f"{neg} staged_K={disp_staged:g} fused_K={disp_fused:g}"),
+        ]
+    if len(dims) > 1:
+        lo, hi = dims[0], dims[-1]
+        rows.append((f"nsai/{model}/scaling/runtime_growth",
+                     fused_dts[hi] / fused_dts[lo],
+                     f"fused runtime d{lo}->d{hi} (scale x{hi / lo:g})"))
+    return _stamp_backend(rows)
+
+
 def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
                      d: int = 64, loads=(0.5, 0.8, 1.2),
                      deadline_ms: float = 10.0):
@@ -245,6 +330,68 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
     return _stamp_backend(rows)
 
 
+def _emit(rows, json_path):
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if json_path:
+        json_path.parent.mkdir(parents=True, exist_ok=True)
+        json_path.write_text(json.dumps(
+            [{"name": n, "value": v, "derived": str(x)}
+             for n, v, x in rows], indent=1))
+
+
+def _scaling_main(args):
+    dims = tuple(int(x) for x in args.dims.split(",") if x.strip())
+    rows = bench_scaling(model=args.model, problems=args.problems,
+                         batch_size=args.batch_size, dims=dims,
+                         iters=args.iters)
+    _emit(rows, args.json)
+    if not args.check:
+        return 0
+    hi = dims[-1]
+    key = f"nsai/{args.model}/scaling/d{hi}/fused_vs_staged/ratio"
+    ratio = {n: v for n, v, _ in rows}[key]
+    # Wall-clock gate: per-group dispatch savings are O(100us) while group
+    # compute is O(ms), so run-to-run scheduler noise on shared CI runners
+    # swamps a strict >= 1.0 comparison.  Remeasure once with a larger
+    # sample, then fail only below a noise floor — a real fused-path
+    # regression (per-group recompilation, fallback engaging) lands far
+    # below it.  The deterministic claims (one dispatch per group, zero
+    # fallbacks) are gated strictly below.
+    noise_floor = 0.9
+    if ratio < 1.0:
+        print(f"scaling gate: {ratio:.3f}x < 1.0x at d={hi}, remeasuring "
+              f"with {2 * args.problems} problems / best-of-{2 * args.iters}",
+              file=sys.stderr)
+        rows2 = bench_scaling(model=args.model, problems=2 * args.problems,
+                              batch_size=args.batch_size, dims=dims,
+                              iters=2 * args.iters)
+        ratio = {n: v for n, v, _ in rows2}[key]
+        rows = rows2
+    if ratio < noise_floor:
+        print(f"FAIL: {args.model} fused schedule slower than staged at "
+              f"d={hi} beyond the {noise_floor:.0%} noise floor "
+              f"({ratio:.3f}x)", file=sys.stderr)
+        return 1
+    fused_row = next(x for n, _, x in rows
+                     if n == f"nsai/{args.model}/scaling/d{hi}"
+                     f"/fused_problems_s")
+    m = re.search(r"dispatches_per_group=([0-9.]+)", fused_row)
+    if m is None or float(m.group(1)) != 1.0:
+        print(f"FAIL: fused schedule at d={hi} did not serve one dispatch "
+              f"per group ({fused_row})", file=sys.stderr)
+        return 1
+    m = re.search(r"fallback_groups=([0-9]+)", fused_row)
+    if m is None or int(m.group(1)) != 0:
+        print(f"FAIL: fused schedule at d={hi} fell back to staged "
+              f"dispatch ({fused_row})", file=sys.stderr)
+        return 1
+    print(f"scaling gate OK ({args.model}): fused {ratio:.3f}x over staged "
+          f"at d={hi}, one dispatch per group, no fallbacks")
+    return 0
+
+
 def main():
     from repro.configs import base as cbase
 
@@ -269,8 +416,20 @@ def main():
                     help="front-door admission deadline")
     ap.add_argument("--no-sweep", action="store_true",
                     help="skip the latency-vs-offered-load sweep")
+    ap.add_argument("--scaling", action="store_true",
+                    help="run ONLY the symbolic-scaling sweep (fused vs "
+                         "staged over --dims)")
+    ap.add_argument("--dims", default="64,128",
+                    help="VSA block dims for --scaling, ascending")
+    ap.add_argument("--check", action="store_true",
+                    help="with --scaling: exit 1 unless at the largest dim "
+                         "the fused schedule serves one dispatch per group "
+                         "with zero fallbacks and stays within noise of "
+                         "staged (ratio >= 0.9 after remeasure)")
     args = ap.parse_args()
 
+    if args.scaling:
+        return _scaling_main(args)
     rows = bench_nsai(model=args.model, problems=args.problems,
                       batch_size=args.batch_size, d=args.d, iters=args.iters)
     if not args.no_sweep:
@@ -279,14 +438,7 @@ def main():
             model=args.model, problems=min(args.problems, 24),
             batch_size=args.batch_size, d=args.d, loads=loads,
             deadline_ms=args.deadline_ms)
-    print("name,value,derived")
-    for name, val, derived in rows:
-        print(f"{name},{val:.2f},{derived}")
-    if args.json:
-        args.json.parent.mkdir(parents=True, exist_ok=True)
-        args.json.write_text(json.dumps(
-            [{"name": n, "value": v, "derived": str(x)}
-             for n, v, x in rows], indent=1))
+    _emit(rows, args.json)
     if args.check_overlap:
         key = f"nsai/{args.model}/overlap_vs_sequential/speedup"
         speedup = {n: v for n, v, _ in rows}[key]

@@ -190,6 +190,17 @@ KERNELS: dict[str, KernelSpec] = {
             Lowering(kernel="flash_attn", name="xla", platforms=PLATFORMS,
                      note="materialized-scores reference"),
         )),
+    "unbind_classify": KernelSpec(
+        name="unbind_classify",
+        describe="fused VSA unbind (circular correlation) -> dense classify "
+                 "head; one launch for the symbolic tail of the pipeline",
+        lowerings=_pallas_family(
+            "unbind_classify", epsilon=1e-3, requires_pow2=True, min_size=8,
+            note="circulant builder assumes pow2 block dim >= 8") + (
+            Lowering(kernel="unbind_classify", name="xla", platforms=PLATFORMS,
+                     note="exact gather unbind + dense reference"),
+        ),
+        dispatch_min_size=128),
 }
 
 
@@ -226,6 +237,8 @@ class LoweringPlan:
                 continue
             if floor and not low.is_ref and (size is None or size < floor):
                 continue
+            for rec in _RECORDERS:
+                rec.append((kernel, low.name))
             return low
         raise RuntimeError(f"{kernel}: no feasible lowering for size={size} "
                            f"in chain {[l.name for l in self.chains[kernel]]}")
@@ -327,6 +340,28 @@ def negotiate(platform: str | None = None,
 
 _STACK: list[LoweringPlan] = []
 _DEFAULT: list[LoweringPlan | None] = [None]
+_RECORDERS: list[list] = []
+
+
+@contextlib.contextmanager
+def record_selections() -> Iterator[list]:
+    """Capture every ``(kernel, lowering_name)`` pair any plan's ``select``
+    resolves while the scope is open.
+
+    Kernel wrappers consult the plan in their Python dispatch layer (outside
+    the inner jits), so tracing a stage under ``jax.eval_shape`` exercises
+    exactly the selections that will serve it.  ``serve.schedule`` records
+    the staged and fused traces separately and diffs the two sets to decide
+    whether the fused pipeline is bit-equal to the staged one (identical
+    selections, or diffs confined to ``exact`` lowerings) or only
+    epsilon-equivalent — the negotiation behind ``StagedSchedule.fused_ok``.
+    """
+    rec: list = []
+    _RECORDERS.append(rec)
+    try:
+        yield rec
+    finally:
+        _RECORDERS.remove(rec)
 
 
 def get_plan() -> LoweringPlan:

@@ -212,6 +212,10 @@ class ReasonWorkload:
     - ``collect(cfg)``: ``(host_out, i) -> ReasonResult fields`` adapter.
     - ``paper_graph()``: the published-scale ``OpGraph`` from
       ``core.workloads`` (None -> trace only), for the analytic side.
+    - ``fused_stage_specs(cfg, variant)``: optional alternate stage list
+      for the whole-pipeline fused jit (e.g. MIMONet's unbind+classify
+      collapsed into the fused kernel); None -> the fused jit composes
+      ``stage_specs`` as-is.
     - ``make_requests(cfg, n, seed)``: ``(stream_factory, truth)`` where
       ``stream_factory()`` yields requests lazily (rendering runs inside
       the pipeline) and ``truth()`` lazily materializes ground truth.
@@ -230,6 +234,7 @@ class ReasonWorkload:
     make_requests: Callable[[Any, int, int], tuple]
     score: Callable[[dict, Any], float]
     paper_graph: Callable[[], Any] | None = None
+    fused_stage_specs: Callable[[Any, str], tuple] | None = None
 
 
 def _require(req, field: str):
@@ -435,6 +440,23 @@ def _mimonet_stages(cfg, variant: str):
     )
 
 
+def _mimonet_fused_stages(cfg, variant: str):
+    """Fused-pipeline stage list: the symbolic tail (unbind -> classify)
+    collapses into the registry's fused ``unbind_classify`` kernel — one
+    launch instead of two.  Only the fused jit composes this list; the
+    staged schedule keeps the 5-stage pipeline, and ``compile_schedule``
+    proves the two traces' lowerings equivalent before the executor may
+    substitute one for the other."""
+    from repro.models import mimonet as mm
+    from repro.serve.schedule import StageSpec
+
+    return _mimonet_stages(cfg, variant)[:3] + (
+        StageSpec("unbind_classify", "simd",
+                  lambda c, x: mm.unbind_classify(c["params"], c["keys"],
+                                                  cfg, x)),
+    )
+
+
 def _mimonet_input_specs(cfg, batch_size: int, variant: str):
     hw = cfg.raven.image_size
     return jax.ShapeDtypeStruct(
@@ -581,7 +603,8 @@ REASON_WORKLOADS: dict[str, ReasonWorkload] = {
         stage_specs=_mimonet_stages, input_specs=_mimonet_input_specs,
         ingest=_mimonet_ingest, collect=_mimonet_collect,
         make_requests=_mimonet_requests, score=_mean_match_score,
-        paper_graph=_paper_graph("mimonet")),
+        paper_graph=_paper_graph("mimonet"),
+        fused_stage_specs=_mimonet_fused_stages),
     "lvrf": ReasonWorkload(
         name="lvrf",
         describe="LVRF: frontend -> learned-rule posterior -> posterior-"
@@ -602,7 +625,8 @@ REASON_MODELS = tuple(REASON_WORKLOADS)
 def compile_reason_schedule(model: str, cfg, variant: str | None = None,
                             consts=None,
                             batch_size: int | tuple[int, ...] = 4,
-                            trace_graph: bool = True, plan=None):
+                            trace_graph: bool = True, plan=None,
+                            fused: bool | str = "auto"):
     """Lower one registry entry to an executable ``StagedSchedule``.
 
     ``consts`` may be the real constant pytree (params/codebooks) or None —
@@ -618,6 +642,11 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
 
     ``plan``: a :class:`~repro.backend.registry.LoweringPlan` to compile
     under (None = the active plan); recorded on the schedule.
+
+    ``fused``: forwarded to ``compile_schedule`` ("auto" also compiles the
+    whole-pipeline fused jit and negotiates its equivalence class; the
+    entry's ``fused_stage_specs``, when declared, supplies the fused-only
+    stage list, e.g. the ``unbind_classify`` kernel).
     """
     from repro.serve import schedule as sch
 
@@ -635,12 +664,15 @@ def compile_reason_schedule(model: str, cfg, variant: str | None = None,
     buckets = tuple(sorted(set(batch_size))) \
         if isinstance(batch_size, (tuple, list)) else ()
     max_batch = buckets[-1] if buckets else batch_size
+    fused_stages = entry.fused_stage_specs(cfg, variant) \
+        if entry.fused_stage_specs is not None else None
     return sch.compile_schedule(
         model, entry.stage_specs(cfg, variant),
         entry.ingest(cfg, variant), entry.collect(cfg), variant=variant,
         consts=consts,
         input_specs=entry.input_specs(cfg, max_batch, variant),
-        trace_graph=trace_graph, batch_buckets=buckets, plan=plan)
+        trace_graph=trace_graph, batch_buckets=buckets, plan=plan,
+        fused=fused, fused_stages=fused_stages)
 
 
 def reason_engine(model: str, cfg, reason_cfg=None, consts=None,

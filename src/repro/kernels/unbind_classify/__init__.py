@@ -1,0 +1,3 @@
+from repro.kernels.unbind_classify import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused VSA unbind -> dense classify head.
+
+The symbolic tail of the MIMONet pipeline — per-channel circular
+correlation against the binding keys followed by the shared dense head —
+is two separate launches in the staged schedule (``unbind`` then
+``classify``), each a host-visible dispatch per admission group.  This
+kernel runs the whole tail in one ``pallas_call``: each grid step
+materializes one key block's correlation circulant in VMEM (the same
+log2(d) roll-select builder as the circ_conv kernel), unbinds the query
+tile against it on the MXU and immediately multiplies into the classify
+head, accumulating logits across blocks without ever writing the unbound
+codes back to HBM.
+
+Grid: (N / tile_n, K, B) with the VSA block axis innermost so each output
+tile (tn, 1, C) stays resident while its B partial products accumulate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.circ_conv.kernel import _circulant
+
+
+def _unbind_classify_kernel(x_ref, k_ref, w_ref, b_ref, o_ref):
+    x = x_ref[:, 0, :].astype(jnp.float32)        # (tn, d)
+    key = k_ref[0, 0, :].astype(jnp.float32)      # (d,)
+    # corr(key, x)[n] = Σ_j key[j]·x[(n+j)%d] = Σ_m x[m]·roll(key, n)[m]
+    c = _circulant(key[None], 1)[0]               # (d, d): c[n] = roll(key, n)
+    unbound = jax.lax.dot_general(
+        x, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (tn, d)
+    w = w_ref[0].astype(jnp.float32)              # (d, C)
+    part = jax.lax.dot_general(
+        unbound, w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (tn, C)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[:, 0, :] = b_ref[0] + part
+
+    @pl.when(pl.program_id(2) > 0)
+    def _accumulate():
+        o_ref[:, 0, :] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_n"))
+def fused_unbind_classify(keys: jax.Array, x: jax.Array, w: jax.Array,
+                          b: jax.Array, *, interpret: bool = True,
+                          tile_n: int = 128) -> jax.Array:
+    """keys: (K, B, d), x: (N, B, d), w: (B, d, C), b: (1, C) -> (N, K, C)."""
+    n, blocks, d = x.shape
+    k = keys.shape[0]
+    c_dim = w.shape[-1]
+    tn = min(tile_n, max(8, n))
+    pad = (-n) % tn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _unbind_classify_kernel,
+        name="fused_unbind_classify",
+        grid=((n + pad) // tn, k, blocks),
+        in_specs=[
+            pl.BlockSpec((tn, 1, d), lambda i, kc, blk: (i, blk, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, kc, blk: (kc, blk, 0)),
+            pl.BlockSpec((1, d, c_dim), lambda i, kc, blk: (blk, 0, 0)),
+            pl.BlockSpec((1, c_dim), lambda i, kc, blk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, 1, c_dim), lambda i, kc, blk: (i, kc, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, k, c_dim), jnp.float32),
+        interpret=interpret,
+    )(x, keys, w, b)
+    return out[:n]

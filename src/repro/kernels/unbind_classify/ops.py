@@ -1,0 +1,56 @@
+"""Public wrapper for the fused unbind->classify kernel (registry dispatch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backend import registry
+from repro.kernels.unbind_classify import kernel, ref
+
+
+def _run_kernel(head, keys, x):
+    plan = registry.get_plan()
+    low = plan.select("unbind_classify", size=keys.shape[-1])
+    if low.is_ref:
+        return ref.unbind_classify_ref(head, keys, x)
+    k, blocks, d = keys.shape
+    c = head["w"].shape[-1]
+    w = head["w"].reshape(blocks, d, c)
+    bias = head.get("b")
+    bias = jnp.zeros((1, c), jnp.float32) if bias is None else \
+        jnp.reshape(bias, (1, c)).astype(jnp.float32)
+    return kernel.fused_unbind_classify(
+        keys, x.reshape(x.shape[0], blocks, d), w, bias,
+        interpret=plan.run_interpret(low))
+
+
+@jax.custom_vjp
+def _fused_kernel(head, keys, x):
+    return _run_kernel(head, keys, x)
+
+
+def _fused_fwd(head, keys, x):
+    return _run_kernel(head, keys, x), (head, keys, x)
+
+
+def _fused_bwd(res, g):
+    # backward through the (cheap) reference chain — forward stays fused
+    head, keys, x = res
+    _, vjp = jax.vjp(ref.unbind_classify_ref, head, keys, x)
+    return vjp(g)
+
+
+_fused_kernel.defvjp(_fused_fwd, _fused_bwd)
+
+
+def unbind_classify(head, keys: jax.Array, x: jax.Array,
+                    use_kernel: bool | None = None) -> jax.Array:
+    """``use_kernel`` forces the path explicitly; None (default) consults
+    the active :class:`~repro.backend.registry.LoweringPlan`."""
+    if use_kernel is None:
+        use_kernel = not registry.active("unbind_classify",
+                                         size=keys.shape[-1]).is_ref
+    if use_kernel:
+        return _fused_kernel(head, keys, x)
+    return ref.unbind_classify_ref(head, keys, x)

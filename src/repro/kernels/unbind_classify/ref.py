@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused unbind->classify kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.vsa import ops as vsa
+
+
+def unbind_classify_ref(head, keys: jax.Array, x: jax.Array) -> jax.Array:
+    """keys: (K, B, d), x: (N, B*d), head: dense params (B*d -> C).
+
+    Exactly the staged ops — broadcast circular correlation of each channel
+    key against the trunk output, then the dense head — so this reference
+    is bit-identical to ``mimonet.classify(params, mimonet.unbind(...))``
+    whenever the staged unbind routes to the gather reference too.
+    """
+    k, b, d = keys.shape
+    n = x.shape[0]
+    codes = jnp.broadcast_to(x.reshape(n, 1, b, d), (n, k, b, d))
+    kb = jnp.broadcast_to(keys[None], (n, k, b, d))
+    unbound = vsa.circ_corr_ref(kb, codes).reshape(n, k, b * d)
+    return layers.dense(head, unbound, jnp.float32)

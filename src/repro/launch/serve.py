@@ -56,6 +56,10 @@ def serve_reason(args):
         consts=consts, variants=(variant,))
     sched = engine.schedules[variant]
     print(f"[serve] {args.model}: {sched.describe()}")
+    if args.schedule == "fused":
+        print(f"[serve] fused negotiation: ok={sched.fused_ok} "
+              f"eq={sched.fused_equivalence} "
+              f"lowering_diff={list(sched.fused_lowering_diff) or '-'}")
 
     stream, truth = entry.make_requests(cfg, args.requests, seed=0)
     t0 = time.time()
@@ -166,7 +170,7 @@ def main():
                     choices=sorted(rt.TRAFFIC_CLASSES["reason"].models()))
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--schedule", default="overlap",
-                    choices=("overlap", "sequential"))
+                    choices=("overlap", "sequential", "fused"))
     ap.add_argument("--d", type=int, default=128)
     ap.add_argument("--nn-precision", default="fp32",
                     choices=("fp32", "bf16", "int8", "int4"))

@@ -14,7 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.backend import registry
 from repro.data.raven import RavenConfig
+from repro.kernels.unbind_classify import ops as uc_ops
 from repro.nn import init as nninit
 from repro.nn import layers, resnet
 from repro.vsa import ops as vsa
@@ -107,6 +109,23 @@ def unbind(keys, cfg: MIMONetConfig, x: jax.Array) -> jax.Array:
 def classify(params, unbound: jax.Array) -> jax.Array:
     """Per-channel head: (N, K, blocks*d) -> logits (N, K, n_classes)."""
     return layers.dense(params["head"], unbound, jnp.float32)
+
+
+def unbind_classify(params, keys, cfg: MIMONetConfig, x: jax.Array,
+                    use_kernel: bool | None = None) -> jax.Array:
+    """Fused symbolic tail: (N, B*d) -> logits (N, K, n_classes).
+
+    One launch for unbind + classify when the plan negotiates the
+    ``unbind_classify`` kernel; the reference route is literally
+    ``classify(unbind(...))``, so below the dispatch threshold this is
+    bit-identical to the staged pair.
+    """
+    if use_kernel is None:
+        use_kernel = not registry.active("unbind_classify", size=cfg.d,
+                                         dispatch=True).is_ref
+    if not use_kernel:
+        return classify(params, unbind(keys, cfg, x))
+    return uc_ops.unbind_classify(params["head"], keys, x)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "train"))

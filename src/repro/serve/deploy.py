@@ -115,12 +115,29 @@ class Deployment:
         for m, eng in self.engines.items():
             design, plan = self.designs[m], self.plans[m]
             if self.classes[m] == "reason":
+                sched = eng.schedules[self.variants[m]]
                 serving = {
                     "batch_size": eng.cfg.batch_size,
                     "buckets": tuple(eng.cfg.buckets or ()),
                     "max_inflight": eng.cfg.max_inflight,
                     "schedule": eng.cfg.schedule,
                     "variant": self.variants[m],
+                    # the fused-pipeline negotiation outcome for the served
+                    # variant, plus the measured (non-warmup) steady-state
+                    # rate — real even for engines only ever driven through
+                    # the submit/drain protocol (per-group accounting)
+                    "fused": {
+                        "ok": sched.fused_ok,
+                        "equivalence": sched.fused_equivalence,
+                        "epsilon": sched.fused_epsilon,
+                        "lowering_diff": sched.fused_lowering_diff,
+                        "groups": eng.stats["fused_groups"],
+                        "fallback_groups":
+                            eng.stats["fused_fallback_groups"],
+                    },
+                    "dispatches": eng.stats["dispatches"],
+                    "measured_requests": eng.stats["measured"]["requests"],
+                    "problems_per_s": eng.problems_per_s(),
                 }
             else:
                 serving = {
@@ -292,6 +309,13 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
                              buckets=plan.buckets),
                 consts=consts, variants=(variant,), trace_graph=False,
                 plan=lowering_plan)
+            # fused-pipeline negotiation: when the compiled schedule's
+            # fused variant is provably bit-identical under the deployment
+            # plan, serve one dispatch per admission group instead of K
+            # (the engine still falls back per-stage if the schedule's
+            # negotiation says epsilon — answers never change)
+            if plan.schedule == "overlap" and eng.schedules[variant].fused_ok:
+                eng.cfg.schedule = "fused"
             classes[m], designs[m], plans[m] = "reason", design, plan
             variants[m] = variant
         else:

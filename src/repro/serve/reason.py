@@ -24,18 +24,21 @@ Every host-side step — ingesting the next group from the request stream
 (which may be a lazy generator: rendering/preprocessing then runs inside
 the pipeline), staging device arrays, and converting finished answers back
 to numpy — runs while the device works through the in-flight window, so
-none of it sits on the critical path.  On a dataflow array the device
-stages of consecutive groups would co-execute on disjoint units (the
-analytical model in ``core.dataflow.interloop_overlap``); on one shared
-host device co-scheduling them just makes both contend for the same cores,
-so the engine drains the oldest in-flight group right before dispatching a
-new group's first stage once the window is full (the schedule's
-``drain_stage``) and takes the overlap on the host/device axis instead.
-The ``sequential`` schedule is the naive serve loop (synchronize after
-every stage, finish a group completely before touching the next) that
-``bench_nsai.py`` compares against — the serving analogue of the paper's
-Fig. 9 folded-vs-unfolded comparison; it is also where the per-stage
-timing breakdown is measured (timing a stage requires blocking on it).
+none of it sits on the critical path.  Dispatch is genuinely async: a new
+group's *entire* pipeline is enqueued on the device before the engine
+blocks on anything, and only then is the window trimmed back to
+``max_inflight`` by draining the oldest group (``jax.block_until_ready``
+happens solely at drain).  The ``fused`` schedule goes one step further
+and dispatches the whole pipeline as **one** jit call
+(``StagedSchedule.jit_fused``) when the schedule's fused variant was
+negotiated bit-identical to the staged one (``fused_ok``); otherwise it
+falls back to the per-stage dispatches and counts the group under
+``stats["fused_fallback_groups"]``.  The ``sequential`` schedule is the
+naive serve loop (synchronize after every stage, finish a group completely
+before touching the next) that ``bench_nsai.py`` compares against — the
+serving analogue of the paper's Fig. 9 folded-vs-unfolded comparison; it
+is also where the per-stage timing breakdown is measured (timing a stage
+requires blocking on it).
 
 The engine implements the unified :class:`~repro.serve.runtime.
 EngineProtocol` natively — its workload constants (params / codebooks /
@@ -81,13 +84,13 @@ from repro.serve import runtime as rt
 from repro.serve.runtime import GroupRecord  # re-export (envelope lives there)
 from repro.serve.schedule import StagedSchedule
 
-SCHEDULES = ("overlap", "sequential")
+SCHEDULES = ("overlap", "sequential", "fused")
 
 
 @dataclasses.dataclass
 class ReasonConfig:
     batch_size: int = 4           # max problems per admission group
-    schedule: str = "overlap"     # overlap | sequential
+    schedule: str = "overlap"     # overlap | sequential | fused
     # Which compiled variant of the workload to run (e.g. "cnn" = neural
     # perception, "oracle" = ground-truth PMFs / symbolic-stream-only).
     # None = the first variant the engine was constructed with.
@@ -126,17 +129,27 @@ class ReasonResult:
     rule_posteriors: np.ndarray | None = None
 
 
-# GroupRecord note: ``dispatch_t`` is stamped when the group's first stage
-# is enqueued on the device.  For the default ``drain_stage == 0`` that is
-# after the blocking drain of older groups, so arrival→dispatch is queueing
-# and dispatch→done is service; a schedule with ``drain_stage > 0``
-# intentionally enqueues its early stages *before* draining, so that drain
-# wait lands in service time (the group really is being worked on).
+# GroupRecord note: ``dispatch_t`` is stamped right before the group's
+# pipeline is enqueued on the device, and the *whole* pipeline is enqueued
+# before the engine blocks on anything — so arrival→dispatch is pure
+# queueing (the front-door's admission wait) and dispatch→done is service,
+# matching the documented semantics in ``serve.runtime``/``serve.frontdoor``.
+# Window backpressure (draining the oldest group once ``max_inflight`` is
+# exceeded) happens strictly *after* the new dispatch, while the new group
+# is already computing, so it can never inflate the new group's service
+# latency.  (Earlier revisions drained mid-pipeline at the schedule's
+# ``drain_stage``, which charged the window wait to service whenever
+# ``drain_stage > 0``; ``drain_stage`` no longer gates dispatch.)
 
 
 def _fresh_stats() -> dict:
     return {
         "requests": 0, "batches": 0,
+        # device dispatches (jit calls): K per staged group, 1 per fused
+        "dispatches": 0,
+        # groups served by the single fused jit vs groups that asked for
+        # "fused" but fell back per-stage (schedule not negotiated exact)
+        "fused_groups": 0, "fused_fallback_groups": 0,
         # cumulative sequential-schedule stage times, keyed per variant so
         # same-named stages of different variants (oracle vs cnn) never
         # merge: {variant: {stage_name: seconds}}
@@ -195,9 +208,13 @@ class ReasonEngine:
         self._inflight: collections.deque = collections.deque()
         self._ready: dict[int, ReasonResult] = {}  # collected, undrained
         self._next_index = 0
-        self._warmed: set[tuple[str, int]] = set()  # (variant, bucket) run
+        # (variant, bucket, mode) shapes already compiled (mode: the fused
+        # jit and the staged jits have separate caches)
+        self._warmed: set[tuple[str, int, str]] = set()
         self._cold_run = False
         self._run_stage_time: dict[str, float] = {}
+        self._in_run = False          # run() accounts at run level instead
+        self._last_acct = float("-inf")  # busy-window edge for group stats
 
     @property
     def admission_cap(self) -> int:
@@ -247,11 +264,18 @@ class ReasonEngine:
         return jax.tree.map(stack, *trees), bucket
 
     def _collect(self, batch: list[ReasonRequest], out,
-                 rec: GroupRecord, sched: StagedSchedule):
+                 rec: GroupRecord, sched: StagedSchedule,
+                 cold: bool = False, t0: float | None = None):
         """Materialize one group's answers on the host (blocks if pending).
 
         Finished results land in the engine's ready buffer until a drain
-        call hands them out."""
+        call hands them out.  Outside ``run()`` (the protocol path the
+        front-door drives) the group is accounted into the warmup/measured
+        split here, keyed off its own cold flag: wall time is the union of
+        per-group busy windows ([dispatch, collect] on the real clock,
+        clipped so overlapping windows are not double-counted), so
+        ``problems_per_s()`` reports a real measured rate for engines that
+        never see ``run()``."""
         host = jax.tree.map(np.asarray, out)
         for i, req in enumerate(batch):  # padded rows have no request
             fields = sched.collect(host, i)
@@ -259,6 +283,14 @@ class ReasonEngine:
                                                 **fields)
         rec.done_t = self.clock()
         self.stats["requests"] += len(batch)
+        if not self._in_run and t0 is not None:
+            now = time.perf_counter()
+            kind = "warmup" if cold else "measured"
+            self.stats[kind]["requests"] += len(batch)
+            self.stats[kind]["work"] += len(batch)
+            self.stats[kind]["wall_time_s"] += max(
+                0.0, now - max(t0, self._last_acct))
+            self._last_acct = now
 
     def _batches(self, requests: Iterable[ReasonRequest]):
         """Pull admission groups lazily — a generator's per-request work
@@ -284,15 +316,18 @@ class ReasonEngine:
         """Dispatch one admission group through the compiled pipeline.
 
         Under ``overlap`` the stages are enqueued asynchronously and the
-        returned :class:`GroupRecord` has ``done_t=None``; once the
-        in-flight window (``cfg.max_inflight``) is full, the oldest group
-        is drained (blocking) at the schedule's drain point before the new
-        first stage is dispatched — its record (already returned by the
-        earlier ``submit``) gets ``done_t`` stamped in place, and its
-        answers wait in the ready buffer for the next ``drain_*`` call.
-        Under ``sequential`` the group is served synchronously
-        (accumulating the per-stage timing breakdown) and returned
-        complete.
+        returned :class:`GroupRecord` has ``done_t=None``; the new group's
+        whole pipeline is dispatched *before* the engine blocks on
+        anything, and only then is the in-flight window trimmed back to
+        ``cfg.max_inflight`` by draining the oldest group — its record
+        (already returned by the earlier ``submit``) gets ``done_t``
+        stamped in place, and its answers wait in the ready buffer for the
+        next ``drain_*`` call.  ``fused`` behaves like ``overlap`` but
+        dispatches the composed pipeline as one jit call when the schedule
+        negotiated its fused variant substitutable (``fused_ok``), falling
+        back to per-stage dispatch otherwise.  Under ``sequential`` the
+        group is served synchronously (accumulating the per-stage timing
+        breakdown) and returned complete.
         """
         consts = self.consts
         if consts is None:
@@ -315,45 +350,63 @@ class ReasonEngine:
                                  "(results are keyed by uid)")
             seen.add(req.uid)
         bufs, bucket = self._stage(group, sched)
-        if (variant, bucket) not in self._warmed:
-            self._warmed.add((variant, bucket))
+        use_fused = False
+        if schedule == "fused":
+            if sched.fused_ok:
+                use_fused = True
+            else:
+                # fused variant exists but was negotiated only
+                # epsilon-equivalent (or was not compiled): serve the group
+                # stage-by-stage so answers stay bit-identical
+                self.stats["fused_fallback_groups"] += 1
+        mode = "fused" if use_fused else "staged"
+        cold = (variant, bucket, mode) not in self._warmed
+        if cold:
+            self._warmed.add((variant, bucket, mode))
             self._cold_run = True
         rec = GroupRecord(uids=tuple(r.uid for r in group),
                           index=self._next_index, variant=variant,
                           bucket=bucket, size=len(group))
         self._next_index += 1
         stage_time = self.stats["stage_time_s"].setdefault(variant, {})
-        for si, fn in enumerate(sched.jit_stages):
-            if not sequential and si == sched.drain_stage:
-                # drain the oldest group(s) before dispatching this one:
-                # co-scheduling more device batches than the window allows
-                # on one shared host device only adds contention (see
-                # module docstring)
-                while len(self._inflight) >= self.cfg.max_inflight:
-                    self._drain_one()
-            if si == 0:
-                rec.dispatch_t = self.clock()
-            t0 = time.perf_counter()
-            bufs = fn(consts, bufs)
-            if sequential:
-                jax.block_until_ready(bufs)
-                name = sched.stages[si].name
-                dt = time.perf_counter() - t0
-                stage_time[name] = stage_time.get(name, 0.0) + dt
-                self._run_stage_time[name] = \
-                    self._run_stage_time.get(name, 0.0) + dt
+        t0 = time.perf_counter()
+        # dispatch the whole pipeline asynchronously FIRST; any blocking
+        # (sequential timing, window trimming) happens after, so group i+1
+        # is always on the device before the engine waits on group i
+        rec.dispatch_t = self.clock()
+        if use_fused:
+            bufs = sched.jit_fused(consts, bufs)
+            self.stats["dispatches"] += 1
+            self.stats["fused_groups"] += 1
+        else:
+            for si, fn in enumerate(sched.jit_stages):
+                ts = time.perf_counter()
+                bufs = fn(consts, bufs)
+                self.stats["dispatches"] += 1
+                if sequential:
+                    jax.block_until_ready(bufs)
+                    name = sched.stages[si].name
+                    dt = time.perf_counter() - ts
+                    stage_time[name] = stage_time.get(name, 0.0) + dt
+                    self._run_stage_time[name] = \
+                        self._run_stage_time.get(name, 0.0) + dt
         self.stats["batches"] += 1
         if sequential:
-            self._collect(group, bufs, rec, sched)
+            self._collect(group, bufs, rec, sched, cold=cold, t0=t0)
         else:
-            self._inflight.append((group, bufs, rec, sched))
+            self._inflight.append((group, bufs, rec, sched, cold, t0))
+            # window backpressure: trim back down to max_inflight by
+            # draining the oldest group(s) — strictly after the new
+            # dispatch, so this wait is never the new group's service time
+            while len(self._inflight) > self.cfg.max_inflight:
+                self._drain_one()
         return rec
 
     def _drain_one(self) -> GroupRecord | None:
         if not self._inflight:
             return None
-        group, bufs, rec, sched = self._inflight.popleft()
-        self._collect(group, bufs, rec, sched)
+        group, bufs, rec, sched, cold, t0 = self._inflight.popleft()
+        self._collect(group, bufs, rec, sched, cold=cold, t0=t0)
         return rec
 
     def _take_ready(self) -> dict[int, "ReasonResult"]:
@@ -367,15 +420,29 @@ class ReasonEngine:
             self._drain_one()
         return self._take_ready()
 
+    @staticmethod
+    def _leaf_ready(leaf) -> bool:
+        """Conservative readiness probe for one buffer leaf.
+
+        jax Arrays expose ``is_ready()``; host-side data (numpy / python
+        scalars) is ready by definition.  Anything else — including
+        donated-buffer surrogates a fused pipeline may leave behind —
+        reports *not ready*, so ``drain_ready`` stays non-blocking instead
+        of vacuously passing and then blocking inside ``_collect``."""
+        probe = getattr(leaf, "is_ready", None)
+        if probe is not None:
+            return bool(probe())
+        return isinstance(leaf, (np.ndarray, np.generic,
+                                 int, float, bool, complex))
+
     def drain_ready(self) -> dict[int, "ReasonResult"]:
         """Collect in-flight groups whose device buffers have already
         materialized — non-blocking, oldest first (the front-door calls
         this while it would otherwise sleep waiting for traffic) — and
         return every finished result ``{uid: ReasonResult}``."""
         while self._inflight:
-            _, bufs, _, _ = self._inflight[0]
-            if not all(l.is_ready() for l in jax.tree.leaves(bufs)
-                       if hasattr(l, "is_ready")):
+            _, bufs, _, _, _, _ = self._inflight[0]
+            if not all(self._leaf_ready(l) for l in jax.tree.leaves(bufs)):
                 break
             self._drain_one()
         return self._take_ready()
@@ -414,13 +481,17 @@ class ReasonEngine:
                              "(call drain_all first)")
         self._cold_run = False
         self._run_stage_time = {}
+        self._in_run = True   # account at run level, not per group
         t_start = time.perf_counter()
-        for batch in self._batches(requests):
-            # staging the next group (incl. any lazy per-request
-            # preprocessing in the `requests` iterable) overlaps the
-            # in-flight window on the device
-            self.submit(batch, schedule=schedule, variant=variant)
-        results = self.drain_all()
+        try:
+            for batch in self._batches(requests):
+                # staging the next group (incl. any lazy per-request
+                # preprocessing in the `requests` iterable) overlaps the
+                # in-flight window on the device
+                self.submit(batch, schedule=schedule, variant=variant)
+            results = self.drain_all()
+        finally:
+            self._in_run = False
         dt = time.perf_counter() - t_start
         kind = "warmup" if self._cold_run else "measured"
         self.stats[kind]["requests"] += len(results)

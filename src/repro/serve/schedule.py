@@ -10,6 +10,16 @@ stream tags (nn / vsa / simd, the paper's unit taxonomy) — and emits a
   - an ordered tuple of **jit-able stage callables** (one jit boundary per
     stage: the boundaries are exactly the points where the generic executor
     in ``serve.reason.ReasonEngine`` may drain / overlap),
+  - a **fused whole-pipeline variant** (``jit_fused``): a single jit of the
+    composed stages with the staged input buffer donated, so one admission
+    group costs one dispatch instead of K.  The fused trace is negotiated
+    against the staged one through the active
+    :class:`~repro.backend.registry.LoweringPlan`: ``compile_schedule``
+    records which kernel lowerings each trace selects
+    (``registry.record_selections``) and declares the fused variant
+    ``exact`` (bit-identical — the executor may substitute it freely) or
+    ``epsilon`` (a fused-only kernel routed to a non-exact lowering — the
+    executor falls back stage-by-stage unless fusion was forced),
   - **inter-stage buffer specs** (pytree shapes + byte counts, from
     ``jax.eval_shape`` chained through the stages — the serving analogue of
     the memory-cost annotation, Sec V-B step ⑤),
@@ -136,6 +146,23 @@ class StagedSchedule:
     # deployment negotiated are pinned per schedule, independent of
     # whatever plan is active when the executor later calls the jits.
     plan: registry.LoweringPlan | None = None
+    # -- fused whole-pipeline variant (one dispatch per group) -------------
+    # ``jit_fused`` is a single jit of the composed (possibly substituted,
+    # see ``fused_stages``) pipeline with the input buffer donated.
+    # ``fused_equivalence`` is the negotiated conformance class of the
+    # fused trace versus the staged one under ``plan``: "exact" when both
+    # traces route every kernel through exact lowerings wherever they
+    # differ (the executor substitutes the fused path freely), "epsilon"
+    # when a differing kernel sits on a non-exact lowering
+    # (``fused_epsilon`` = the max declared tolerance; the executor falls
+    # back stage-by-stage unless ``fused_forced``).
+    # ``fused_lowering_diff`` names the kernels whose selections differ.
+    jit_fused: Callable | None = None
+    fused_stages: tuple[StageSpec, ...] = ()
+    fused_forced: bool = False
+    fused_equivalence: str | None = None   # exact | epsilon | None
+    fused_epsilon: float = 0.0
+    fused_lowering_diff: tuple[str, ...] = ()
 
     @property
     def stage_names(self) -> tuple[str, ...]:
@@ -144,6 +171,14 @@ class StagedSchedule:
     @property
     def streams(self) -> tuple[str, ...]:
         return tuple(s.stream for s in self.stages)
+
+    @property
+    def fused_ok(self) -> bool:
+        """May the executor substitute the fused pipeline for the staged
+        one?  True when a fused jit exists and is either negotiated exact
+        or explicitly forced (``compile_schedule(fused=True)``)."""
+        return self.jit_fused is not None and (
+            self.fused_forced or self.fused_equivalence == "exact")
 
     def covering_bucket(self, n: int) -> int:
         """Smallest compiled batch bucket that fits ``n`` requests."""
@@ -194,6 +229,19 @@ def _graph_stats(g: OpGraph) -> dict:
     }
 
 
+def compose_stages(stages: tuple[StageSpec, ...]) -> Callable:
+    """The whole pipeline as one callable — what ``jit_fused`` compiles and
+    what ``trace_pipeline`` traces (the DataflowGraph already proves this
+    composition is what the staged executor computes)."""
+
+    def composed(consts, bufs):
+        for s in stages:
+            bufs = s.fn(consts, bufs)
+        return bufs
+
+    return composed
+
+
 def trace_pipeline(stages: tuple[StageSpec, ...], consts, input_specs
                    ) -> dfl.DataflowGraph:
     """Trace the composed pipeline's jaxpr into a DataflowGraph (steps ①–③).
@@ -201,14 +249,39 @@ def trace_pipeline(stages: tuple[StageSpec, ...], consts, input_specs
     This is ``core.trace`` on the model's jaxpr: the same graph the DSE
     consumes, built from the exact computation the schedule will execute.
     """
-
-    def composed(consts, bufs):
-        for s in stages:
-            bufs = s.fn(consts, bufs)
-        return bufs
-
-    opgraph = trace_mod.extract(composed, consts, input_specs)
+    opgraph = trace_mod.extract(compose_stages(stages), consts, input_specs)
     return dfl.build(opgraph)
+
+
+def _fused_conformance(staged_sel: list, fused_sel: list
+                       ) -> tuple[str, float, tuple[str, ...]]:
+    """Negotiate the fused trace's equivalence class vs the staged trace.
+
+    Both inputs are ``(kernel, lowering_name)`` selection logs from
+    ``registry.record_selections``.  Kernels whose selection *sets* agree
+    are bit-identical by construction (same lowerings, same shapes, same
+    plan).  For each kernel that differs — typically a fused-only kernel
+    like ``unbind_classify`` replacing the staged ``circ_conv`` + dense
+    pair — the class is "exact" only if every lowering either side selected
+    is exact; otherwise "epsilon" at the max declared tolerance.
+    """
+    staged: dict[str, set] = {}
+    for kern, low in staged_sel:
+        staged.setdefault(kern, set()).add(low)
+    fused: dict[str, set] = {}
+    for kern, low in fused_sel:
+        fused.setdefault(kern, set()).add(low)
+    diff = sorted(k for k in set(staged) | set(fused)
+                  if staged.get(k, set()) != fused.get(k, set()))
+    eps, exact = 0.0, True
+    for k in diff:
+        spec = registry.KERNELS[k]
+        for name in staged.get(k, set()) | fused.get(k, set()):
+            low = spec.by_name(name)
+            if low.equivalence != "exact":
+                exact = False
+                eps = max(eps, low.epsilon)
+    return ("exact" if exact else "epsilon"), eps, tuple(diff)
 
 
 def _abstract(tree):
@@ -235,7 +308,9 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
                      variant: str = "default", consts=None, input_specs=None,
                      graph: OpGraph | None = None, trace_graph: bool = True,
                      batch_buckets: tuple[int, ...] = (),
-                     plan: registry.LoweringPlan | None = None
+                     plan: registry.LoweringPlan | None = None,
+                     fused: bool | str = "auto",
+                     fused_stages: tuple[StageSpec, ...] | list | None = None
                      ) -> StagedSchedule:
     """Lower a stage list (+ its dataflow graph) to a StagedSchedule.
 
@@ -260,6 +335,15 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
     schedule compiles under (None = the plan active now, via
     ``registry.get_plan()``).  Stage fns are wrapped so both the buffer/
     cost tracing here and the later jit tracing happen under that plan.
+
+    ``fused``: "auto" (default) also compiles the whole-pipeline fused
+    variant and negotiates its equivalence class against the staged trace
+    (the executor only substitutes it when bit-identical); ``True`` forces
+    the fused path regardless of class; ``False`` skips it.
+    ``fused_stages``: an alternate stage list for the fused trace (e.g.
+    MIMONet's unbind+classify collapsed into the fused kernel) — requires
+    ``input_specs`` so the output spec can be proven equal to the staged
+    pipeline's.
     """
     stages = tuple(stages)
     if not stages:
@@ -273,26 +357,45 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
                 or batch_buckets[0] < 1:
             raise ValueError(f"batch_buckets must be ascending positive "
                              f"sizes, got {batch_buckets}")
+    if fused not in (True, False, "auto"):
+        raise ValueError(f"fused must be True, False or 'auto', got {fused!r}")
+    if fused_stages is not None and input_specs is None:
+        raise ValueError(
+            f"{workload}/{variant}: an alternate fused stage list needs "
+            "input_specs to prove its output spec matches the staged "
+            "pipeline's")
     if plan is None:
         plan = registry.get_plan()
     stages = tuple(dataclasses.replace(s, fn=_plan_scoped(s.fn, plan))
                    for s in stages)
+    fused_specs = stages
+    if fused_stages is not None:
+        fused_specs = tuple(dataclasses.replace(s, fn=_plan_scoped(s.fn, plan))
+                            for s in fused_stages)
 
     buffers: tuple[BufferSpec, ...] = ()
     stage_costs: tuple[dict, ...] = ()
     df: dfl.DataflowGraph | None = None
     source = "declared"
+    staged_sel: list = []
+    staged_out = None
     if input_specs is not None:
         bufs = [BufferSpec.from_tree(jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), input_specs))]
         costs = []
         spec = input_specs
-        for s in stages:
-            spec = jax.eval_shape(s.fn, consts, spec)
-            bufs.append(BufferSpec.from_tree(spec))
-            if trace_graph:
-                costs.append(_graph_stats(trace_mod.extract(s.fn, consts,
-                                                            bufs[-2].shapes)))
+        # record which kernel lowerings the staged trace selects — the
+        # fused trace below is diffed against this set (selections happen
+        # in the wrappers' python dispatch layer, so abstract tracing
+        # exercises exactly the lowerings that will serve)
+        with registry.record_selections() as staged_sel:
+            for s in stages:
+                spec = jax.eval_shape(s.fn, consts, spec)
+                bufs.append(BufferSpec.from_tree(spec))
+                if trace_graph:
+                    costs.append(_graph_stats(trace_mod.extract(
+                        s.fn, consts, bufs[-2].shapes)))
+        staged_out = spec
         buffers = tuple(bufs)
         stage_costs = tuple(costs)
         if graph is not None:
@@ -303,6 +406,34 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
     elif graph is not None:
         df = dfl.build(graph)
 
+    # -- fused whole-pipeline variant --------------------------------------
+    jit_fused = None
+    fused_equivalence: str | None = None
+    fused_eps = 0.0
+    fused_diff: tuple[str, ...] = ()
+    if fused:
+        composed = compose_stages(fused_specs)
+        if input_specs is not None:
+            with registry.record_selections() as fused_sel:
+                fused_out = jax.eval_shape(composed, consts, input_specs)
+            fo_l, fo_t = jax.tree.flatten(fused_out)
+            st_l, st_t = jax.tree.flatten(staged_out)
+            if fo_t != st_t or any(
+                    a.shape != b.shape or a.dtype != b.dtype
+                    for a, b in zip(fo_l, st_l)):
+                raise ValueError(
+                    f"{workload}/{variant}: fused pipeline output spec does "
+                    f"not match the staged pipeline's")
+            fused_equivalence, fused_eps, fused_diff = _fused_conformance(
+                staged_sel, fused_sel)
+        else:
+            # same stage fns composed under the same plan: trivially exact
+            fused_equivalence, fused_eps = "exact", 0.0
+        # donate the staged input buffer so XLA reuses it for the
+        # inter-stage intermediates (CPU does not implement donation)
+        donate = (1,) if plan.platform != "cpu" else ()
+        jit_fused = jax.jit(composed, donate_argnums=donate)
+
     return StagedSchedule(
         workload=workload, variant=variant, stages=stages,
         jit_stages=tuple(jax.jit(s.fn) for s in stages),
@@ -312,7 +443,10 @@ def compile_schedule(workload: str, stages: tuple[StageSpec, ...] | list,
         input_specs=_abstract(input_specs) if input_specs is not None
         else None,
         consts_spec=_abstract(consts) if input_specs is not None else None,
-        plan=plan)
+        plan=plan,
+        jit_fused=jit_fused, fused_stages=fused_specs,
+        fused_forced=fused is True, fused_equivalence=fused_equivalence,
+        fused_epsilon=fused_eps, fused_lowering_diff=fused_diff)
 
 
 def _ensure_stage_costs(schedule: StagedSchedule):

@@ -321,6 +321,116 @@ def test_covering_bucket():
         sched.covering_bucket(5)
 
 
+class CountingClock:
+    """Monotone counter: every read advances, so stamp *ordering* is the
+    observable (no wall-time ambiguity)."""
+
+    def __init__(self):
+        self.n = 0.0
+
+    def __call__(self) -> float:
+        self.n += 1.0
+        return self.n
+
+
+@pytest.mark.parametrize("drain_stage", [0, 1])
+def test_window_block_never_charged_to_new_group_service(drain_stage):
+    """Regression: with a full in-flight window, the new group's
+    ``dispatch_t`` must be stamped BEFORE the engine blocks draining the
+    oldest group — the window wait is queueing, never the new group's
+    service time.  Earlier revisions drained mid-pipeline at the
+    schedule's ``drain_stage``, which reordered the stamps whenever
+    ``drain_stage > 0``; the ordering must now be independent of it."""
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=1)
+    eng.schedules["oracle"].drain_stage = drain_stage
+    eng.clock = CountingClock()
+    reqs = _oracle_requests(cfg, 4)
+    r1 = eng.submit(reqs[:2])
+    r2 = eng.submit(reqs[2:])  # window full: dispatch r2, THEN drain r1
+    assert r1.done_t is not None          # drained to keep the window at 1
+    assert r2.done_t is None
+    assert r2.dispatch_t < r1.done_t      # dispatched before the block
+    eng.drain_all()
+    assert r2.done_t > r2.dispatch_t
+
+
+def test_protocol_path_accumulates_measured_stats():
+    """Regression: engines driven purely through submit/drain (the
+    front-door path — ``run()`` never called) used to accumulate zero
+    measured requests/wall time, so ``problems_per_s()`` reported the
+    warmup-fallback rate forever.  Groups are now accounted at collect
+    time, keyed off each group's own cold flag."""
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=1)
+    reqs = _oracle_requests(cfg, 8)
+    for lo in range(0, 8, 2):
+        eng.submit(reqs[lo:lo + 2])
+    results = eng.drain_all()
+    assert len(results) == 8
+    assert eng.stats["warmup"]["requests"] == 2    # the one cold group
+    assert eng.stats["measured"]["requests"] == 6  # warm groups measured
+    assert eng.stats["measured"]["work"] == 6
+    assert eng.stats["measured"]["wall_time_s"] > 0
+    assert eng.problems_per_s() > 0
+
+
+def test_drain_ready_probe_is_conservative():
+    """A buffer leaf with no ``is_ready()`` that is not host-side data
+    must probe NOT ready — ``drain_ready`` skips the group instead of
+    vacuously treating it as finished and then blocking in collect."""
+    from repro.serve.reason import ReasonEngine
+
+    class OpaqueLeaf:  # e.g. a donated-buffer surrogate
+        pass
+
+    class FakeArray:
+        def __init__(self, ready):
+            self._ready = ready
+
+        def is_ready(self):
+            return self._ready
+
+    assert ReasonEngine._leaf_ready(np.zeros(2))
+    assert ReasonEngine._leaf_ready(1.5) and ReasonEngine._leaf_ready(3)
+    assert ReasonEngine._leaf_ready(FakeArray(True))
+    assert not ReasonEngine._leaf_ready(FakeArray(False))
+    assert not ReasonEngine._leaf_ready(OpaqueLeaf())
+
+    # an in-flight group whose buffers are opaque must not drain
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=4)
+    reqs = _oracle_requests(cfg, 4)
+    eng.submit(reqs[:2])
+    group, bufs, rec, sched, cold, t0 = eng._inflight[0]
+    eng._inflight[0] = (group, {"x": OpaqueLeaf()}, rec, sched, cold, t0)
+    assert eng.drain_ready() == {}
+    assert eng.inflight == 1
+    eng._inflight[0] = (group, bufs, rec, sched, cold, t0)
+    out = eng.drain_all()
+    assert sorted(out) == [0, 1]
+
+
+def test_drain_ready_under_fused_schedule():
+    """The fused (one-jit, donation-eligible) pipeline serves through the
+    same non-blocking probe loop the front-door drives."""
+    cfg, consts, eng = _oracle_engine(batch_size=2, buckets=(2,),
+                                      max_inflight=4, schedule="fused")
+    assert eng.schedules["oracle"].fused_ok
+    reqs = _oracle_requests(cfg, 4)
+    eng.submit(reqs[:2])
+    eng.submit(reqs[2:])
+    results = {}
+    deadline = time.time() + 30
+    while eng.inflight and time.time() < deadline:
+        results.update(eng.drain_ready())
+        time.sleep(0.005)
+    results.update(eng.drain_all())
+    assert sorted(results) == list(range(4))
+    assert eng.stats["fused_groups"] == 2
+    assert eng.stats["dispatches"] == 2            # one launch per group
+
+
 # -- stats: warmup split + per-variant stage keys ----------------------------
 
 

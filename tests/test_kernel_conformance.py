@@ -110,6 +110,14 @@ def _run_kernel_under(kernel, plan):
         dic = vsa.random_codebook(jax.random.fold_in(key, 1), 4, 2, 32)
         with registry.use_plan(plan):
             return np.asarray(sops.fused_match_prob(q, dic, 0.7))
+    if kernel == "unbind_classify":
+        from repro.kernels.unbind_classify import ops as uops
+        keys = vsa.random_codebook(key, 5, 2, 32)
+        x = vsa.random_codebook(jax.random.fold_in(key, 1), 3, 2, 32)
+        head = {"w": jax.random.normal(jax.random.fold_in(key, 2), (64, 7)),
+                "b": jax.random.normal(jax.random.fold_in(key, 3), (7,))}
+        with registry.use_plan(plan):
+            return np.asarray(uops.unbind_classify(head, keys, x))
     assert kernel == "flash_attn"
     from repro.kernels.flash_attn import ops as fops
     q = jax.random.normal(key, (2, 12, 2, 16))
@@ -266,6 +274,48 @@ def test_flash_attention_degenerate_shapes(sq, skv, bq, bk, causal):
                              interpret=True)
     o_r = fr.flash_attention_ref(q, k, v, scale=0.3, causal=causal)
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+
+
+# -- unbind_classify: fused symbolic-tail kernel -----------------------------
+
+
+@pytest.mark.parametrize("n,tile_n", [(1, 8), (5, 8), (13, 8)])
+def test_unbind_classify_padded_tiles(n, tile_n):
+    """Query counts that leave the last tile mostly padding must still match
+    the gather ref exactly after the pad rows are cut."""
+    from repro.kernels.unbind_classify import kernel as uk, ref as uref
+    key = jax.random.PRNGKey(n)
+    keys = vsa.random_codebook(key, 3, 2, 16)
+    x = vsa.random_codebook(jax.random.fold_in(key, 1), n, 2, 16)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (2, 16, 5))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (1, 5))
+    out = uk.fused_unbind_classify(keys, x, w, b, interpret=True,
+                                   tile_n=tile_n)
+    head = {"w": w.reshape(32, 5), "b": b.reshape(5)}
+    ref = uref.unbind_classify_ref(head, keys, x)
+    assert out.shape == (n, 3, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_unbind_classify_custom_vjp_matches_ref_grad():
+    """Fused forward, reference backward: head gradients must agree with
+    differentiating the pure ref chain."""
+    from repro.kernels.unbind_classify import ops as uops, ref as uref
+    key = jax.random.PRNGKey(7)
+    keys = vsa.random_codebook(key, 2, 2, 16)
+    x = vsa.random_codebook(jax.random.fold_in(key, 1), 3, 2, 16)
+    head = {"w": jax.random.normal(jax.random.fold_in(key, 2), (32, 4)),
+            "b": jax.random.normal(jax.random.fold_in(key, 3), (4,))}
+    g_k = jax.grad(
+        lambda h: uops.unbind_classify(h, keys, x, use_kernel=True).sum()
+    )(head)
+    g_r = jax.grad(
+        lambda h: uref.unbind_classify_ref(h, keys, x).sum())(head)
+    for name in g_r:
+        np.testing.assert_allclose(np.asarray(g_k[name]),
+                                   np.asarray(g_r[name]),
+                                   atol=1e-4, rtol=1e-4)
 
 
 def test_flash_attention_bf16_io():

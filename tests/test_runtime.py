@@ -114,7 +114,11 @@ def test_deploy_selects_serving_config_from_dse(monkeypatch):
     assert eng.cfg.batch_size == plan.batch_size
     assert eng.cfg.buckets == plan.buckets
     assert eng.cfg.max_inflight == plan.max_inflight
-    assert eng.cfg.schedule == plan.schedule
+    # deploy() upgrades a DSE "overlap" choice to the one-dispatch fused
+    # schedule when the fused negotiation came out exact; every other
+    # DSE choice stands as-is
+    upgraded = plan.schedule == "overlap" and eng.schedules["oracle"].fused_ok
+    assert eng.cfg.schedule == ("fused" if upgraded else plan.schedule)
     assert eng.schedules["oracle"].batch_buckets == plan.buckets
     # the report records which DSE point serves (bench provenance)
     rec = d.report()["nvsa"]
@@ -128,7 +132,11 @@ def test_deploy_selects_serving_config_from_dse(monkeypatch):
     d2 = deploy(["nvsa"], budget=Budget(max_pes=1024, max_batch=4),
                 options={"nvsa": {"variant": "oracle", "d": 64}})
     assert d2.engines["nvsa"].cfg.buckets == (2,)      # pow2 floor of N=2
-    assert d2.engines["nvsa"].cfg.schedule == "overlap"
+    # the DSE chose "overlap"; nvsa's fused trace negotiates exact, so
+    # the deployment serves the one-dispatch fused schedule in its place
+    # (the recorded DSE plan keeps the original choice)
+    assert d2.plans["nvsa"].schedule == "overlap"
+    assert d2.engines["nvsa"].cfg.schedule == "fused"
     assert d2.engines["nvsa"].cfg.max_inflight == 2    # t_seq/t_para
 
 

@@ -213,6 +213,99 @@ def test_compile_schedule_rejects_bad_stages():
                              batch_buckets=bad)
 
 
+# -- fused pipeline: one dispatch per admission group ------------------------
+
+
+@pytest.mark.parametrize("override", ["", "xla"])
+@pytest.mark.parametrize("model", sorted(cbase.REASON_WORKLOADS))
+def test_fused_schedule_bitexact_vs_staged(model, override):
+    """The whole-pipeline fused jit must reproduce the staged schedule
+    bit-for-bit for every workload, across batch buckets (full group of 4
+    plus the ragged 2) and under the forced-xla backend override.  At d=64
+    on CPU every kernel negotiates an exact lowering, so the fused path
+    engages for all four workloads; the dispatch counter must drop from K
+    per group to 1."""
+    from repro.backend import registry
+
+    entry = cbase.REASON_WORKLOADS[model]
+    cfg = entry.make_config(d=64)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    variant = "oracle" if "oracle" in entry.variants else entry.variants[0]
+    with registry.use_plan(registry.negotiate(platform="cpu",
+                                              override=override)):
+        eng = cbase.reason_engine(
+            model, cfg,
+            ReasonConfig(batch_size=4, buckets=(2, 4), variant=variant),
+            consts=consts, variants=(variant,), trace_graph=False)
+        sched = eng.schedules[variant]
+        assert sched.jit_fused is not None
+        assert sched.fused_equivalence == "exact", (
+            model, override, sched.fused_lowering_diff)
+        assert sched.fused_ok
+
+        factory, _ = entry.make_requests(cfg, 6, seed=11)
+        reqs = list(factory())
+        staged = eng.run(iter(reqs), schedule="overlap")
+        k = len(sched.jit_stages)
+        assert eng.stats["dispatches"] == 2 * k       # 2 groups x K stages
+        fused = eng.run(iter(reqs), schedule="fused")
+        assert eng.stats["dispatches"] == 2 * k + 2   # 2 groups x 1 launch
+        assert eng.stats["fused_groups"] == 2
+        assert eng.stats["fused_fallback_groups"] == 0
+
+    assert set(staged) == set(fused)
+    for uid, r_s in staged.items():
+        r_f = fused[uid]
+        np.testing.assert_array_equal(np.asarray(r_s.answer),
+                                      np.asarray(r_f.answer))
+        np.testing.assert_array_equal(r_s.answer_logprobs,
+                                      r_f.answer_logprobs)
+        if r_s.rule_posteriors is not None:
+            np.testing.assert_array_equal(r_s.rule_posteriors,
+                                          r_f.rule_posteriors)
+
+
+def test_fused_epsilon_negotiation_falls_back_stagewise():
+    """mimonet at d=128 on CPU: the staged trace routes unbind through the
+    circ_conv interpret lowering while the fused trace routes the
+    epsilon-class unbind_classify kernel — the negotiation must come out
+    epsilon, the executor must refuse the substitution and serve stage by
+    stage (counting the fallback), and the answers must stay identical to
+    the staged schedule; ``fused=True`` overrides the refusal."""
+    from repro.backend import registry
+
+    plan = registry.negotiate(platform="cpu", override="")
+    entry = cbase.REASON_WORKLOADS["mimonet"]
+    cfg = entry.make_config(d=128)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    with registry.use_plan(plan):
+        eng = cbase.reason_engine("mimonet", cfg, ReasonConfig(batch_size=2),
+                                  consts=consts, trace_graph=False)
+        sched = eng.schedules["default"]
+        assert sched.jit_fused is not None
+        assert sched.fused_equivalence == "epsilon"
+        assert sched.fused_epsilon > 0
+        assert "unbind_classify" in sched.fused_lowering_diff
+        assert not sched.fused_ok
+
+        factory, _ = entry.make_requests(cfg, 2, seed=0)
+        reqs = list(factory())
+        staged = eng.run(iter(reqs), schedule="overlap")
+        fused = eng.run(iter(reqs), schedule="fused")
+        assert eng.stats["fused_groups"] == 0
+        assert eng.stats["fused_fallback_groups"] == 1
+    for uid in staged:
+        np.testing.assert_array_equal(staged[uid].answer_logprobs,
+                                      fused[uid].answer_logprobs)
+
+    # an explicit fused=True accepts the epsilon class
+    forced = cbase.compile_reason_schedule("mimonet", cfg, consts=consts,
+                                           batch_size=2, trace_graph=False,
+                                           plan=plan, fused=True)
+    assert forced.fused_forced and forced.fused_ok
+    assert forced.fused_equivalence == "epsilon"
+
+
 def test_fmt_bytes_boundaries():
     """Unit boundaries must never render a value >= 1024 of the smaller
     unit (1048575 bytes is '1.0MB', not '1024.0KB')."""
