@@ -31,7 +31,10 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 def bench_mixed(models, requests: int = 12, rate_rps: float = 4.0,
                 deadline_ms: float = 20.0, max_pes: int = 4096,
-                max_batch: int = 4, seed: int = 0):
+                max_batch: int = 4, seed: int = 0,
+                replicas: int | None = None):
+    import jax
+
     from repro.serve import Budget, Traffic, deploy
 
     options = {m: {"d": 64} for m in models
@@ -40,7 +43,7 @@ def bench_mixed(models, requests: int = 12, rate_rps: float = 4.0,
         models,
         traffic=Traffic(rate_rps=rate_rps, deadline_s=deadline_ms / 1e3),
         budget=Budget(max_pes=max_pes, max_batch=max_batch, max_slots=2,
-                      max_len=64, max_new_tokens=8),
+                      max_len=64, max_new_tokens=8, replicas=replicas),
         options=options, seed=seed)
     for line in deployment.summary().splitlines():
         print(f"# deploy: {line}", file=sys.stderr)
@@ -49,22 +52,31 @@ def bench_mixed(models, requests: int = 12, rate_rps: float = 4.0,
     report = deployment.serve(arrivals)
 
     rows = []
+    # every row records the device pool and the model's replica count, so
+    # a BENCH measurement is attributable to the mesh it ran on
+    ndev = jax.device_count()
     for m in models:
         design = deployment.designs[m]
         dse_tag = f"dse={design.tag()}" if design is not None else "dse=n/a"
+        mesh_tag = (f"devices={ndev} "
+                    f"replicas={deployment.replicas.get(m, 1)}")
         unit = report.work_unit(m)
         q = report.percentiles("queue_s", m)
         s = report.percentiles("service_s", m)
         pre = f"serve/mixed/{m}"
         rows += [
             (f"{pre}/served", len(report.results[m]),
-             f"class={deployment.classes[m]} {dse_tag}"),
+             f"class={deployment.classes[m]} {mesh_tag} {dse_tag}"),
             (f"{pre}/{'tok' if unit == 'tok' else 'problems'}_s",
-             report.work_per_s(m), f"unit={unit} {dse_tag}"),
-            (f"{pre}/queue_p50_ms", q["p50"] * 1e3, "arrival->dispatch"),
-            (f"{pre}/queue_p95_ms", q["p95"] * 1e3, "arrival->dispatch"),
-            (f"{pre}/service_p50_ms", s["p50"] * 1e3, "dispatch->done"),
-            (f"{pre}/service_p95_ms", s["p95"] * 1e3, "dispatch->done"),
+             report.work_per_s(m), f"unit={unit} {mesh_tag} {dse_tag}"),
+            (f"{pre}/queue_p50_ms", q["p50"] * 1e3,
+             f"arrival->dispatch {mesh_tag}"),
+            (f"{pre}/queue_p95_ms", q["p95"] * 1e3,
+             f"arrival->dispatch {mesh_tag}"),
+            (f"{pre}/service_p50_ms", s["p50"] * 1e3,
+             f"dispatch->done {mesh_tag}"),
+            (f"{pre}/service_p95_ms", s["p95"] * 1e3,
+             f"dispatch->done {mesh_tag}"),
         ]
     return rows, report, deployment
 
@@ -88,6 +100,10 @@ def main():
                     help="per-model offered load, req/s")
     ap.add_argument("--deadline-ms", type=float, default=20.0)
     ap.add_argument("--max-pes", type=int, default=4096)
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="data-parallel engine replicas per model (default "
+                         "1; fake devices via XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N)")
     ap.add_argument("--json", type=pathlib.Path, default=None,
                     help="also write rows as JSON")
     ap.add_argument("--check", action="store_true",
@@ -98,7 +114,8 @@ def main():
     models = [m.strip() for m in args.models.split(",") if m.strip()]
     rows, report, deployment = bench_mixed(
         models, requests=args.requests, rate_rps=args.rate,
-        deadline_ms=args.deadline_ms, max_pes=args.max_pes)
+        deadline_ms=args.deadline_ms, max_pes=args.max_pes,
+        replicas=args.replicas)
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
@@ -127,8 +144,14 @@ def main():
                     print(f"FAIL: {m} {p} is not finite ({v})",
                           file=sys.stderr)
                     return 1
+        missing = [n for n, _, x in rows
+                   if "devices=" not in x or "replicas=" not in x]
+        if missing:
+            print(f"FAIL: rows missing devices=/replicas= provenance: "
+                  f"{missing}", file=sys.stderr)
+            return 1
         print("mixed front-door gate OK: both request classes finite "
-              f"p50/p95 ({','.join(models)})")
+              f"p50/p95 ({','.join(models)}), devices/replicas recorded")
     return 0
 
 

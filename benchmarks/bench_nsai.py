@@ -245,6 +245,67 @@ def bench_scaling(model: str, problems: int = 32, batch_size: int = 4,
     return _stamp_backend(rows)
 
 
+def bench_replicas(model: str, problems: int = 48, batch_size: int = 4,
+                   d: int = 64, repl=(1, 2, 4), iters: int = 3):
+    """Data-parallel replica sweep: problems/s at R engine replicas.
+
+    Each point builds a ``ReplicaPool`` of R engines over the same
+    constants — consts ``device_put`` round-robin over the (possibly
+    faked) device pool, one depth-k in-flight window per replica — and
+    serves the same pre-rendered request list offline through the pool
+    protocol.  Rows record problems/s per R, the scaling ratio of the
+    largest R against R=1, and a bitwise answer-equality flag (the
+    pool's answers must be replica-count invariant).  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to give the
+    replicas distinct devices; with fewer devices placement wraps and the
+    sweep degenerates to measuring pool overhead.
+    """
+    import numpy as np
+
+    from repro.configs import base as cbase
+    from repro.serve.reason import ReasonConfig
+    from repro.serve.replica import ReplicaPool
+
+    entry = cbase.REASON_WORKLOADS[model]
+    variant = "oracle" if "oracle" in entry.variants else entry.variants[0]
+    cfg = entry.make_config(d=d)
+    consts = entry.make_consts(cfg, jax.random.PRNGKey(0))
+    ndev = jax.device_count()
+
+    def requests(seed):
+        factory, _ = entry.make_requests(cfg, problems, seed=seed)
+        return list(factory())
+
+    rows, answers, rates = [], {}, {}
+    for r in repl:
+        pool = cbase.reason_engine_pool(
+            model, cfg,
+            ReasonConfig(batch_size=batch_size, schedule="overlap",
+                         variant=variant, max_inflight=2),
+            consts=consts, variants=(variant,), replicas=r,
+            trace_graph=False)
+        if not isinstance(pool, ReplicaPool):
+            pool = ReplicaPool([pool])
+        # first pass compiles every replica's device cache (and is the
+        # answer-invariance sample); timed passes reuse it
+        res = pool.run(requests(seed=9900))
+        answers[r] = {u: np.asarray(res[u].answer) for u in res}
+        dt = _best_of(lambda: pool.run(requests(seed=9900)), iters)
+        rates[r] = problems / dt
+        split = " ".join(f"r{x['replica']}:{x['groups']}g"
+                         for x in pool.per_replica())
+        rows.append((f"nsai/{model}/replicas/r{r}/problems_s", rates[r],
+                     f"devices={ndev} inflight=2x{r} groups={split}"))
+    lo, hi = repl[0], repl[-1]
+    same = all(
+        np.array_equal(answers[lo][u], answers[r][u])
+        for r in repl for u in answers[lo])
+    rows.append((f"nsai/{model}/replicas/scaling_r{hi}_vs_r{lo}/ratio",
+                 rates[hi] / rates[lo],
+                 f"devices={ndev} answers_bitwise_equal={same}"))
+    return _stamp_backend(rows)
+
+
 def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
                      d: int = 64, loads=(0.5, 0.8, 1.2),
                      deadline_ms: float = 10.0):
@@ -392,6 +453,54 @@ def _scaling_main(args):
     return 0
 
 
+def _replicas_main(args):
+    repl = tuple(int(x) for x in args.repl.split(",") if x.strip())
+    rows = bench_replicas(model=args.model, problems=args.problems,
+                          batch_size=args.batch_size, d=args.d, repl=repl,
+                          iters=args.iters)
+    _emit(rows, args.json)
+    if not args.check:
+        return 0
+    lo, hi = repl[0], repl[-1]
+    key = f"nsai/{args.model}/replicas/scaling_r{hi}_vs_r{lo}/ratio"
+
+    def gate(rows):
+        ratio = {n: v for n, v, _ in rows}[key]
+        derived = next(x for n, _, x in rows if n == key)
+        return ratio, "answers_bitwise_equal=True" in derived
+
+    ratio, same = gate(rows)
+    if not same:
+        print(f"FAIL: {args.model} answers differ across replica counts "
+              "(pooling must not change results)", file=sys.stderr)
+        return 1
+    # Throughput gate: R replicas on >= R devices must scale. Wall-clock
+    # ratios on shared CI runners are noisy, so remeasure once with a
+    # larger sample before failing — a real regression (replicas
+    # serialized on one device, pool dispatch blocking) lands far below.
+    target = 2.0
+    if ratio < target:
+        print(f"replica gate: {ratio:.2f}x < {target:g}x at r{hi}, "
+              f"remeasuring with {2 * args.problems} problems / "
+              f"best-of-{2 * args.iters}", file=sys.stderr)
+        rows = bench_replicas(model=args.model, problems=2 * args.problems,
+                              batch_size=args.batch_size, d=args.d,
+                              repl=repl, iters=2 * args.iters)
+        ratio, same = gate(rows)
+    if not same:
+        print(f"FAIL: {args.model} answers differ across replica counts "
+              "(pooling must not change results)", file=sys.stderr)
+        return 1
+    if ratio < target:
+        print(f"FAIL: {args.model} r{hi} throughput only {ratio:.2f}x of "
+              f"r{lo} (gate {target:g}x on {jax.device_count()} devices)",
+              file=sys.stderr)
+        return 1
+    print(f"replica gate OK ({args.model}): r{hi} {ratio:.2f}x over r{lo}, "
+          "answers bit-identical")
+    return 0
+
+
 def main():
     from repro.configs import base as cbase
 
@@ -421,15 +530,27 @@ def main():
                          "staged over --dims)")
     ap.add_argument("--dims", default="64,128",
                     help="VSA block dims for --scaling, ascending")
+    ap.add_argument("--replicas", action="store_true",
+                    help="run ONLY the data-parallel replica sweep "
+                         "(problems/s at --repl engine replicas; fake "
+                         "devices via XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8)")
+    ap.add_argument("--repl", default="1,2,4",
+                    help="replica counts for --replicas, ascending")
     ap.add_argument("--check", action="store_true",
                     help="with --scaling: exit 1 unless at the largest dim "
                          "the fused schedule serves one dispatch per group "
                          "with zero fallbacks and stays within noise of "
-                         "staged (ratio >= 0.9 after remeasure)")
+                         "staged (ratio >= 0.9 after remeasure); with "
+                         "--replicas: exit 1 unless answers are bit-equal "
+                         "across replica counts and the largest R reaches "
+                         "2x the R=1 rate (after remeasure)")
     args = ap.parse_args()
 
     if args.scaling:
         return _scaling_main(args)
+    if args.replicas:
+        return _replicas_main(args)
     rows = bench_nsai(model=args.model, problems=args.problems,
                       batch_size=args.batch_size, d=args.d, iters=args.iters)
     if not args.no_sweep:

@@ -701,25 +701,140 @@ def reason_engine(model: str, cfg, reason_cfg=None, consts=None,
     return ReasonEngine(schedules, reason_cfg, consts=consts)
 
 
-def lm_engine(arch_id: str, serve_cfg=None, key=None):
+def reason_engine_pool(model: str, cfg, reason_cfg=None, consts=None,
+                       variants: tuple[str, ...] | None = None,
+                       replicas: int = 1, trace_graph: bool = False,
+                       plan=None):
+    """``replicas`` data-parallel :func:`reason_engine` copies behind one
+    :class:`~repro.serve.replica.ReplicaPool`.
+
+    Each replica gets the *same* constants (bit-identical answers
+    whichever replica serves a request) ``jax.device_put`` onto its own
+    device — ``jax.devices()[i % ndev]`` — so jit executions of different
+    replicas land on different devices and overlap (fake host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` work the same
+    way).  All replicas share ONE compiled schedule dict: stage jit caches
+    live on the ``StagedSchedule``, so the pipeline compiles once per
+    device, not once per replica.  ``replicas=1`` returns the bare engine
+    (no pool indirection on the single-replica path)."""
+    import dataclasses as _dc
+
+    import jax as _jax
+
+    from repro.serve.reason import ReasonConfig, ReasonEngine
+    from repro.serve.replica import ReplicaPool
+
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    reason_cfg = reason_cfg or ReasonConfig()
+    if replicas == 1:
+        return reason_engine(model, cfg, reason_cfg, consts=consts,
+                             variants=variants, trace_graph=trace_graph,
+                             plan=plan)
+    if consts is None:
+        raise ValueError("a replica pool needs real consts (answers must "
+                         "be replica-invariant, so every replica binds the "
+                         "same materialized constants)")
+    devs = _jax.devices()
+    engines = []
+    schedules = None
+    for i in range(replicas):
+        c = _jax.device_put(consts, devs[i % len(devs)])
+        rcfg = _dc.replace(reason_cfg)
+        if schedules is None:
+            eng = reason_engine(model, cfg, rcfg, consts=c,
+                                variants=variants, trace_graph=trace_graph,
+                                plan=plan)
+            schedules = eng.schedules
+        else:
+            eng = ReasonEngine(schedules, rcfg, consts=c)
+        engines.append(eng)
+    return ReplicaPool(engines)
+
+
+def lm_engine(arch_id: str, serve_cfg=None, key=None, tp: int = 1,
+              device=None):
     """Materialize a smoke-scale arch and wrap it in the slot-pool LM
     ``Engine`` with params bound — the LM counterpart of
     :func:`reason_engine`, so both engine classes come out implementing
     the unified runtime protocol.  Returns ``(engine, model_cfg)``
-    (callers need ``model_cfg.vocab`` to build token traffic)."""
+    (callers need ``model_cfg.vocab`` to build token traffic).
+
+    ``tp > 1`` binds the params tensor-parallel over a ``(data=1,
+    model=tp)`` host mesh through ``distributed.sharding_rules``
+    (``TP_RULES`` with the ``FALLBACK_TP_AXES`` escape for shapes whose
+    preferred axis does not divide; the fallback size floor is disabled so
+    smoke-scale params shard too).  The engine itself is unchanged: its
+    jits follow the committed param shardings, so decode runs SPMD over
+    the mesh — and stays token-for-token identical to single-device
+    (greedy argmax over ulp-level psum reordering; regression-tested).
+    Needs ``tp <= jax.device_count()`` (fake host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    ``device`` pins the (unsharded) params onto one device — the
+    data-parallel replica path (mutually exclusive with ``tp > 1``)."""
     import jax as _jax
 
     from repro.configs import ARCHS
     from repro.serve.engine import Engine, ServeConfig
 
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > 1 and device is not None:
+        raise ValueError("pass tp= (tensor-parallel) or device= (replica "
+                         "placement), not both")
     arch = ARCHS[arch_id]
     cfg = arch.make_smoke()
     serve_cfg = serve_cfg or ServeConfig()
-    params = nninit.materialize(model_spec(arch, cfg),
+    spec = model_spec(arch, cfg)
+    params = nninit.materialize(spec,
                                 key if key is not None
                                 else _jax.random.PRNGKey(0))
+    if tp > 1:
+        if tp > len(_jax.devices()):
+            raise ValueError(
+                f"tp={tp} exceeds jax.device_count()={len(_jax.devices())} "
+                "— on CPU, fake a mesh with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={tp}")
+        from repro.distributed import sharding_rules as sr
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=1, model=tp)
+        shardings = sr.param_shardings(spec, mesh, fsdp=arch.fsdp,
+                                       min_shard_elems=0)
+        params = _jax.tree.map(_jax.device_put, params, shardings)
+    elif device is not None:
+        params = _jax.device_put(params, device)
     step, init_caches = serve_fns(arch, cfg, max_len=serve_cfg.max_len)
     return Engine(step, init_caches, serve_cfg, params=params), cfg
+
+
+def lm_engine_pool(arch_id: str, serve_cfg=None, key=None,
+                   replicas: int = 1, tp: int = 1):
+    """``replicas`` data-parallel LM engines behind one ``ReplicaPool``
+    (each replica's params on its own device, same PRNG key so token
+    streams are replica-invariant), or a single (optionally
+    tensor-parallel) engine when ``replicas == 1``.  Returns ``(engine,
+    model_cfg)`` like :func:`lm_engine`."""
+    import jax as _jax
+
+    from repro.serve.replica import ReplicaPool
+
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if replicas > 1 and tp > 1:
+        raise ValueError(
+            f"replicas={replicas} with tp={tp}: combined data x tensor "
+            "parallel LM serving is not wired up — pick one axis")
+    if replicas == 1:
+        return lm_engine(arch_id, serve_cfg, key=key, tp=tp)
+    devs = _jax.devices()
+    engines, cfg = [], None
+    for i in range(replicas):
+        eng, cfg = lm_engine(arch_id, serve_cfg, key=key,
+                             device=devs[i % len(devs)])
+        engines.append(eng)
+    return ReplicaPool(engines), cfg
 
 
 def param_count(arch: ArchSpec, cfg) -> int:

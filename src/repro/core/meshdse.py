@@ -40,6 +40,19 @@ class MeshPoint:
     def bound_s(self) -> float:
         return max(self.compute_s, self.memory_s, self.collective_s)
 
+    def tag(self) -> str:
+        """Comma-free provenance tag for BENCH rows / deploy summaries."""
+        return (f"mesh={self.data}x{self.model} "
+                f"bound={self.bound_s:.2e}s")
+
+    def record(self) -> dict:
+        """Plain-dict record (``Deployment.report()`` embeds this)."""
+        return {"data": self.data, "model": self.model,
+                "bound_s": self.bound_s, "compute_s": self.compute_s,
+                "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "hbm_gb": self.hbm_gb, "feasible": self.feasible}
+
 
 def _divisors(n: int):
     return [d for d in range(1, n + 1) if n % d == 0]
@@ -95,3 +108,44 @@ def best(n_params, n_active, d_model, n_layers, seq, global_batch,
          chips: int = 256, **kw) -> MeshPoint:
     return search(n_params, n_active, d_model, n_layers, seq, global_batch,
                   chips, **kw)[0]
+
+
+def serving_search(n_params: float, n_active: float, d_model: int,
+                   n_layers: int, seq: int, batch: int, devices: int,
+                   kv_bytes_per_tok: float = 0.0,
+                   bytes_per_param: float = 4.0,
+                   max_model: int | None = None) -> list[MeshPoint]:
+    """Mesh DSE in **serving mode**: the factorization deploy() co-searches.
+
+    Serving differs from training everywhere the cost model cares: one
+    pass (no backward), no remat/accum sweep, no optimizer moments, no DP
+    gradient reduce — and the per-device HBM constraint gains the KV-cache
+    term (``kv_bytes_per_tok`` from the arch config).  The ``data`` axis
+    of the winner is the *engine replica count* (data parallelism over
+    whole engines — :class:`~repro.serve.replica.ReplicaPool`), the
+    ``model`` axis the tensor-parallel degree of each replica.
+
+    ``max_model`` caps the model axis: NSAI staged pipelines are served
+    data-parallel only (pass 1 — every device hosts a whole pipeline),
+    while LM decode may take a real TP axis through
+    ``distributed.sharding_rules``.  Points are sorted feasible-first then
+    by ``bound_s``; ``serving_best`` returns the winner.
+    """
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    pts = search(n_params, n_active, d_model, n_layers, seq,
+                 global_batch=batch, chips=devices,
+                 bytes_per_param=bytes_per_param, moment_bytes=0.0,
+                 kv_bytes_per_tok=kv_bytes_per_tok, train=False)
+    if max_model is not None:
+        pts = [p for p in pts if p.model <= max_model]
+    if not pts:
+        raise ValueError(f"no mesh point for devices={devices} "
+                         f"max_model={max_model}")
+    return pts
+
+
+def serving_best(n_params, n_active, d_model, n_layers, seq, batch,
+                 devices: int, **kw) -> MeshPoint:
+    return serving_search(n_params, n_active, d_model, n_layers, seq, batch,
+                          devices, **kw)[0]

@@ -52,9 +52,19 @@ FALLBACK_TP_AXES = ("embed", "mlp", "heads_flat", "embed2", "qlora", "kvlora",
 _MIN_SHARD_ELEMS = 1 << 20  # don't bother re-sharding small tensors
 
 
-def spec_to_pspec(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> PS:
+def spec_to_pspec(axes: tuple, shape: tuple, mesh: Mesh, rules: dict,
+                  min_shard_elems: int | None = None) -> PS:
     """Build a PartitionSpec, dropping assignments that do not divide; if the
-    preferred TP axis does not divide, fall back to another large dim."""
+    preferred TP axis does not divide, fall back to another large dim.
+
+    ``min_shard_elems`` gates only the *fallback* (preferred-axis sharding
+    has no size floor): tensors smaller than it stay replicated rather
+    than re-sharded over a non-preferred axis.  None = the production
+    default; serving-path callers pass 0 so smoke-scale params still
+    exercise the FALLBACK_TP_AXES path.
+    """
+    if min_shard_elems is None:
+        min_shard_elems = _MIN_SHARD_ELEMS
     assigned = []
     used = set()
     for ax_name, dim in zip(axes, shape):
@@ -65,7 +75,7 @@ def spec_to_pspec(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> PS:
             used.add(mesh_axis)
         else:
             assigned.append(None)
-    if "model" not in used and int(np.prod(shape)) >= _MIN_SHARD_ELEMS:
+    if "model" not in used and int(np.prod(shape)) >= min_shard_elems:
         for i, (ax_name, dim) in enumerate(zip(axes, shape)):
             if assigned[i] is None and ax_name in FALLBACK_TP_AXES and \
                     _divisible(dim, mesh, "model"):
@@ -76,14 +86,19 @@ def spec_to_pspec(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> PS:
     return PS(*assigned)
 
 
-def param_shardings(spec_tree, mesh: Mesh, fsdp: bool = False):
-    """Spec tree -> NamedSharding tree (same structure)."""
+def param_shardings(spec_tree, mesh: Mesh, fsdp: bool = False,
+                    min_shard_elems: int | None = None):
+    """Spec tree -> NamedSharding tree (same structure).
+
+    ``min_shard_elems`` forwards to :func:`spec_to_pspec` (the fallback
+    re-shard size floor; None = production default)."""
     rules = FSDP_RULES if fsdp else TP_RULES
     axes_tree = nninit.axes(spec_tree)
     shapes_tree = nninit.shapes(spec_tree)
 
     def one(axes, shp):
-        return NamedSharding(mesh, spec_to_pspec(axes, shp.shape, mesh, rules))
+        return NamedSharding(mesh, spec_to_pspec(axes, shp.shape, mesh, rules,
+                                                 min_shard_elems))
 
     return jax.tree.map(one, axes_tree, shapes_tree,
                         is_leaf=lambda x: isinstance(x, tuple) and

@@ -38,8 +38,19 @@ from repro.configs import base as cbase
 from repro.serve import runtime as rt
 
 
+def _require_devices(n: int, what: str):
+    """Mesh flags need real (or faked) devices; fail with the escape hatch."""
+    have = jax.device_count()
+    if n > have:
+        raise SystemExit(
+            f"{what}={n} needs {n} devices but jax.device_count()={have} — "
+            "on CPU, fake a device pool with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+
+
 def serve_reason(args):
     from repro.serve.reason import ReasonConfig
+    from repro.serve.replica import ReplicaPool
 
     entry = cbase.REASON_WORKLOADS[args.model]
     cfg = entry.make_config(d=args.d, nn_precision=args.nn_precision,
@@ -49,12 +60,13 @@ def serve_reason(args):
     if variant not in entry.variants:
         raise SystemExit(f"{args.model} has no {variant!r} variant "
                          f"(available: {entry.variants})")
-    engine = cbase.reason_engine(
+    engine = cbase.reason_engine_pool(
         args.model, cfg,
         ReasonConfig(batch_size=args.batch_size, schedule=args.schedule,
                      variant=variant),
-        consts=consts, variants=(variant,))
-    sched = engine.schedules[variant]
+        consts=consts, variants=(variant,), replicas=args.replicas)
+    base = engine.replicas[0] if isinstance(engine, ReplicaPool) else engine
+    sched = base.schedules[variant]
     print(f"[serve] {args.model}: {sched.describe()}")
     if args.schedule == "fused":
         print(f"[serve] fused negotiation: ok={sched.fused_ok} "
@@ -79,6 +91,10 @@ def serve_reason(args):
     print(f"[serve] {args.requests} problems in {dt:.1f}s "
           f"({args.requests / dt:.1f} problems/s, "
           f"{engine.stats['batches']} batches), accuracy {acc:.3f}")
+    if isinstance(engine, ReplicaPool):
+        split = " ".join(f"r{r['replica']}:{r['groups']}g/{r['requests']}req"
+                         for r in engine.per_replica())
+        print(f"[serve] {len(engine)} replicas: {split}")
     if args.schedule == "sequential":
         for name, t in engine.stats["stage_time_s"].get(variant, {}).items():
             print(f"[serve]   stage {name:12s} {t:.3f}s")
@@ -103,7 +119,9 @@ def serve_frontdoor(args):
                       inflight_cap=args.max_inflight,
                       max_slots=args.slots, max_len=args.cache_len,
                       decode_block=args.decode_block,
-                      max_new_tokens=args.max_new),
+                      max_new_tokens=args.max_new,
+                      replicas=args.replicas if args.replicas != 1 else None,
+                      tp=args.tp if args.tp != 1 else None),
         options=options)
     for line in deployment.summary().splitlines():
         print(f"[deploy] {line}")
@@ -125,12 +143,13 @@ def serve_frontdoor(args):
 def serve_lm(args):
     from repro.serve.engine import Request, ServeConfig
 
-    eng, cfg = cbase.lm_engine(
+    eng, cfg = cbase.lm_engine_pool(
         args.arch,
         ServeConfig(max_new_tokens=args.max_new, max_slots=args.slots,
                     max_len=args.cache_len, decode_block=args.decode_block,
                     temperature=args.temperature, top_k=args.top_k,
-                    eos_id=args.eos_id))
+                    eos_id=args.eos_id),
+        replicas=args.replicas, tp=args.tp)
     # (stateful_prefill for rwkv/griffin is forced by the serve_fns tag)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(
@@ -142,8 +161,14 @@ def serve_lm(args):
     toks = sum(len(r.tokens) for r in results.values())
     print(f"[serve] arch={args.arch} requests={args.requests} "
           f"slots={args.slots} prompt={args.prompt_len} new={args.max_new}")
+    from repro.serve.replica import ReplicaPool
+    if isinstance(eng, ReplicaPool):
+        util = " ".join(f"r{i}:{e.utilization():.0%}"
+                        for i, e in enumerate(eng.replicas))
+    else:
+        util = f"{eng.utilization():.0%}"
     print(f"[serve] {dt:.1f}s total, {toks/dt:.1f} tok/s, "
-          f"slot utilization {eng.utilization():.0%} (CPU smoke config)")
+          f"slot utilization {util} (CPU smoke config)")
     print(f"[serve] sample output ids: {results[0].tokens[:12].tolist()}")
     return results
 
@@ -190,8 +215,20 @@ def main():
                     help="cap on the DSE-derived in-flight window depth")
     ap.add_argument("--max-pes", type=int, default=4096,
                     help="AdArray PE budget handed to the DSE")
+    # mesh knobs: data-parallel engine replicas + LM tensor parallelism
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas per model "
+                         "(each replica's consts/params on its own device)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="LM tensor-parallel degree (params sharded over a "
+                         "1 x tp host mesh via distributed.sharding_rules)")
     args = ap.parse_args()
 
+    if args.replicas < 1 or args.tp < 1:
+        raise SystemExit(f"--replicas/--tp must be >= 1 "
+                         f"(got {args.replicas}/{args.tp})")
+    _require_devices(args.replicas, "--replicas")
+    _require_devices(args.tp, "--tp")
     if args.workload == "reason":
         return serve_reason(args)
     if args.workload == "frontdoor":

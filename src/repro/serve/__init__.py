@@ -13,6 +13,7 @@ in jax) load on first use.
 """
 
 from repro.serve.deploy import Budget, Deployment, Traffic, deploy
+from repro.serve.replica import ReplicaPool
 from repro.serve.runtime import (EngineProtocol, GroupRecord,
                                  TRAFFIC_CLASSES, TrafficClass,
                                  resolve_models, work_unit_name, work_units)
@@ -20,7 +21,7 @@ from repro.serve.trace import GoldenTrace, ReplayReport, TraceDiff, record
 
 __all__ = [
     "Budget", "Deployment", "EngineProtocol", "GoldenTrace", "GroupRecord",
-    "ReplayReport", "TRAFFIC_CLASSES", "TraceDiff", "Traffic",
+    "ReplayReport", "ReplicaPool", "TRAFFIC_CLASSES", "TraceDiff", "Traffic",
     "TrafficClass", "deploy", "record", "resolve_models", "work_unit_name",
     "work_units",
 ]

@@ -52,7 +52,19 @@ class Traffic:
 
 @dataclasses.dataclass(frozen=True)
 class Budget:
-    """Resource envelope the generator explores under."""
+    """Resource envelope the generator explores under.
+
+    ``devices`` / ``replicas`` / ``tp`` size the *mesh* side of the
+    search: ``devices`` is the device pool (None = ``jax.device_count()``
+    — fake host devices via ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N``), ``replicas`` the data-parallel engine replica
+    count per model (None = 1, ``"auto"`` = the data axis of the
+    mesh-DSE winner under ``devices``), ``tp`` the tensor-parallel degree
+    of each LM replica (NSAI pipelines serve whole-pipeline-per-device,
+    so ``tp`` does not apply to them).  ``replicas`` may exceed
+    ``devices`` (placement wraps round-robin) — useful on 1-device hosts
+    where N replicas still shard load across N in-flight windows.
+    """
 
     max_pes: int = 4096           # AdArray PE budget handed to the DSE
     max_batch: int = 8            # admission-group ceiling (NSAI buckets)
@@ -61,6 +73,9 @@ class Budget:
     max_len: int = 128            # LM per-slot KV capacity
     decode_block: int = 8         # LM tokens per fused decode dispatch
     max_new_tokens: int = 24      # LM default generation budget
+    devices: int | None = None    # device pool (None = jax.device_count())
+    replicas: int | str | None = None  # DP engine replicas (None=1, "auto")
+    tp: int | None = None         # LM tensor-parallel degree (None = 1)
 
 
 @dataclasses.dataclass
@@ -90,6 +105,25 @@ class Deployment:
     # the per-model option kwargs deploy() was called with — kept so a
     # recorded golden trace can re-deploy the same models for replay
     options: dict = dataclasses.field(default_factory=dict)
+    # mesh-DSE outcome per model: the deployed MeshPoint (data = replica
+    # count, model = TP degree; empty for hand-built Deployments) and the
+    # resolved replica count (defaults to 1 when absent)
+    mesh: dict = dataclasses.field(default_factory=dict)
+    replicas: dict = dataclasses.field(default_factory=dict)
+
+    def _pool(self, m: str):
+        """The model's ReplicaPool, or None when served by a bare engine."""
+        from repro.serve.replica import ReplicaPool
+
+        eng = self.engines[m]
+        return eng if isinstance(eng, ReplicaPool) else None
+
+    def _base(self, m: str):
+        """The model's representative engine (replica 0 of a pool) — the
+        one to read compile-time structure (cfg / schedules) from; stats
+        should come from the pool (merged) instead."""
+        pool = self._pool(m)
+        return pool.replicas[0] if pool is not None else self.engines[m]
 
     def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
         """Serve one merged arrival stream through the front-door."""
@@ -114,13 +148,17 @@ class Deployment:
         backend = self.backend_record()
         for m, eng in self.engines.items():
             design, plan = self.designs[m], self.plans[m]
+            pool, base = self._pool(m), self._base(m)
             if self.classes[m] == "reason":
-                sched = eng.schedules[self.variants[m]]
+                sched = base.schedules[self.variants[m]]
+                # stats off ``eng``: for a pool that's the recursive sum
+                # over replicas, so dispatch counts / rates stay whole-
+                # deployment truths whatever the replica count
                 serving = {
-                    "batch_size": eng.cfg.batch_size,
-                    "buckets": tuple(eng.cfg.buckets or ()),
-                    "max_inflight": eng.cfg.max_inflight,
-                    "schedule": eng.cfg.schedule,
+                    "batch_size": base.cfg.batch_size,
+                    "buckets": tuple(base.cfg.buckets or ()),
+                    "max_inflight": base.cfg.max_inflight,
+                    "schedule": base.cfg.schedule,
                     "variant": self.variants[m],
                     # the fused-pipeline negotiation outcome for the served
                     # variant, plus the measured (non-warmup) steady-state
@@ -141,16 +179,23 @@ class Deployment:
                 }
             else:
                 serving = {
-                    "max_slots": eng.cfg.max_slots,
-                    "max_len": eng.cfg.max_len,
-                    "decode_block": eng.cfg.decode_block,
+                    "max_slots": base.cfg.max_slots,
+                    "max_len": base.cfg.max_len,
+                    "decode_block": base.cfg.decode_block,
                 }
+            point = self.mesh.get(m)
             out[m] = {
                 "class": self.classes[m],
                 "design": design.summary() if design is not None else None,
                 "searched_points": getattr(design, "searched_points", None),
                 "serving": serving,
                 "backend": backend,
+                # the deployed mesh factorization (data = engine replicas,
+                # model = TP degree) with its predicted roofline bound,
+                # and the routing/utilization split across replicas
+                "mesh": point.record() if point is not None else None,
+                "replicas": self.replicas.get(m, 1),
+                "per_replica": pool.per_replica() if pool else None,
             }
         return out
 
@@ -166,8 +211,17 @@ class Deployment:
                        f"({design.searched_points} points)")
             else:
                 dse = "dse=n/a (single nn stream)"
+            point = self.mesh.get(m)
+            mesh = (f"{point.tag()} replicas={rec['replicas']}"
+                    if point is not None else "mesh=n/a")
             knobs = " ".join(f"{k}={v}" for k, v in rec["serving"].items())
-            lines.append(f"{m} [{rec['class']}]: {knobs} | {dse} | {backend}")
+            lines.append(f"{m} [{rec['class']}]: {knobs} | {dse} | {mesh} "
+                         f"| {backend}")
+            if rec["per_replica"]:
+                split = " ".join(
+                    f"r{r['replica']}:{r['groups']}g/{r['requests']}req"
+                    f"/{r['share']:.0%}" for r in rec["per_replica"])
+                lines.append(f"  {m} replicas: {split}")
         return "\n".join(lines)
 
     # -- synthetic traffic + warmup (launcher / benchmark helpers) ----------
@@ -186,7 +240,7 @@ class Deployment:
                     self.configs[m], n, seed=seed + i)
                 streams[m], truths[m] = factory(), truth
             else:
-                cfg, scfg = self.configs[m], self.engines[m].cfg
+                cfg, scfg = self.configs[m], self._base(m).cfg
                 plen = max(1, min(16, scfg.max_len - scfg.max_new_tokens))
                 rng = np.random.default_rng(seed + i)
 
@@ -212,19 +266,60 @@ class Deployment:
     def warmup(self):
         """Compile every serving shape before traffic arrives: each NSAI
         bucket's jit entry and the LM prefill + decode block — so online
-        latency percentiles never include jit compile."""
+        latency percentiles never include jit compile.  Pooled engines
+        warm every replica: the jit caches are shared across replicas but
+        keyed by device placement, so each replica's device needs its own
+        first touch."""
         from repro.configs import base as cbase
 
         for m, eng in self.engines.items():
+            pool = self._pool(m)
+            subs = pool.replicas if pool is not None else [eng]
+            base = subs[0]
             if self.classes[m] == "reason":
-                for b in eng.cfg.buckets or (eng.cfg.batch_size,):
-                    factory, _ = cbase.REASON_WORKLOADS[m].make_requests(
-                        self.configs[m], b, seed=5000 + b)
-                    eng.run(factory())
+                for sub in subs:
+                    for b in base.cfg.buckets or (base.cfg.batch_size,):
+                        factory, _ = cbase.REASON_WORKLOADS[m].make_requests(
+                            self.configs[m], b, seed=5000 + b)
+                        sub.run(factory())
             else:
-                streams, _ = self._streams(eng.cfg.max_slots, seed=5000)
-                eng.run(list(streams[m]))
+                for sub in subs:
+                    streams, _ = self._streams(base.cfg.max_slots, seed=5000)
+                    sub.run(list(streams[m]))
         return self
+
+
+def _mesh_plan(n_params: float, d_model: int, n_layers: int, seq: int,
+               batch: int, ndev: int, replicas, tp: int,
+               kv_bytes_per_tok: float = 0.0):
+    """Resolve (replica count, deployed MeshPoint) for one model.
+
+    ``replicas="auto"`` lets the serving-mode mesh DSE pick: search the
+    whole ``ndev`` pool with the model axis pinned to ``tp`` and take the
+    winner's data axis.  An explicit/None replica count is honored as-is
+    — the search then runs at ``chips = replicas × tp`` so the recorded
+    point describes the factorization actually deployed (its ``bound_s``
+    is the per-step roofline prediction for that mesh).
+    """
+    from repro.core import meshdse
+
+    def pts_at(chips, b):
+        pts = meshdse.serving_search(
+            n_params, n_params, d_model, n_layers, seq, b,
+            devices=chips, kv_bytes_per_tok=kv_bytes_per_tok,
+            max_model=tp)
+        return [p for p in pts if p.model == tp] or pts
+
+    if replicas == "auto":
+        point = pts_at(max(1, ndev), batch)[0]
+        return point.data, point
+    r = int(replicas or 1)
+    # the search drops data axes that don't divide the batch; an explicit
+    # replica count is honored regardless, so round the modeled batch up
+    b = batch if (batch % r == 0 or batch < r) else -(-batch // r) * r
+    pts = pts_at(r * tp, b)
+    point = next((p for p in pts if p.data == r and p.model == tp), pts[0])
+    return r, point
 
 
 def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
@@ -282,6 +377,10 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     plans: dict[str, Any] = {}
     configs: dict[str, Any] = {}
     variants: dict[str, str | None] = {}
+    mesh: dict[str, Any] = {}
+    replicas: dict[str, int] = {}
+    ndev = budget.devices or jax.device_count()
+    tp_eff = budget.tp or 1
     root = jax.random.PRNGKey(seed)
     for i, m in enumerate(models):
         key = jax.random.fold_in(root, i)
@@ -301,21 +400,36 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
             plan = dse.serving_plan(design, max_batch=budget.max_batch,
                                     inflight_cap=budget.inflight_cap)
             consts = entry.make_consts(cfg, key)
-            eng = cbase.reason_engine(
+            # mesh co-search (serving mode): staged pipelines serve one
+            # whole pipeline per device, so the model axis is pinned to 1
+            # and the winner's data axis is the engine replica count
+            n_params = sum(getattr(x, "size", 0)
+                           for x in jax.tree.leaves(consts))
+            r, point = _mesh_plan(
+                float(n_params), getattr(cfg, "d", 128),
+                max(1, len(entry.stage_specs(cfg, variant))), seq=1,
+                batch=budget.max_batch, ndev=ndev,
+                replicas=budget.replicas, tp=1)
+            eng = cbase.reason_engine_pool(
                 m, cfg,
                 ReasonConfig(batch_size=plan.batch_size,
                              schedule=plan.schedule, variant=variant,
                              max_inflight=plan.max_inflight,
                              buckets=plan.buckets),
-                consts=consts, variants=(variant,), trace_graph=False,
-                plan=lowering_plan)
+                consts=consts, variants=(variant,), replicas=r,
+                trace_graph=False, plan=lowering_plan)
             # fused-pipeline negotiation: when the compiled schedule's
             # fused variant is provably bit-identical under the deployment
             # plan, serve one dispatch per admission group instead of K
             # (the engine still falls back per-stage if the schedule's
-            # negotiation says epsilon — answers never change)
-            if plan.schedule == "overlap" and eng.schedules[variant].fused_ok:
-                eng.cfg.schedule = "fused"
+            # negotiation says epsilon — answers never change).  Replicas
+            # share one compiled schedule but carry their own cfg copy,
+            # so the upgrade applies per replica.
+            subs = eng.replicas if hasattr(eng, "replicas") else [eng]
+            if plan.schedule == "overlap" and \
+                    subs[0].schedules[variant].fused_ok:
+                for sub in subs:
+                    sub.cfg.schedule = "fused"
             classes[m], designs[m], plans[m] = "reason", design, plan
             variants[m] = variant
         else:
@@ -326,10 +440,29 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
                             max_len=budget.max_len,
                             decode_block=budget.decode_block,
                             max_new_tokens=budget.max_new_tokens), **opts)
-            eng, cfg = cbase.lm_engine(m, scfg, key=key)
+            # mesh co-search: LM decode may take a real TP axis through
+            # distributed.sharding_rules, so the model axis is budget.tp;
+            # the KV term comes from the arch config (bytes per resident
+            # token across every layer's K+V, fp32 smoke params)
+            from repro.configs import ARCHS
+            mcfg = ARCHS[m].make_smoke()
+            kv_bytes = (getattr(mcfg, "n_layers", 1) * 2
+                        * getattr(mcfg, "n_kv_heads",
+                                  getattr(mcfg, "n_heads", 1))
+                        * getattr(mcfg, "head_dim", 64) * 4.0)
+            r, point = _mesh_plan(
+                float(cbase.param_count(ARCHS[m], mcfg)),
+                getattr(mcfg, "d_model", 128),
+                getattr(mcfg, "n_layers", 1), seq=budget.max_len,
+                batch=budget.max_slots, ndev=ndev,
+                replicas=budget.replicas, tp=tp_eff,
+                kv_bytes_per_tok=kv_bytes)
+            eng, cfg = cbase.lm_engine_pool(m, scfg, key=key,
+                                            replicas=r, tp=tp_eff)
             classes[m], designs[m], plans[m] = "lm", None, None
             variants[m] = None
         engines[m], configs[m] = eng, cfg
+        mesh[m], replicas[m] = point, r
 
     door = FrontDoor(engines,
                      FrontDoorConfig(deadline_s=traffic.deadline_s,
@@ -340,4 +473,5 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
                       variants=variants, traffic=traffic, budget=budget,
                       seed=seed, backend=lowering_plan,
                       options={m: dict(options.get(m, {})) for m in models
-                               if options.get(m)})
+                               if options.get(m)},
+                      mesh=mesh, replicas=replicas)

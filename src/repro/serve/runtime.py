@@ -72,6 +72,9 @@ class GroupRecord:
     size: int                     # real requests in the group (<= bucket)
     dispatch_t: float | None = None
     done_t: float | None = None
+    # which replica of a ReplicaPool served the group (None = the engine
+    # is not pooled); stamped by ``serve.replica.ReplicaPool.submit``
+    replica: int | None = None
 
 
 @runtime_checkable
