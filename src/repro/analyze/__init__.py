@@ -1,0 +1,23 @@
+"""Preflight static analysis over the serving stack.
+
+Two halves (see ISSUE/README "Preflight static analysis"):
+
+* artifact analysis over what the stack already produces — per-stage
+  jaxpr checks (:mod:`repro.analyze.artifacts`), retrace-hazard proofs
+  (:mod:`repro.analyze.retrace`), registry-vs-kernel consistency
+  (:mod:`repro.analyze.registry_check`);
+* a repo-specific AST lint over the serving sources
+  (:mod:`repro.analyze.lint`).
+
+Entry points: :func:`preflight` (what ``deploy()`` runs), the CLI
+``python -m repro.analyze`` (the full matrix incl. empirical kernel
+probes and double-trace determinism), and the individual check modules.
+"""
+
+from repro.analyze.findings import (AnalysisReport, Finding,
+                                    PreflightError, RULES, finding)
+from repro.analyze.lint import lint_file, lint_tree
+from repro.analyze.preflight import preflight
+
+__all__ = ["AnalysisReport", "Finding", "PreflightError", "RULES",
+           "finding", "lint_file", "lint_tree", "preflight"]

@@ -1,0 +1,309 @@
+"""Repo-specific AST lint over the serving sources (NSF101–NSF104).
+
+These are rules a generic linter cannot know:
+
+* **NSF101** — the serving stack is virtual-clock-driven: every timestamp
+  must come from an injectable ``clock``/``wall`` parameter so the
+  front-door, the soak benches and the tests can replace time.  A raw
+  ``time.perf_counter()`` (or ``time.time/monotonic/sleep``) *call* in
+  ``serve/`` silently anchors stats to the host clock.  Parameter
+  defaults like ``clock=time.perf_counter`` are attribute references,
+  not calls, and pass.
+* **NSF102** — inside a jit-traced function body every value is a
+  tracer; ``np.asarray``/``np.array``/``jax.device_get`` forces a
+  device→host sync per trace and breaks donation.  Jit-traced bodies
+  are found structurally: ``@jax.jit``-decorated functions, functions
+  whose *name* (or ``self.<method>``) is passed to ``jax.jit(...)``, and
+  inner functions returned by ``_make_*`` builder methods (the engine
+  convention — the builder's return value is handed straight to jit).
+* **NSF103** — per-request RNG must derive from the root seed via
+  ``fold_in`` (the ``(seed, uid, index)`` contract); a bare
+  ``PRNGKey(...)`` with no ``fold_in`` in the same function means every
+  request shares one stream.
+* **NSF104** — ``EngineProtocol.submit`` implementations must stamp
+  ``rec.dispatch_t`` (directly, via a same-class helper such as
+  ``_admit``, or by delegating to another engine's ``.submit``) and must
+  stamp it *before* any blocking call, or queue/service latency
+  attribution silently charges the wait to the wrong side.
+  ``typing.Protocol`` classes are declarations, not implementations, and
+  are skipped.
+
+Only :data:`SERVE_RULES` apply under ``src/repro/serve``; elsewhere in
+the tree only the scope-safe NSF102 runs (training code legitimately
+builds un-folded init keys, benches legitimately read the host clock).
+Results are memoized per ``(path, mtime)`` so ``deploy()`` preflight can
+call this on every deployment for free.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analyze.findings import AnalysisReport, Finding, finding
+
+_CLOCK_ATTRS = {"time", "perf_counter", "monotonic", "sleep",
+                "process_time"}
+# (module alias, attribute) calls that force device->host sync in a trace
+_HOST_CALLS = {("np", "asarray"), ("np", "array"),
+               ("numpy", "asarray"), ("numpy", "array"),
+               ("onp", "asarray"), ("onp", "array"),
+               ("jax", "device_get")}
+_BLOCKING_ATTRS = {"block_until_ready", "drain_all", "drain_ready",
+                   "_drain_one", "result", "join", "sleep"}
+
+SERVE_RULES = ("NSF101", "NSF102", "NSF103", "NSF104")
+GENERAL_RULES = ("NSF102",)
+
+_CACHE: dict[str, tuple[float, tuple[str, ...], tuple[Finding, ...]]] = {}
+
+
+def _attr_chain(node: ast.expr) -> list[str]:
+    """`jax.random.PRNGKey` -> ["jax", "random", "PRNGKey"] (best effort)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    return _attr_chain(node)[-2:] == ["jax", "jit"] or \
+        (isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True
+            # functools.partial(jax.jit, ...)
+            if _attr_chain(dec.func)[-1:] == ["partial"] and dec.args \
+                    and _is_jax_jit(dec.args[0]):
+                return True
+    return False
+
+
+def _jitted_names(tree: ast.AST) -> set[str]:
+    """Function/method names handed to a ``jax.jit(...)`` call site."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) \
+                and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Name):
+                names.add(target.id)
+            elif isinstance(target, ast.Attribute):
+                names.add(target.attr)   # jax.jit(self._sample)
+    return names
+
+
+def _traced_functions(tree: ast.AST) -> list[ast.FunctionDef]:
+    """Every function whose body jit traces (see module docstring)."""
+    jitted = _jitted_names(tree)
+    traced: list[ast.FunctionDef] = []
+    seen: set[int] = set()
+
+    def add(fn: ast.FunctionDef):
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            traced.append(fn)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if _jit_decorated(node) or node.name in jitted:
+            add(node)
+        if node.name.startswith("_make_"):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.FunctionDef) and sub is not node:
+                    add(sub)
+    return traced
+
+
+def _check_clock_calls(tree: ast.AST, rel: str) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if len(chain) == 2 and chain[0] == "time" \
+                    and chain[1] in _CLOCK_ATTRS:
+                out.append(finding(
+                    "NSF101", f"{rel}:{node.lineno}",
+                    f"raw time.{chain[1]}() call — read the injectable "
+                    "clock/wall parameter instead (defaults may still be "
+                    "time.perf_counter)"))
+    return out
+
+
+def _check_host_materialization(tree: ast.AST, rel: str) -> list[Finding]:
+    out = []
+    for fn in _traced_functions(tree):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if len(chain) == 2 and tuple(chain) in _HOST_CALLS:
+                    out.append(finding(
+                        "NSF102", f"{rel}:{node.lineno}",
+                        f"{'.'.join(chain)}() inside jit-traced "
+                        f"{fn.name!r} — forces a host sync per trace; "
+                        "keep traced bodies jnp-only"))
+    return out
+
+
+def _check_rng_derivation(tree: ast.AST, rel: str) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        key_lines = [
+            sub.lineno for sub in ast.walk(node)
+            if isinstance(sub, ast.Call)
+            and _attr_chain(sub.func)[-1:] == ["PRNGKey"]]
+        if not key_lines:
+            continue
+        folds = any(isinstance(sub, ast.Attribute) and sub.attr == "fold_in"
+                    for sub in ast.walk(node))
+        if not folds:
+            out.append(finding(
+                "NSF103", f"{rel}:{key_lines[0]}",
+                f"{node.name!r} builds a PRNGKey but never fold_in-derives "
+                "from it — per-request streams must come from "
+                "(seed, uid, index)"))
+    return out
+
+
+def _is_protocol(cls: ast.ClassDef) -> bool:
+    return any(_attr_chain(b)[-1:] == ["Protocol"] for b in cls.bases)
+
+
+def _stamps_dispatch_t(fn: ast.FunctionDef) -> int | None:
+    """Line of the first ``<x>.dispatch_t = ...`` store in fn, else None."""
+    lines = []
+    for node in ast.walk(fn):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Attribute) and t.attr == "dispatch_t":
+                lines.append(node.lineno)
+    return min(lines) if lines else None
+
+
+def _check_dispatch_stamp(tree: ast.AST, rel: str) -> list[Finding]:
+    out = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef) or _is_protocol(cls):
+            continue
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, ast.FunctionDef)}
+        submit = methods.get("submit")
+        if submit is None:
+            continue
+        body = [n for n in submit.body
+                if not (isinstance(n, ast.Expr)
+                        and isinstance(n.value, (ast.Constant, ast.Ellipsis)))]
+        if not body:
+            continue   # stub body (shouldn't happen outside Protocols)
+
+        stampers = {m for m, f in methods.items()
+                    if _stamps_dispatch_t(f) is not None}
+        # one transitive hop: helpers that call a stamping helper
+        stampers |= {
+            m for m, f in methods.items()
+            if any(isinstance(n, ast.Call)
+                   and isinstance(n.func, ast.Attribute)
+                   and isinstance(n.func.value, ast.Name)
+                   and n.func.value.id == "self"
+                   and n.func.attr in stampers
+                   for n in ast.walk(f))}
+
+        stamp_line = _stamps_dispatch_t(submit)
+        delegate_line = None
+        block_line = None
+        for node in ast.walk(submit):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if f.attr == "submit" and not (
+                        isinstance(f.value, ast.Name)
+                        and f.value.id == "self"):
+                    delegate_line = min(delegate_line or node.lineno,
+                                        node.lineno)
+                if isinstance(f.value, ast.Name) and f.value.id == "self" \
+                        and f.attr in stampers:
+                    stamp_line = min(stamp_line or node.lineno, node.lineno)
+                if f.attr in _BLOCKING_ATTRS:
+                    block_line = min(block_line or node.lineno, node.lineno)
+
+        where = f"{rel}:{submit.lineno}"
+        if stamp_line is None and delegate_line is None:
+            out.append(finding(
+                "NSF104", where,
+                f"{cls.name}.submit never stamps dispatch_t (directly, via "
+                "a self-method, or by delegating to another .submit) — "
+                "latency attribution needs the dispatch timestamp"))
+        elif block_line is not None and stamp_line is not None \
+                and block_line < stamp_line:
+            out.append(finding(
+                "NSF104", f"{rel}:{block_line}",
+                f"{cls.name}.submit blocks before stamping dispatch_t "
+                f"(block at line {block_line}, stamp at {stamp_line}) — "
+                "the wait would be charged to queueing, not service"))
+    return out
+
+
+_RULE_CHECKS = {
+    "NSF101": _check_clock_calls,
+    "NSF102": _check_host_materialization,
+    "NSF103": _check_rng_derivation,
+    "NSF104": _check_dispatch_stamp,
+}
+
+
+def rules_for_path(path: str) -> tuple[str, ...]:
+    """Serve sources get the full serving rule set; the rest of the tree
+    gets only the scope-safe rules."""
+    norm = path.replace(os.sep, "/")
+    if "/serve/" in norm or norm.endswith("/serve"):
+        return SERVE_RULES
+    return GENERAL_RULES
+
+
+def lint_file(path: str, rules: tuple[str, ...] | None = None,
+              root: str | None = None) -> list[Finding]:
+    """Lint one source file; memoized on (path, mtime, rules)."""
+    rules = tuple(rules if rules is not None else rules_for_path(path))
+    mtime = os.path.getmtime(path)
+    hit = _CACHE.get(path)
+    if hit is not None and hit[0] == mtime and hit[1] == rules:
+        return list(hit[2])
+    rel = os.path.relpath(path, root) if root else path
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    out: list[Finding] = []
+    for rule in rules:
+        out.extend(_RULE_CHECKS[rule](tree, rel))
+    _CACHE[path] = (mtime, rules, tuple(out))
+    return out
+
+
+def lint_tree(root: str) -> AnalysisReport:
+    """Lint every ``*.py`` under ``root`` (rule set chosen per path)."""
+    report = AnalysisReport()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for name in sorted(filenames):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            report.extend(lint_file(path, root=root))
+            report.covered("lint_files")
+    return report

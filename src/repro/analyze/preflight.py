@@ -1,0 +1,54 @@
+"""The orchestrated preflight pass — what ``deploy()`` and the CLI run.
+
+:func:`preflight` composes the four check families over a set of
+*subjects* (compiled schedules with their configs/workload entries) plus
+the AST lint and the registry checks.  Two cost tiers share this one
+entry point:
+
+* ``deploy()`` runs the cheap tier on every deployment: jaxpr artifact
+  checks over the schedules it just compiled, the (mtime-memoized) lint
+  over ``serve/``, and the static registry checks.  No kernels execute,
+  nothing compiles.
+* the CLI (``python -m repro.analyze``) runs the full tier: every
+  declared (workload × bucket × backend-plan) combination, double-trace
+  determinism, and the empirical kernel probes.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable
+
+from repro.analyze import lint as lint_mod
+from repro.analyze import registry_check
+from repro.analyze.artifacts import check_schedule
+from repro.analyze.findings import AnalysisReport
+from repro.analyze.retrace import check_retrace
+
+_REPRO_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), os.pardir))
+_SERVE_DIR = os.path.join(_REPRO_ROOT, "serve")
+
+
+def preflight(subjects: Iterable = (), *, lint_root: str | None = None,
+              probe: bool = False, double_trace: bool = False
+              ) -> AnalysisReport:
+    """Run every preflight family and return the merged report.
+
+    ``subjects``: iterables of ``(sched, cfg, entry, variant)`` — ``cfg``
+    /``entry``/``variant`` may be None (artifact checks still run; the
+    cross-bucket spec check needs the entry).  ``lint_root`` defaults to
+    the serving sources.  ``probe``/``double_trace`` enable the expensive
+    tier (empirical kernel probes, double-trace determinism).
+    """
+    report = AnalysisReport()
+    report.merge(lint_mod.lint_tree(lint_root or _SERVE_DIR))
+    report.merge(registry_check.check_registry(probe=probe))
+    for subject in subjects:
+        sched, cfg, entry, variant = (tuple(subject) + (None,) * 4)[:4]
+        report.merge(check_schedule(sched, cfg=cfg))
+        report.merge(check_retrace(sched, entry=entry, cfg=cfg,
+                                   variant=variant,
+                                   double_trace=double_trace))
+        report.covered("schedules")
+    return report

@@ -1,0 +1,255 @@
+"""Registry-vs-kernel consistency (NSF006) and dispatch floors (NSF007).
+
+The lowering registry makes *claims* about the kernels — which shapes a
+lowering can serve, how far its output may drift from the exact XLA
+reference, when the kernel stops paying for itself.  Nothing else in the
+stack verifies those claims; this module does, two ways:
+
+* **static** — every ``kernels/<name>/`` package must be registered and
+  vice versa; every preference chain must terminate in the ``xla``
+  reference; kernels sharing the circulant builder (``circ_conv`` /
+  ``unbind_classify``) must declare identical compiled-Pallas shape
+  predicates (a fix to one that skips the twin is exactly the drift this
+  check exists to catch).
+* **empirical** (``probe=True``, CLI/tests — deploy()'s cheap preflight
+  skips it) — run the shape-constrained kernels' interpret lowering
+  against the exact reference at feasible *and* declared-infeasible
+  sizes: a conformant output at an "infeasible" size proves the
+  predicate over-strict (this check is what demoted the registry's old
+  claim that the circulant builder itself needs pow2 dims — only the
+  compiled Mosaic path does); an error above the declared epsilon at a
+  feasible size proves the equivalence class wrong.
+
+NSF007 cross-checks declared ``dispatch_min_size`` floors against the
+source tree: a floor nobody applies (no ``dispatch=True`` call site) is
+dead perf policy; a ``dispatch=True`` site for a floorless kernel is a
+no-op flag — both warnings.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import numpy as np
+
+from repro.analyze.findings import AnalysisReport, finding
+from repro.backend import registry
+from repro.backend.registry import KERNELS
+
+_KERNELS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "kernels")
+_SRC_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), os.pardir))
+
+# kernels built on the same Pallas machinery must agree on the compiled
+# lowering's shape predicate — a constraint correction that skips the twin
+# is drift
+_TWINS = (("circ_conv", "unbind_classify"),)
+
+# sizes the probe sweeps: non-pow2 / sub-min_size (declared infeasible for
+# the constrained kernels) and pow2 controls
+_PROBE_SIZES = (5, 12, 33, 8, 32)
+
+
+def check_static() -> AnalysisReport:
+    report = AnalysisReport()
+    kernels_dir = os.path.normpath(_KERNELS_DIR)
+    dirs = sorted(
+        d for d in os.listdir(kernels_dir)
+        if os.path.isdir(os.path.join(kernels_dir, d))
+        and os.path.exists(os.path.join(kernels_dir, d, "ops.py")))
+    for d in dirs:
+        if d not in KERNELS:
+            report.findings.append(finding(
+                "NSF006", f"kernels/{d}",
+                "kernel package has no registry entry — its lowerings are "
+                "invisible to negotiation and trace replay"))
+    for name in KERNELS:
+        if name not in dirs:
+            report.findings.append(finding(
+                "NSF006", f"registry/{name}",
+                "registry entry has no kernels/ package (ops.py) behind "
+                "it"))
+    for name, spec in KERNELS.items():
+        if not spec.lowerings[-1].is_ref:
+            report.findings.append(finding(
+                "NSF006", f"registry/{name}",
+                "preference order does not end in the xla reference — "
+                "negotiated chains would lose the universal fallback"))
+    for a, b in _TWINS:
+        try:
+            pa = KERNELS[a].by_name("pallas")
+            pb = KERNELS[b].by_name("pallas")
+        except KeyError:
+            continue
+        if (pa.requires_pow2, pa.min_size) != (pb.requires_pow2,
+                                               pb.min_size):
+            report.findings.append(finding(
+                "NSF006", f"registry/{a}+{b}",
+                f"twin kernels disagree on compiled-Pallas shape "
+                f"predicates (pow2={pa.requires_pow2}/min={pa.min_size} "
+                f"vs pow2={pb.requires_pow2}/min={pb.min_size}) — they "
+                "share the circulant builder, so one of the declarations "
+                "is wrong"))
+    report.covered("registry_static", len(KERNELS))
+    return report
+
+
+# -- empirical probes ---------------------------------------------------------
+
+
+def _probe_circ_conv(d: int):
+    import jax
+
+    from repro.kernels.circ_conv import ops as cops
+
+    key = jax.random.PRNGKey(d)
+    a = jax.random.normal(key, (2, 2, d))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, d))
+    return np.asarray(cops.circ_bind(a, b, "conv"))
+
+
+def _probe_unbind_classify(d: int):
+    import jax
+
+    from repro.kernels.unbind_classify import ops as uops
+
+    k, blocks, n, c = 3, 2, 4, 5
+    key = jax.random.PRNGKey(d)
+    keys = jax.random.normal(key, (k, blocks, d))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, blocks * d))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (blocks * d, c)) * 0.1
+    b = jax.random.normal(jax.random.fold_in(key, 3), (c,)) * 0.1
+    return np.asarray(uops.unbind_classify({"w": w, "b": b}, keys, x))
+
+
+_PROBES = {
+    "circ_conv": _probe_circ_conv,
+    "unbind_classify": _probe_unbind_classify,
+}
+
+
+def _run_under(kernel: str, lowering: str, fn, size: int):
+    plan = registry.negotiate(platform="cpu",
+                              override=f"{kernel}={lowering}")
+    with registry.use_plan(plan), registry.record_selections() as rec:
+        out = fn(size)
+    served = {low for k, low in rec if k == kernel}
+    return out, served
+
+
+def check_probes() -> AnalysisReport:
+    """Interpret-vs-reference sweep for the shape-constrained kernels."""
+    report = AnalysisReport()
+    for kernel, fn in _PROBES.items():
+        spec = KERNELS[kernel]
+        try:
+            low = spec.by_name("interpret")
+        except KeyError:
+            continue
+        eps = max(low.epsilon, 1e-5)
+        for size in _PROBE_SIZES:
+            ref_out, _ = _run_under(kernel, "xla", fn, size)
+            got, served = _run_under(kernel, "interpret", fn, size)
+            err = float(np.max(np.abs(got - ref_out)))
+            where = f"{kernel}/interpret@d={size}"
+            report.covered("kernel_probes")
+            if "interpret" not in served:
+                # the forced-interpret plan fell through to the reference:
+                # the predicate declared this size infeasible.  Run the
+                # kernel entry point directly — if it conforms, the
+                # declaration is over-strict.
+                direct = _direct_interpret(kernel, size)
+                if direct is not None \
+                        and float(np.max(np.abs(direct - ref_out))) <= eps:
+                    report.findings.append(finding(
+                        "NSF006", where,
+                        f"declared infeasible at d={size} but the "
+                        "interpret kernel is conformant there — the "
+                        "capability predicate is over-strict"))
+                continue
+            if err > eps:
+                report.findings.append(finding(
+                    "NSF006", where,
+                    f"interpret lowering drifts {err:.2e} from the exact "
+                    f"reference at d={size} — above the declared epsilon "
+                    f"class {low.epsilon:g}"))
+    return report
+
+
+def _direct_interpret(kernel: str, d: int):
+    """Call the kernel entry point in interpret mode, bypassing the plan."""
+    import jax
+
+    if kernel == "circ_conv":
+        from repro.kernels.circ_conv import kernel as ck
+
+        key = jax.random.PRNGKey(d)
+        a = jax.random.normal(key, (2, 2, d))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, d))
+        try:
+            return np.asarray(ck.circ_elem(a, b, mode="conv",
+                                           interpret=True))
+        except Exception:  # noqa: BLE001 — infeasible-for-real is fine
+            return None
+    if kernel == "unbind_classify":
+        from repro.kernels.unbind_classify import ops as uops
+
+        try:
+            k, blocks, n, c = 3, 2, 4, 5
+            key = jax.random.PRNGKey(d)
+            keys = jax.random.normal(key, (k, blocks, d))
+            x = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (n, blocks * d))
+            w = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (blocks * d, c)) * 0.1
+            b = jax.random.normal(jax.random.fold_in(key, 3), (c,)) * 0.1
+            return np.asarray(uops.unbind_classify(
+                {"w": w, "b": b}, keys, x, use_kernel=True))
+        except Exception:  # noqa: BLE001
+            return None
+    return None
+
+
+# -- NSF007: dispatch floors vs call sites ------------------------------------
+
+_DISPATCH_RE = re.compile(
+    r"""(?:active|select)\(\s*["'](?P<kernel>\w+)["'][^)]*dispatch=True""",
+    re.S)
+
+
+def check_dispatch_floors(src_root: str | None = None) -> AnalysisReport:
+    report = AnalysisReport()
+    root = src_root or _SRC_ROOT
+    sites: set[str] = set()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for name in filenames:
+            if not name.endswith(".py"):
+                continue
+            with open(os.path.join(dirpath, name)) as f:
+                for m in _DISPATCH_RE.finditer(f.read()):
+                    sites.add(m.group("kernel"))
+    for name, spec in KERNELS.items():
+        if spec.dispatch_min_size and name not in sites:
+            report.findings.append(finding(
+                "NSF007", f"registry/{name}",
+                f"declares dispatch_min_size={spec.dispatch_min_size} but "
+                "no dispatch=True call site exists in src/ — the perf "
+                "floor is dead policy"))
+        if not spec.dispatch_min_size and name in sites:
+            report.findings.append(finding(
+                "NSF007", f"registry/{name}",
+                "has dispatch=True call sites but no dispatch_min_size "
+                "floor — the flag is a no-op there"))
+    report.covered("dispatch_floors", len(KERNELS))
+    return report
+
+
+def check_registry(probe: bool = False) -> AnalysisReport:
+    """NSF006 static (+ empirical when ``probe``) and NSF007."""
+    report = check_static()
+    report.merge(check_dispatch_floors())
+    if probe:
+        report.merge(check_probes())
+    return report

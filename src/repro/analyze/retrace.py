@@ -1,0 +1,153 @@
+"""Retrace-hazard detection over bucketed schedules (NSF005).
+
+The serving stack's latency model assumes a *closed* jaxpr-signature
+set: every admissible admission-group size maps onto a compiled bucket,
+every bucket's specs differ from its siblings only in the batch axis,
+and tracing a stage twice yields the same jaxpr.  Break any of those and
+the engine recompiles mid-traffic — the classic tail-latency cliff no
+bench catches until production.  Three checks:
+
+* **bucket closure** — ``covering_bucket(n)`` must resolve inside the
+  declared bucket set for every group size up to the largest bucket;
+* **batch-axis invariance** — across buckets, each input-spec leaf may
+  vary only in axis 0 (and axis 0 must equal the bucket): a non-batch
+  axis derived from the group size means unboundedly many signatures;
+* **double-trace determinism** (``double_trace=True``, the CLI/test
+  mode) — each stage is traced twice and the jaxprs compared as strings;
+  any Python-side state leaking into the trace (a counter, a host RNG
+  draw baked in as a constant) shows up as a diff and would retrace
+  per admission group.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+
+from repro.analyze.findings import AnalysisReport, finding
+from repro.backend import registry
+
+
+def check_bucket_closure(sched, where) -> list:
+    out = []
+    buckets = tuple(sched.batch_buckets)
+    if not buckets:
+        return out
+    for n in range(1, max(buckets) + 1):
+        try:
+            b = sched.covering_bucket(n)
+        except Exception as e:  # noqa: BLE001 — any raise is the finding
+            out.append(finding(
+                "NSF005", where,
+                f"covering_bucket({n}) raises ({e}) — admission groups of "
+                f"{n} have no compiled bucket in {buckets}"))
+            continue
+        if b not in buckets:
+            out.append(finding(
+                "NSF005", where,
+                f"covering_bucket({n}) = {b} is not a declared bucket "
+                f"{buckets} — the group would trace a fresh signature"))
+    return out
+
+
+def check_bucket_specs(entry, cfg, variant, buckets, where) -> list:
+    """Batch-axis invariance of ``entry.input_specs`` across buckets."""
+    out = []
+    if not buckets:
+        return out
+    per_bucket = {}
+    for b in buckets:
+        specs = entry.input_specs(cfg, b, variant)
+        per_bucket[b] = {jax.tree_util.keystr(path): leaf
+                         for path, leaf in
+                         jax.tree_util.tree_flatten_with_path(specs)[0]}
+    keys = {b: set(m) for b, m in per_bucket.items()}
+    if len({frozenset(k) for k in keys.values()}) != 1:
+        out.append(finding(
+            "NSF005", where,
+            f"input-spec structure differs across buckets {buckets} — "
+            "the stage signature set is not closed"))
+        return out
+    b0 = buckets[0]
+    for key, leaf0 in per_bucket[b0].items():
+        for b in buckets:
+            leaf = per_bucket[b][key]
+            if leaf.dtype != leaf0.dtype:
+                out.append(finding(
+                    "NSF005", f"{where}{key}",
+                    f"dtype varies across buckets ({leaf0.dtype} at "
+                    f"bucket {b0}, {leaf.dtype} at {b})"))
+                break
+            if not leaf.shape or leaf.shape[0] != b:
+                out.append(finding(
+                    "NSF005", f"{where}{key}",
+                    f"leading axis {leaf.shape} at bucket {b} is not the "
+                    "bucket size — the batch axis contract is broken"))
+                break
+            if leaf.shape[1:] != leaf0.shape[1:]:
+                out.append(finding(
+                    "NSF005", f"{where}{key}",
+                    f"non-batch axes vary with the bucket "
+                    f"({leaf0.shape} at {b0} vs {leaf.shape} at {b}) — "
+                    "group size leaks into a non-batch dimension, so the "
+                    "signature set is unbounded"))
+                break
+    return out
+
+
+_ADDR = re.compile(r"0x[0-9a-f]+")
+
+
+def _fresh_trace(fn, consts, bufs) -> str:
+    """One genuine retrace: JAX caches traces by function identity +
+    avals, so tracing ``fn`` twice directly would compare a trace with
+    itself.  A throwaway wrapper defeats the cache; object addresses in
+    the rendering (e.g. ``custom_jvp_call``'s thunk params) are masked —
+    fresh-per-trace closures are expected, leaked *values* are not."""
+    text = str(jax.make_jaxpr(lambda c, b: fn(c, b))(consts, bufs))
+    return _ADDR.sub("0x", text)
+
+
+def check_trace_determinism(sched, where) -> list:
+    """Trace every stage twice; differing jaxprs = a retrace per group."""
+    out = []
+    if sched.input_specs is None or sched.consts_spec is None:
+        return out
+    plan = sched.plan or registry.get_plan()
+    bufs = sched.input_specs
+    with registry.use_plan(plan):
+        for stage in sched.stages:
+            first = _fresh_trace(stage.fn, sched.consts_spec, bufs)
+            second = _fresh_trace(stage.fn, sched.consts_spec, bufs)
+            if first != second:
+                out.append(finding(
+                    "NSF005", f"{where}/{stage.name}",
+                    f"stage {stage.name!r} traces differently on "
+                    "consecutive traces — Python-side state leaks into "
+                    "the jaxpr, so every admission group recompiles"))
+            bufs = jax.eval_shape(stage.fn, sched.consts_spec, bufs)
+    return out
+
+
+def check_retrace(sched, entry=None, cfg=None, variant: str | None = None,
+                  double_trace: bool = False) -> AnalysisReport:
+    """All retrace-hazard checks for one compiled schedule.
+
+    ``entry``/``cfg`` (a ``REASON_WORKLOADS`` entry and its config)
+    enable the cross-bucket spec check; ``double_trace`` adds the
+    determinism proof (CLI/tests — deploy()'s cheap preflight skips it).
+    """
+    report = AnalysisReport()
+    where = f"{sched.workload}/{sched.variant}"
+    report.extend(check_bucket_closure(sched, where))
+    report.covered("bucket_closure")
+    if entry is not None and cfg is not None and sched.batch_buckets:
+        report.extend(check_bucket_specs(
+            entry, cfg, variant or sched.variant,
+            tuple(sched.batch_buckets), where))
+        report.covered("bucket_specs")
+    if double_trace:
+        report.extend(check_trace_determinism(sched, where))
+        report.covered("double_trace")
+    return report

@@ -27,8 +27,10 @@ This registry makes lowering selection one explicit layer:
   forced-fallback / graceful-degradation runs;
 - kernel wrappers call :func:`active` at trace time with their call-site
   capabilities (block dim ``d``), and the plan picks the first feasible
-  lowering in the chain — so a non-pow2 ``d`` degrades to the reference
-  under *any* plan instead of crashing the Pallas circulant builder.
+  lowering in the chain — so a non-pow2 ``d`` degrades past the compiled
+  Pallas lowering (whose Mosaic tiling is only validated on pow2 block
+  dims >= 8) instead of crashing the circulant builder; the interpreter
+  serves any shape, bit-for-bit with the kernel semantics.
 
 ``serve.schedule.compile_schedule`` scopes every compiled stage to a plan
 (the plan active while the stage's jaxpr is traced is the plan that serves
@@ -143,15 +145,24 @@ def _pallas_family(kernel: str, *, epsilon: float, requires_pow2=False,
                    min_size=0, note="") -> tuple[Lowering, Lowering]:
     """The compiled/interpret pair every Pallas kernel registers: compiled
     on accelerators (TPU *and* GPU — the old ``!= "tpu"`` test wrongly
-    forced GPUs into the interpreter), interpret mode on CPU."""
+    forced GPUs into the interpreter), interpret mode on CPU.
+
+    Shape constraints (``requires_pow2`` / ``min_size``) gate only the
+    *compiled* lowering: Mosaic's tiling for these kernels is validated on
+    pow2 block dims, so off-shape call sites degrade to the reference on
+    accelerators.  The interpreter executes the same kernel semantics in
+    plain XLA and is conformant at any shape — the registry's earlier
+    claim that the circulant builder itself needs pow2 was disproven by
+    the kernel-vs-registry consistency check (NSF006): interpret output is
+    bit-identical to the gather reference at non-pow2 / small block dims.
+    """
     return (
         Lowering(kernel=kernel, name="pallas", platforms=("tpu", "gpu"),
                  interpret=False, equivalence="epsilon", epsilon=epsilon,
                  requires_pow2=requires_pow2, min_size=min_size, note=note),
         Lowering(kernel=kernel, name="interpret", platforms=("cpu",),
                  interpret=True, equivalence="epsilon", epsilon=epsilon,
-                 requires_pow2=requires_pow2, min_size=min_size,
-                 note="Pallas interpreter (CPU correctness path)"),
+                 note="Pallas interpreter (CPU correctness path; any shape)"),
     )
 
 
@@ -162,7 +173,7 @@ KERNELS: dict[str, KernelSpec] = {
                  "circulant-matmul Pallas kernel",
         lowerings=_pallas_family(
             "circ_conv", epsilon=1e-3, requires_pow2=True, min_size=8,
-            note="circulant builder assumes pow2 block dim >= 8") + (
+            note="Mosaic tiling validated on pow2 block dims >= 8") + (
             Lowering(kernel="circ_conv", name="xla", platforms=PLATFORMS,
                      note="exact gather reference (vsa.ops.circ_conv_ref)"),
         ),
@@ -196,7 +207,7 @@ KERNELS: dict[str, KernelSpec] = {
                  "head; one launch for the symbolic tail of the pipeline",
         lowerings=_pallas_family(
             "unbind_classify", epsilon=1e-3, requires_pow2=True, min_size=8,
-            note="circulant builder assumes pow2 block dim >= 8") + (
+            note="Mosaic tiling validated on pow2 block dims >= 8") + (
             Lowering(kernel="unbind_classify", name="xla", platforms=PLATFORMS,
                      note="exact gather unbind + dense reference"),
         ),

@@ -1,10 +1,10 @@
 """Jit'd public wrappers for the circ_conv kernel with shape handling.
 
 Dispatch policy comes from the active :class:`~repro.backend.registry.
-LoweringPlan` (``repro.backend.registry``): compiled Pallas on TPU/GPU,
-interpret mode on CPU, and the exact XLA gather reference whenever the
-plan forces ``xla`` or the block dim fails the kernel's pow2/size
-capability predicate.
+LoweringPlan` (``repro.backend.registry``): compiled Pallas on TPU/GPU
+(pow2 block dims >= 8 — off-shape call sites degrade past it), interpret
+mode on CPU at any shape, and the exact XLA gather reference whenever the
+plan forces ``xla``.
 """
 
 from __future__ import annotations

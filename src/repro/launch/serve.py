@@ -122,9 +122,12 @@ def serve_frontdoor(args):
                       max_new_tokens=args.max_new,
                       replicas=args.replicas if args.replicas != 1 else None,
                       tp=args.tp if args.tp != 1 else None),
-        options=options)
+        options=options, preflight=args.preflight)
     for line in deployment.summary().splitlines():
         print(f"[deploy] {line}")
+    if deployment.analysis is not None:
+        for f in deployment.analysis.findings:
+            print(f"[preflight] {f.render()}")
     deployment.warmup()  # compile every serving shape before taking latencies
     print(f"[frontdoor] {len(models)} models x {args.requests} requests, "
           f"poisson {args.rate:.1f} req/s each, deadline "
@@ -222,6 +225,11 @@ def main():
     ap.add_argument("--tp", type=int, default=1,
                     help="LM tensor-parallel degree (params sharded over a "
                          "1 x tp host mesh via distributed.sharding_rules)")
+    ap.add_argument("--preflight", default="error",
+                    choices=("error", "warn", "off"),
+                    help="static-analysis gate before serving: fail the "
+                         "deploy on error findings (default), report only, "
+                         "or skip")
     args = ap.parse_args()
 
     if args.replicas < 1 or args.tp < 1:

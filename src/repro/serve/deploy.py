@@ -110,6 +110,10 @@ class Deployment:
     # resolved replica count (defaults to 1 when absent)
     mesh: dict = dataclasses.field(default_factory=dict)
     replicas: dict = dataclasses.field(default_factory=dict)
+    # the preflight AnalysisReport deploy() ran over the compiled
+    # schedules + serving sources (None when preflight="off" or for
+    # hand-built Deployments)
+    analysis: Any = None
 
     def _pool(self, m: str):
         """The model's ReplicaPool, or None when served by a bare engine."""
@@ -197,6 +201,10 @@ class Deployment:
                 "replicas": self.replicas.get(m, 1),
                 "per_replica": pool.per_replica() if pool else None,
             }
+        # the preflight verdict rides alongside the per-model records so
+        # benchmark JSON carries the analysis that cleared the deployment
+        out["analysis"] = (self.analysis.to_dict()
+                           if self.analysis is not None else None)
         return out
 
     def summary(self) -> str:
@@ -205,6 +213,8 @@ class Deployment:
         backend = f"backend={self.backend.tag()}" if self.backend else \
             "backend=n/a"
         for m, rec in self.report().items():
+            if m == "analysis":  # deployment-wide record, not a model
+                continue
             design = self.designs[m]
             if design is not None:
                 dse = (f"dse={design.tag()} "
@@ -222,6 +232,11 @@ class Deployment:
                     f"r{r['replica']}:{r['groups']}g/{r['requests']}req"
                     f"/{r['share']:.0%}" for r in rec["per_replica"])
                 lines.append(f"  {m} replicas: {split}")
+        if self.analysis is not None:
+            verdict = "PASS" if self.analysis.ok else "FAIL"
+            lines.append(f"preflight {verdict}: "
+                         f"{len(self.analysis.errors)} error(s), "
+                         f"{len(self.analysis.warnings)} warning(s)")
         return "\n".join(lines)
 
     # -- synthetic traffic + warmup (launcher / benchmark helpers) ----------
@@ -326,6 +341,7 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
            budget: Budget | None = None, *, seed: int = 0,
            options: Mapping[str, Mapping[str, Any]] | None = None,
            backend: str | backend_registry.LoweringPlan | None = None,
+           preflight: str = "error",
            clock: Callable[[], float] = time.perf_counter,
            sleep: Callable[[float], None] = time.sleep) -> Deployment:
     """Deploy a mixed set of workloads behind one front-door.
@@ -350,6 +366,14 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     :class:`~repro.backend.registry.LoweringPlan`.  Negotiation happens
     exactly once here; every NSAI schedule compiles under the resulting
     plan and ``Deployment.report()`` records the per-kernel choices.
+
+    ``preflight``: the static-analysis gate over what was just compiled —
+    ``"error"`` (default) runs the cheap preflight tier (per-stage jaxpr
+    checks, retrace hazards, registry consistency, the memoized serving
+    lint) and raises :class:`~repro.analyze.findings.PreflightError` when
+    error-severity findings survive; ``"warn"`` runs it but only records
+    the report; ``"off"`` skips it.  Either way the report lands in
+    ``Deployment.report()["analysis"]``.
     """
     import jax
 
@@ -366,6 +390,9 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
     models = rt.resolve_models("frontdoor", workloads)
     if not models:
         raise ValueError("deploy needs at least one workload")
+    if preflight not in ("error", "warn", "off"):
+        raise ValueError(f"preflight must be 'error', 'warn' or 'off', "
+                         f"got {preflight!r}")
     if isinstance(backend, backend_registry.LoweringPlan):
         lowering_plan = backend
     else:
@@ -464,6 +491,30 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
         engines[m], configs[m] = eng, cfg
         mesh[m], replicas[m] = point, r
 
+    # preflight gate: the cheap analysis tier over exactly what was just
+    # compiled — the schedules the engines will serve, under the one
+    # negotiated plan — plus the serving-source lint (mtime-memoized, so
+    # repeat deploys pay ~nothing) and the static registry checks.  No
+    # kernel probes, no double-trace: those are the CLI/CI tier.
+    analysis = None
+    if preflight != "off":
+        from repro.analyze.preflight import preflight as run_preflight
+        from repro.serve.replica import ReplicaPool
+
+        subjects = []
+        for m in models:
+            if classes[m] != "reason":
+                continue
+            eng = engines[m]
+            base = eng.replicas[0] if isinstance(eng, ReplicaPool) else eng
+            subjects.append((base.schedules[variants[m]], configs[m],
+                             cbase.REASON_WORKLOADS[m], variants[m]))
+        analysis = run_preflight(subjects)
+        if preflight == "error" and not analysis.ok:
+            from repro.analyze.findings import PreflightError
+
+            raise PreflightError(analysis)
+
     door = FrontDoor(engines,
                      FrontDoorConfig(deadline_s=traffic.deadline_s,
                                      poll_s=traffic.poll_s),
@@ -474,4 +525,4 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
                       seed=seed, backend=lowering_plan,
                       options={m: dict(options.get(m, {})) for m in models
                                if options.get(m)},
-                      mesh=mesh, replicas=replicas)
+                      mesh=mesh, replicas=replicas, analysis=analysis)

@@ -140,11 +140,14 @@ class Engine:
     EngineProtocol` (``configs.base.lm_engine`` binds it for you).  ``clock``
     is the timestamp source for :class:`~repro.serve.runtime.GroupRecord`
     stamps (the front-door injects its own so queue/service latencies share
-    one origin).
+    one origin); ``wall`` is the real wall-clock the throughput accounting
+    reads — separate so a virtual front-door clock never distorts measured
+    rates, injectable so the accounting itself is testable.
     """
 
     def __init__(self, decode_step: Callable, init_caches: Callable,
-                 cfg: ServeConfig, params=None, clock=time.perf_counter):
+                 cfg: ServeConfig, params=None, clock=time.perf_counter,
+                 wall=time.perf_counter):
         # configs.base.serve_fns tags init_caches for archs whose cumulative
         # recurrent state would be silently corrupted by bucketed pad steps —
         # honor the tag so no caller has to remember to set the flag
@@ -155,6 +158,7 @@ class Engine:
         self.init_caches = init_caches
         self.params = params
         self.clock = clock
+        self.wall = wall
         self._raw_decode_step = decode_step
         # batch axis per cache leaf: the one axis whose size tracks `batch`
         # (probed at 2 vs 1 so any max_slots >= 1 works)
@@ -441,7 +445,7 @@ class Engine:
             self._warmed.add("decode")
             self._cold_run = True
         state, slots = self._state, self._slots
-        t0 = time.perf_counter()
+        t0 = self.wall()
         (caches, tok, pos, active, budget, gen, toks, valid) = \
             self._decode_block(
                 self.params, self._caches, jnp.asarray(state["tok"]),
@@ -450,7 +454,7 @@ class Engine:
                 jnp.asarray(state["gen"]))
         self._caches = caches
         toks, valid = np.asarray(toks), np.asarray(valid)
-        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_time_s"] += self.wall() - t0
         self.stats["decode_blocks"] += 1
         self.stats["slot_steps"] += toks.size
         self.stats["active_slot_steps"] += int(valid.sum())
@@ -575,12 +579,12 @@ class Engine:
                              "(call drain_all first)")
         self._cold_run = False
         tok0 = self.stats["tokens"]
-        t_start = time.perf_counter()
+        t_start = self.wall()
         cap = self.admission_cap
         for i in range(0, len(reqs), cap):
             self.submit(reqs[i: i + cap])
         results = self.drain_all()
-        dt = time.perf_counter() - t_start
+        dt = self.wall() - t_start
         toks = self.stats["tokens"] - tok0
         self.stats["wall_time_s"] += dt
         kind = "warmup" if self._cold_run else "measured"

@@ -174,11 +174,15 @@ class ReasonEngine:
     ``run(requests)`` feeds every request batch through the schedule's
     stages.  ``clock`` is the timestamp source for
     :class:`~repro.serve.runtime.GroupRecord`\\ s (the front-door injects
-    its own so queue/service latencies share one origin).
+    its own so queue/service latencies share one origin); ``wall`` is the
+    real wall-clock the throughput accounting reads — separate so a
+    virtual front-door clock never distorts measured rates, injectable so
+    the accounting itself is testable.
     """
 
     def __init__(self, schedules: StagedSchedule | Mapping[str, StagedSchedule],
-                 cfg: ReasonConfig, consts=None, clock=time.perf_counter):
+                 cfg: ReasonConfig, consts=None, clock=time.perf_counter,
+                 wall=time.perf_counter):
         if isinstance(schedules, StagedSchedule):
             schedules = {schedules.variant: schedules}
         if not schedules:
@@ -203,6 +207,7 @@ class ReasonEngine:
         self.cfg = cfg
         self.consts = consts
         self.clock = clock
+        self.wall = wall
         self.stats = _fresh_stats()
         self.runs: list[dict] = []    # per-run records from run()
         self._inflight: collections.deque = collections.deque()
@@ -284,7 +289,7 @@ class ReasonEngine:
         rec.done_t = self.clock()
         self.stats["requests"] += len(batch)
         if not self._in_run and t0 is not None:
-            now = time.perf_counter()
+            now = self.wall()
             kind = "warmup" if cold else "measured"
             self.stats[kind]["requests"] += len(batch)
             self.stats[kind]["work"] += len(batch)
@@ -369,7 +374,7 @@ class ReasonEngine:
                           bucket=bucket, size=len(group))
         self._next_index += 1
         stage_time = self.stats["stage_time_s"].setdefault(variant, {})
-        t0 = time.perf_counter()
+        t0 = self.wall()
         # dispatch the whole pipeline asynchronously FIRST; any blocking
         # (sequential timing, window trimming) happens after, so group i+1
         # is always on the device before the engine waits on group i
@@ -380,13 +385,13 @@ class ReasonEngine:
             self.stats["fused_groups"] += 1
         else:
             for si, fn in enumerate(sched.jit_stages):
-                ts = time.perf_counter()
+                ts = self.wall()
                 bufs = fn(consts, bufs)
                 self.stats["dispatches"] += 1
                 if sequential:
                     jax.block_until_ready(bufs)
                     name = sched.stages[si].name
-                    dt = time.perf_counter() - ts
+                    dt = self.wall() - ts
                     stage_time[name] = stage_time.get(name, 0.0) + dt
                     self._run_stage_time[name] = \
                         self._run_stage_time.get(name, 0.0) + dt
@@ -482,7 +487,7 @@ class ReasonEngine:
         self._cold_run = False
         self._run_stage_time = {}
         self._in_run = True   # account at run level, not per group
-        t_start = time.perf_counter()
+        t_start = self.wall()
         try:
             for batch in self._batches(requests):
                 # staging the next group (incl. any lazy per-request
@@ -492,7 +497,7 @@ class ReasonEngine:
             results = self.drain_all()
         finally:
             self._in_run = False
-        dt = time.perf_counter() - t_start
+        dt = self.wall() - t_start
         kind = "warmup" if self._cold_run else "measured"
         self.stats[kind]["requests"] += len(results)
         self.stats[kind]["work"] += len(results)

@@ -118,6 +118,13 @@ class ReplicaPool:
             r.clock = clock
 
     @property
+    def wall(self) -> Callable[[], float]:
+        """The replicas' real wall-clock (throughput accounting source) —
+        engines predating the ``wall`` parameter fall back to
+        ``time.perf_counter``."""
+        return getattr(self.replicas[0], "wall", time.perf_counter)
+
+    @property
     def admission_cap(self) -> int:
         """Largest group ``submit`` accepts — every replica's cap."""
         return self.replicas[0].admission_cap
@@ -180,7 +187,7 @@ class ReplicaPool:
         """
         import itertools
 
-        t0 = time.perf_counter()
+        t0 = self.wall()
         it = iter(requests)
         n = 0
         while True:
@@ -190,7 +197,7 @@ class ReplicaPool:
             self.submit(group, **kw)
             n += len(group)
         results = self.drain_all()
-        dt = time.perf_counter() - t0
+        dt = self.wall() - t0
         self.runs.append({"requests": len(results), "wall_time_s": dt,
                           "replicas": len(self.replicas)})
         return results

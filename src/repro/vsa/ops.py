@@ -81,10 +81,11 @@ def dispatch_path(d: int) -> str:
     """Which implementation ``bind``/``unbind`` route to for block dim ``d``
     under the active :class:`~repro.backend.registry.LoweringPlan`.
 
-    "kernel" = a Pallas lowering of ``circ_conv`` (power-of-two d at or
-    above the registry's ``dispatch_min_size``); "gather" = the exact XLA
-    gather reference. Exposed so the kernel-conformance tests can assert
-    the routing, not just the numerics.
+    "kernel" = a Pallas lowering of ``circ_conv`` (feasible at the
+    call-site shape — the compiled lowering wants pow2 d, the interpreter
+    takes any — and at or above the registry's ``dispatch_min_size``);
+    "gather" = the exact XLA gather reference. Exposed so the
+    kernel-conformance tests can assert the routing, not just the numerics.
     """
     low = registry.active("circ_conv", size=d, dispatch=True)
     return "gather" if low.is_ref else "kernel"

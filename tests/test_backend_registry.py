@@ -116,10 +116,14 @@ def test_override_rejects_unknown_names(bad):
 
 
 def test_forced_nonref_keeps_ref_fallback():
-    """A forced Pallas lowering still degrades to the exact reference when
-    the call-site shape is infeasible (non-pow2 d must never crash)."""
-    plan = registry.negotiate(platform="cpu", override="interpret")
+    """A forced compiled-Pallas lowering still degrades to the exact
+    reference when the call-site shape is infeasible (non-pow2 d must
+    never crash the Mosaic build); the forced *interpreter* carries no
+    shape predicate and serves the call itself."""
+    plan = registry.negotiate(platform="cpu", override="pallas")
     assert plan.select("circ_conv", size=33).is_ref
+    plan = registry.negotiate(platform="cpu", override="interpret")
+    assert plan.select("circ_conv", size=33).name == "interpret"
 
 
 # -- active-plan scoping -----------------------------------------------------
