@@ -63,6 +63,7 @@ def bench_mixed(models, requests: int = 12, rate_rps: float = 4.0,
         unit = report.work_unit(m)
         q = report.percentiles("queue_s", m)
         s = report.percentiles("service_s", m)
+        t = report.percentiles("total_s", m)
         pre = f"serve/mixed/{m}"
         rows += [
             (f"{pre}/served", len(report.results[m]),
@@ -73,10 +74,16 @@ def bench_mixed(models, requests: int = 12, rate_rps: float = 4.0,
              f"arrival->dispatch {mesh_tag}"),
             (f"{pre}/queue_p95_ms", q["p95"] * 1e3,
              f"arrival->dispatch {mesh_tag}"),
+            (f"{pre}/queue_p99_ms", q["p99"] * 1e3,
+             f"arrival->dispatch {mesh_tag}"),
             (f"{pre}/service_p50_ms", s["p50"] * 1e3,
              f"dispatch->done {mesh_tag}"),
             (f"{pre}/service_p95_ms", s["p95"] * 1e3,
              f"dispatch->done {mesh_tag}"),
+            (f"{pre}/service_p99_ms", s["p99"] * 1e3,
+             f"dispatch->done {mesh_tag}"),
+            (f"{pre}/total_p99_ms", t["p99"] * 1e3,
+             f"arrival->done {mesh_tag}"),
         ]
     return rows, report, deployment
 
@@ -137,8 +144,9 @@ def main():
                       f"{vals[f'serve/mixed/{m}/served']:.0f} of "
                       f"{args.requests} requests", file=sys.stderr)
                 return 1
-            for p in ("queue_p50_ms", "queue_p95_ms",
-                      "service_p50_ms", "service_p95_ms"):
+            for p in ("queue_p50_ms", "queue_p95_ms", "queue_p99_ms",
+                      "service_p50_ms", "service_p95_ms", "service_p99_ms",
+                      "total_p99_ms"):
                 v = vals[f"serve/mixed/{m}/{p}"]
                 if not math.isfinite(v):
                     print(f"FAIL: {m} {p} is not finite ({v})",

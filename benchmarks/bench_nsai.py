@@ -384,8 +384,10 @@ def bench_load_sweep(model: str, problems: int = 24, batch_size: int = 4,
                  f"served={len(rep.latencies)} groups={hist} {dse_tag}"),
                 (f"{pre}/queue_p50_ms", q["p50"] * 1e3, "arrival->dispatch"),
                 (f"{pre}/queue_p95_ms", q["p95"] * 1e3, "arrival->dispatch"),
+                (f"{pre}/queue_p99_ms", q["p99"] * 1e3, "arrival->dispatch"),
                 (f"{pre}/service_p50_ms", s["p50"] * 1e3, "dispatch->done"),
                 (f"{pre}/service_p95_ms", s["p95"] * 1e3, "dispatch->done"),
+                (f"{pre}/service_p99_ms", s["p99"] * 1e3, "dispatch->done"),
                 (f"{pre}/total_p99_ms", t["p99"] * 1e3, "arrival->done"),
             ]
     return _stamp_backend(rows)
@@ -582,8 +584,9 @@ def main():
         if not args.no_sweep:
             import math
 
-            for p in ("queue_p50_ms", "queue_p95_ms",
-                      "service_p50_ms", "service_p95_ms"):
+            for p in ("queue_p50_ms", "queue_p95_ms", "queue_p99_ms",
+                      "service_p50_ms", "service_p95_ms",
+                      "service_p99_ms", "total_p99_ms"):
                 vals = [v for n, v, _ in rows if n.endswith(p)]
                 # NaN percentiles mean the front-door served nothing —
                 # row names alone would pass vacuously
@@ -591,8 +594,8 @@ def main():
                     print(f"FAIL: load sweep has no finite {p} rows "
                           f"(got {vals})", file=sys.stderr)
                     return 1
-            print(f"latency sweep gate OK ({args.model}): finite p50/p95 "
-                  f"queue+service rows present")
+            print(f"latency sweep gate OK ({args.model}): finite "
+                  f"p50/p95/p99 queue+service rows present")
     return 0
 
 

@@ -1,0 +1,330 @@
+"""Bursty soak of the overload control plane on the simulated engine.
+
+Replays a multi-hour diurnal arrival trace (inhomogeneous Poisson with
+superimposed burst windows — ``repro.serve.sim.bursty_times``) through a
+``FrontDoor`` + ``OverloadController`` over the deterministic
+:class:`~repro.serve.sim.SimEngine`, entirely on a **virtual clock**: a
+100k-request, ~4-virtual-hour soak runs in seconds of host time and two
+runs of the same trace are bit-identical.
+
+Two scenarios soak in one invocation:
+
+- ``capacity`` — offered load stays at/under the engine's advertised
+  capacity (``ServiceModel.capacity_rps``) through the diurnal peak and
+  a mild burst.  Gate: queues stay bounded, nothing sheds, every
+  targeted class meets its p99 SLO.
+- ``overload`` — burst windows drive offered load to ~2x advertised
+  capacity.  Gate: the interactive SLO *still* holds, shedding engages
+  but is confined to the lower priority classes, and the pending queue
+  never outgrows its depth bound.
+
+Both scenarios also gate exact accounting (``offered == admitted +
+shed``, no request unaccounted) and — under ``--check`` — run twice and
+require the full serialized reports (every latency, shed record and
+controller decision) to be bit-identical.
+
+Run:  PYTHONPATH=src python benchmarks/bench_soak.py
+          [--requests 100000] [--queue-depth 64]
+          [--shed-policy lowest-priority] [--seed 0]
+          [--json out.json] [--check]
+
+The ``--json`` artifact carries per-phase (diurnal vs each burst
+window) per-class SLO attainment and shed counts — the CI soak leg
+uploads it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+class VirtualClock:
+    """Deterministic clock + sleep pair (the soak never sleeps for real)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float):
+        assert dt >= 0
+        self.t += dt
+
+
+def _scenarios(requests: int):
+    """The two soak scenarios over one slow service model.
+
+    ``ServiceModel(base_s=0.5, per_item_s=0.05)`` advertises ~8.9 req/s
+    at the cap-8 bucket, so 100k requests is a ~4-virtual-hour trace —
+    several diurnal periods with burst windows placed mid-trace.
+    """
+    from repro.serve import sim
+
+    svc = sim.ServiceModel(base_s=0.5, per_item_s=0.05)
+    cap = 8
+    advertised = svc.capacity_rps(cap)
+    # rough trace length at the quiet base rate, for placing bursts
+    mk = lambda base, mult: {
+        "base_rps": base,
+        "amp": 0.3,
+        "period_s": 3600.0,
+        "bursts": [
+            sim.Burst(t0_s=0.30 * requests / base,
+                      dur_s=0.06 * requests / base, mult=mult),
+            sim.Burst(t0_s=0.70 * requests / base,
+                      dur_s=0.06 * requests / base, mult=mult),
+        ],
+    }
+    return {
+        # diurnal peak ~0.85x advertised, bursts to ~0.95x: the door
+        # must hold every SLO with zero shedding
+        "capacity": dict(mk(0.65 * advertised, 1.25), svc=svc, cap=cap),
+        # bursts to ~2x advertised: shed low classes, hold interactive
+        "overload": dict(mk(0.65 * advertised, 2.0 / 0.65), svc=svc,
+                         cap=cap),
+    }
+
+
+def _phase_of(t: float, bursts) -> str:
+    for i, b in enumerate(bursts):
+        if b.t0_s <= t < b.t0_s + b.dur_s:
+            return f"burst{i + 1}"
+    return "diurnal"
+
+
+def run_soak(scenario: str, requests: int, queue_depth: int,
+             shed_policy: str, slo_ms: float, mix: dict[str, float],
+             seed: int):
+    """One soak run -> (FrontDoorReport, scenario params, phase table)."""
+    from repro.serve import frontdoor as fd
+    from repro.serve import sim
+    from repro.serve import slo as slo_mod
+    from repro.serve.control import ControlConfig, OverloadController
+
+    params = _scenarios(requests)[scenario]
+    vc = VirtualClock()
+    # shallow in-flight window: the backlog belongs in the *bounded*
+    # front-door queue (where it sheds), not resident in the engine
+    eng = sim.SimEngine(vc, vc.sleep, cap=params["cap"],
+                        service=params["svc"], max_inflight=2)
+    ctl = OverloadController(
+        slo_mod.slo_targets(slo_ms),
+        ControlConfig(tick_s=2.0, queue_depth=queue_depth,
+                      shed_policy=shed_policy))
+    door = fd.FrontDoor({"sim": eng},
+                        fd.FrontDoorConfig(deadline_s=0.5, poll_s=0.05),
+                        clock=vc, sleep=vc.sleep, controller=ctl)
+    times = sim.bursty_times(requests, params["base_rps"],
+                             amp=params["amp"],
+                             period_s=params["period_s"],
+                             bursts=params["bursts"], seed=seed)
+    reqs = sim.sim_requests(requests, mix=mix, seed=seed + 1)
+    report = door.serve(fd.trace_arrivals("sim", times, reqs))
+
+    # per-phase per-class table for the artifact
+    phases: dict[str, dict] = {}
+    for lat in report.latencies:
+        ph = phases.setdefault(_phase_of(lat.arrival_s, params["bursts"]),
+                               {"latencies": [], "shed": {}})
+        ph["latencies"].append(lat)
+    for s in report.shed:
+        ph = phases.setdefault(_phase_of(s.arrival_s, params["bursts"]),
+                               {"latencies": [], "shed": {}})
+        ph["shed"][s.priority] = ph["shed"].get(s.priority, 0) + 1
+    table = {}
+    for name in sorted(phases):
+        ph = phases[name]
+        att = slo_mod.attainment(ph["latencies"], report.slo)
+        table[name] = {
+            "served": len(ph["latencies"]),
+            "shed": ph["shed"],
+            "offered": len(ph["latencies"]) + sum(ph["shed"].values()),
+            "classes": {p: {k: row[k] for k in
+                            ("n", "met", "attainment", "target_ms", "ok")}
+                        for p, row in att.items()},
+        }
+    return report, params, table
+
+
+def _digest(report) -> str:
+    """Bit-exact fingerprint of everything the soak decided: latencies,
+    shed records and controller decisions (repr keeps full float
+    precision — two runs match only if every timestamp matches)."""
+    h = hashlib.sha256()
+    for lat in report.latencies:
+        h.update(repr((lat.uid, lat.priority, lat.arrival_s,
+                       lat.dispatch_s, lat.done_s, lat.bucket,
+                       lat.close_reason)).encode())
+    for s in report.shed:
+        h.update(repr((s.uid, s.priority, s.arrival_s, s.shed_s,
+                       s.reason)).encode())
+    for d in report.decisions:
+        h.update(repr((d.t, d.action, d.deadline_s, d.cap,
+                       d.p99_ms)).encode())
+    return h.hexdigest()
+
+
+def soak_rows(scenario: str, report, table, requests: int) -> list:
+    from repro.serve import slo as slo_mod
+
+    pre = f"serve/soak/{scenario}"
+    t = report.percentiles("total_s", "sim")
+    rows = [
+        (f"{pre}/offered", report.offered("sim"),
+         f"requests={requests} virtual_s={report.wall_time_s:.0f}"),
+        (f"{pre}/served", len(report.latencies), "admitted and completed"),
+        (f"{pre}/shed", len(report.shed),
+         " ".join(f"{p}:{c}" for p, c in
+                  report.shed_counts("sim").items()) or "none"),
+        (f"{pre}/shed_rate", report.shed_rate("sim"),
+         "shed / offered"),
+        (f"{pre}/queue_depth_max", report.queue_depth_max["sim"],
+         "pending high-water mark"),
+        (f"{pre}/total_p50_ms", t["p50"] * 1e3, "arrival->done"),
+        (f"{pre}/total_p95_ms", t["p95"] * 1e3, "arrival->done"),
+        (f"{pre}/total_p99_ms", t["p99"] * 1e3, "arrival->done"),
+        (f"{pre}/decisions", len(report.decisions),
+         "non-hold controller actions"),
+    ]
+    att = report.slo_attainment("sim")
+    for p in slo_mod.PRIORITIES:
+        row = att.get(p)
+        if row is None or not row["n"]:
+            continue
+        tgt = ("best-effort" if row["target_ms"] is None
+               else f"target={row['target_ms']:g}ms")
+        rows.append((f"{pre}/{p}/attainment", row["attainment"],
+                     f"{tgt} n={row['n']} phases="
+                     + "/".join(sorted(table))))
+    return rows
+
+
+def check_scenario(scenario: str, report, requests: int,
+                   queue_depth: int) -> list[str]:
+    """The soak gate for one scenario; returns failure strings."""
+    fails = []
+    att = report.slo_attainment("sim")
+    counts = report.shed_counts("sim")
+    if report.offered("sim") != requests:
+        fails.append(f"{scenario}: offered {report.offered('sim')} != "
+                     f"{requests} requests fed")
+    if len(report.latencies) + len(report.shed) != requests:
+        fails.append(f"{scenario}: admitted {len(report.latencies)} + "
+                     f"shed {len(report.shed)} != offered {requests} "
+                     "(a request went unaccounted)")
+    if report.queue_depth_max["sim"] > queue_depth:
+        fails.append(f"{scenario}: pending queue grew to "
+                     f"{report.queue_depth_max['sim']} > bound "
+                     f"{queue_depth}")
+    if att["interactive"]["ok"] is not True:
+        fails.append(f"{scenario}: interactive SLO missed — attainment "
+                     f"{att['interactive']['attainment']:.4f} @ "
+                     f"{att['interactive']['target_ms']:g}ms")
+    if scenario == "capacity":
+        if report.shed:
+            fails.append(f"capacity: shed {len(report.shed)} requests "
+                         "at/under advertised capacity")
+        for p, row in att.items():
+            if row["ok"] is False:
+                fails.append(f"capacity: {p} SLO missed — attainment "
+                             f"{row['attainment']:.4f}")
+    else:  # overload
+        if not report.shed:
+            fails.append("overload: 2x bursts shed nothing — the bound "
+                         "never engaged")
+        if "interactive" in counts:
+            fails.append(f"overload: shed {counts['interactive']} "
+                         "interactive requests (must be confined to "
+                         "lower classes)")
+    return fails
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100_000,
+                    help="arrivals per scenario (default 100k, ~4 "
+                         "virtual hours)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="pending-queue depth bound (shed beyond it)")
+    ap.add_argument("--shed-policy", default="lowest-priority")
+    ap.add_argument("--slo-ms", type=float, default=4000.0,
+                    help="interactive total-p99 target (standard gets "
+                         "the conventional 4x)")
+    ap.add_argument("--mix", default="interactive=0.3,standard=0.5,"
+                                     "batch=0.2")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    help="write rows + per-phase SLO/shed artifact")
+    ap.add_argument("--check", action="store_true",
+                    help="run each scenario twice; exit 1 unless the "
+                         "soak gate and the bit-identical gate hold")
+    args = ap.parse_args()
+
+    from repro.serve.control import validate_shed_policy
+    from repro.serve.slo import validate_priority
+
+    validate_shed_policy(args.shed_policy)
+    mix = {}
+    for part in args.mix.split(","):
+        name, _, w = part.partition("=")
+        mix[validate_priority(name.strip())] = float(w)
+
+    rows, artifact, fails = [], {}, []
+    for scenario in ("capacity", "overload"):
+        report, params, table = run_soak(
+            scenario, args.requests, args.queue_depth, args.shed_policy,
+            args.slo_ms, mix, args.seed)
+        digest = _digest(report)
+        rows += soak_rows(scenario, report, table, args.requests)
+        artifact[scenario] = {
+            "requests": args.requests,
+            "base_rps": params["base_rps"],
+            "bursts": [vars(b) for b in params["bursts"]],
+            "queue_depth": args.queue_depth,
+            "shed_policy": args.shed_policy,
+            "slo_ms": args.slo_ms,
+            "virtual_s": report.wall_time_s,
+            "digest": digest,
+            "phases": table,
+        }
+        for line in report.summary().splitlines():
+            print(f"# {scenario}: {line}", file=sys.stderr)
+        if args.check:
+            fails += check_scenario(scenario, report, args.requests,
+                                    args.queue_depth)
+            rerun, _, _ = run_soak(
+                scenario, args.requests, args.queue_depth,
+                args.shed_policy, args.slo_ms, mix, args.seed)
+            if _digest(rerun) != digest:
+                fails.append(f"{scenario}: two runs of the same trace "
+                             "are not bit-identical")
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            {"rows": [{"name": n, "value": v, "derived": str(x)}
+                      for n, v, x in rows],
+             "scenarios": artifact}, indent=1))
+    if args.check:
+        if fails:
+            for f in fails:
+                print(f"FAIL: {f}", file=sys.stderr)
+            return 1
+        print(f"soak gate OK: {args.requests} requests/scenario — "
+              "bounded queues, SLO held at capacity, interactive held "
+              "at 2x overload, accounting exact, two runs bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

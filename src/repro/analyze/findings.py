@@ -58,6 +58,11 @@ RULES: dict[str, tuple[str, str]] = {
     "NSF104": ("error",
                "EngineProtocol implementation never stamps dispatch_t, or "
                "blocks before stamping it in submit()"),
+    "NSF105": ("error",
+               "overload-control hygiene: a queue append in serve/ not "
+               "dominated by a bound check in the same function, or any "
+               "time.* reference in a control-plane module (control/slo/"
+               "sim must take explicit clocks)"),
 }
 
 

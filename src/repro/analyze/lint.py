@@ -27,6 +27,18 @@ These are rules a generic linter cannot know:
   attribution silently charges the wait to the wrong side.
   ``typing.Protocol`` classes are declarations, not implementations, and
   are skipped.
+* **NSF105** — overload-control hygiene, two halves.  (a) Every append
+  to a queue-like container (name containing queue/pending/inflight/
+  backlog/waiting, or the LM engine's ``_open``) in ``serve/`` must be
+  *dominated by a bound check*: the same function must compare a
+  ``len(...)`` or a cap/depth/bound/limit/max-named value — an
+  unchecked queue append is exactly the unbounded-growth failure mode
+  the overload control plane exists to prevent.  (b) Control-plane
+  modules (``control.py`` / ``slo.py`` / ``sim.py``) may not reference
+  ``time`` at all — not even as a parameter default, which NSF101
+  permits elsewhere: policy decisions and the soak bench must be
+  bit-deterministic under the injected virtual clock, so these modules
+  take explicit ``clock``/``now`` arguments or no time source at all.
 
 Only :data:`SERVE_RULES` apply under ``src/repro/serve``; elsewhere in
 the tree only the scope-safe NSF102 runs (training code legitimately
@@ -51,8 +63,16 @@ _HOST_CALLS = {("np", "asarray"), ("np", "array"),
                ("jax", "device_get")}
 _BLOCKING_ATTRS = {"block_until_ready", "drain_all", "drain_ready",
                    "_drain_one", "result", "join", "sleep"}
+# NSF105 (a): queue-like container names whose append sites need a bound
+# check, and the value names a Compare counts as a bound
+_QUEUE_NAME_HINTS = ("queue", "pending", "inflight", "backlog", "waiting")
+_QUEUE_NAMES_EXACT = {"_open"}
+_APPEND_ATTRS = {"append", "extend", "appendleft"}
+_BOUND_NAME_HINTS = ("cap", "depth", "bound", "limit", "max")
+# NSF105 (b): control-plane modules with the strict no-time contract
+_CONTROL_PLANE_FILES = {"control.py", "slo.py", "sim.py"}
 
-SERVE_RULES = ("NSF101", "NSF102", "NSF103", "NSF104")
+SERVE_RULES = ("NSF101", "NSF102", "NSF103", "NSF104", "NSF105")
 GENERAL_RULES = ("NSF102",)
 
 _CACHE: dict[str, tuple[float, tuple[str, ...], tuple[Finding, ...]]] = {}
@@ -260,11 +280,105 @@ def _check_dispatch_stamp(tree: ast.AST, rel: str) -> list[Finding]:
     return out
 
 
+def _container_name(node: ast.expr) -> str | None:
+    """The container identifier of an append target: ``self._queue`` ->
+    ``_queue``; ``pending[model]`` -> ``pending``; ``q`` -> ``q``."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_queue_name(name: str | None) -> bool:
+    if name is None:
+        return False
+    low = name.lower()
+    return name in _QUEUE_NAMES_EXACT or \
+        any(h in low for h in _QUEUE_NAME_HINTS)
+
+
+def _scope_nodes(fn: ast.AST):
+    """Nodes of ``fn``'s own scope (nested function bodies excluded — a
+    bound check inside a closure doesn't dominate the outer append)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _has_bound_check(fn: ast.AST) -> bool:
+    """A Compare in fn's scope involving len(...) or a bound-named value."""
+    for node in _scope_nodes(fn):
+        if not isinstance(node, ast.Compare):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Name) and sub.func.id == "len":
+                return True
+            name = sub.attr if isinstance(sub, ast.Attribute) else \
+                sub.id if isinstance(sub, ast.Name) else None
+            if name and any(h in name.lower() for h in _BOUND_NAME_HINTS):
+                return True
+    return False
+
+
+def _check_overload_hygiene(tree: ast.AST, rel: str) -> list[Finding]:
+    out = []
+    # (a) queue appends must be dominated by a bound check
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        appends = [
+            node for node in _scope_nodes(fn)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _APPEND_ATTRS
+            and _is_queue_name(_container_name(node.func.value))]
+        if appends and not _has_bound_check(fn):
+            for node in appends:
+                out.append(finding(
+                    "NSF105", f"{rel}:{node.lineno}",
+                    f"queue append ({_container_name(node.func.value)}."
+                    f"{node.func.attr}) in {fn.name!r} with no bound "
+                    "check in the same function — unbounded queue growth "
+                    "under overload; compare len()/a cap before growing"))
+    # (b) control-plane modules must not reference time at all
+    if os.path.basename(rel) in _CONTROL_PLANE_FILES:
+        for node in ast.walk(tree):
+            bad_line = None
+            what = None
+            if isinstance(node, ast.Import) and \
+                    any(a.name.split(".")[0] == "time" for a in node.names):
+                bad_line, what = node.lineno, "import time"
+            elif isinstance(node, ast.ImportFrom) and \
+                    (node.module or "").split(".")[0] == "time":
+                bad_line, what = node.lineno, "from time import ..."
+            elif isinstance(node, ast.Attribute):
+                chain = _attr_chain(node)
+                if len(chain) == 2 and chain[0] == "time" \
+                        and chain[1] in _CLOCK_ATTRS:
+                    bad_line, what = node.lineno, f"time.{chain[1]} reference"
+            if bad_line is not None:
+                out.append(finding(
+                    "NSF105", f"{rel}:{bad_line}",
+                    f"{what} in a control-plane module — policy must be "
+                    "deterministic under the virtual clock: take explicit "
+                    "clock/now parameters (no time.* even as a default)"))
+    return out
+
+
 _RULE_CHECKS = {
     "NSF101": _check_clock_calls,
     "NSF102": _check_host_materialization,
     "NSF103": _check_rng_derivation,
     "NSF104": _check_dispatch_stamp,
+    "NSF105": _check_overload_hygiene,
 }
 
 

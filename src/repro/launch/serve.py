@@ -101,8 +101,39 @@ def serve_reason(args):
     return results
 
 
+def _parse_class_spec(flag: str, spec: str, scalar_ok: bool):
+    """Parse ``60`` / ``interactive=60,standard=240`` style flags into a
+    float or ``{class: float}`` mapping, with the error naming the flag
+    and the offending token (class names validate against
+    :data:`repro.serve.slo.PRIORITIES`)."""
+    from repro.serve.slo import validate_priority
+
+    spec = spec.strip()
+    if "=" not in spec:
+        if not scalar_ok:
+            raise SystemExit(f"{flag}: expected a priority class or "
+                             f"class=weight list, got {spec!r}")
+        try:
+            return float(spec)
+        except ValueError:
+            raise SystemExit(f"{flag}: expected a number or a "
+                             f"class=value list, got {spec!r}") from None
+    out = {}
+    for part in spec.split(","):
+        name, eq, val = part.partition("=")
+        if not eq:
+            raise SystemExit(f"{flag}: malformed entry {part!r} "
+                             "(expected class=value)")
+        try:
+            out[validate_priority(name.strip())] = float(val)
+        except ValueError as e:
+            raise SystemExit(f"{flag}: {e}") from None
+    return out
+
+
 def serve_frontdoor(args):
-    from repro.serve import Budget, Traffic, deploy
+    from repro.serve import SHED_POLICIES, Budget, Traffic, deploy
+    from repro.serve.slo import PRIORITY_RANK
 
     models = rt.resolve_models(
         "frontdoor", [m.strip() for m in args.models.split(",") if m.strip()])
@@ -111,6 +142,26 @@ def serve_frontdoor(args):
                    "symb_precision": args.symb_precision,
                    **({"variant": "oracle"} if args.oracle else {})}
                for m in nsai}
+    slo_ms = (None if args.slo_ms is None else
+              _parse_class_spec("--slo-ms", args.slo_ms, scalar_ok=True))
+    if args.shed_policy not in SHED_POLICIES:
+        raise SystemExit(f"--shed-policy: unknown shed policy "
+                         f"{args.shed_policy!r} (known: "
+                         f"{', '.join(SHED_POLICIES)})")
+    if args.queue_depth is not None and args.queue_depth < 1:
+        raise SystemExit(f"--queue-depth: must be >= 1, "
+                         f"got {args.queue_depth}")
+    priorities = None
+    if args.priority is not None:
+        if "=" in args.priority:
+            priorities = _parse_class_spec("--priority", args.priority,
+                                           scalar_ok=False)
+        elif args.priority in PRIORITY_RANK:
+            priorities = args.priority
+        else:
+            raise SystemExit(f"--priority: unknown priority class "
+                             f"{args.priority!r} (known: "
+                             f"{', '.join(sorted(PRIORITY_RANK))})")
     deployment = deploy(
         models,
         traffic=Traffic(rate_rps=args.rate,
@@ -121,7 +172,9 @@ def serve_frontdoor(args):
                       decode_block=args.decode_block,
                       max_new_tokens=args.max_new,
                       replicas=args.replicas if args.replicas != 1 else None,
-                      tp=args.tp if args.tp != 1 else None),
+                      tp=args.tp if args.tp != 1 else None,
+                      slo_ms=slo_ms, queue_depth=args.queue_depth,
+                      shed_policy=args.shed_policy),
         options=options, preflight=args.preflight)
     for line in deployment.summary().splitlines():
         print(f"[deploy] {line}")
@@ -132,7 +185,8 @@ def serve_frontdoor(args):
     print(f"[frontdoor] {len(models)} models x {args.requests} requests, "
           f"poisson {args.rate:.1f} req/s each, deadline "
           f"{args.deadline_ms:.0f}ms")
-    arrivals, truths = deployment.synthetic_traffic(args.requests)
+    arrivals, truths = deployment.synthetic_traffic(args.requests,
+                                                    priorities=priorities)
     report = deployment.serve(arrivals)
     for line in report.summary().splitlines():
         print(f"[frontdoor] {line}")
@@ -230,6 +284,23 @@ def main():
                     help="static-analysis gate before serving: fail the "
                          "deploy on error findings (default), report only, "
                          "or skip")
+    # overload control plane (--workload frontdoor; see repro.serve.control)
+    ap.add_argument("--slo-ms", default=None,
+                    help="total-latency p99 SLO: a scalar (interactive "
+                         "target; standard gets 4x, batch best-effort) or "
+                         "a class=ms list, e.g. interactive=60,standard=240."
+                         "  Attaches the feedback controller")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="bound each model's pending queue; arrivals "
+                         "beyond it shed by --shed-policy instead of "
+                         "growing the queue without bound")
+    ap.add_argument("--shed-policy", default="lowest-priority",
+                    help="lowest-priority (evict newest lowest-class "
+                         "queued work) or tail-drop (reject the arrival)")
+    ap.add_argument("--priority", default=None,
+                    help="traffic-class stamp for synthetic arrivals: one "
+                         "class name or a class=weight mix, e.g. "
+                         "interactive=3,standard=5,batch=2")
     args = ap.parse_args()
 
     if args.replicas < 1 or args.tp < 1:

@@ -6,22 +6,33 @@ NSAI ``ReasonEngine`` (``serve.reason``), the deadline-batched
 ``FrontDoor`` admission layer over any mix of them (``serve.frontdoor``),
 ``deploy()`` — the DSE-driven generator->architecture entry point, which
 also negotiates the kernel :class:`~repro.backend.registry.LoweringPlan`
-once per deployment — and golden-trace record/replay (``serve.trace``).
+once per deployment — golden-trace record/replay (``serve.trace``), and
+the overload control plane (``serve.control`` / ``serve.slo``): per-class
+SLO targets, bounded priority queues with load-shedding, and the
+feedback controller that adapts the front-door's operating point online.
 
 Only lightweight names are imported eagerly; engine modules (which pull
 in jax) load on first use.
 """
 
+from repro.serve.control import (ClassQueues, ControlConfig,
+                                 ControlDecision, OverloadController,
+                                 SHED_POLICIES, ShedRecord)
 from repro.serve.deploy import Budget, Deployment, Traffic, deploy
 from repro.serve.replica import ReplicaPool
 from repro.serve.runtime import (EngineProtocol, GroupRecord,
                                  TRAFFIC_CLASSES, TrafficClass,
                                  resolve_models, work_unit_name, work_units)
+from repro.serve.slo import (PRIORITIES, SLOEstimator, SLOTarget,
+                             slo_targets)
 from repro.serve.trace import GoldenTrace, ReplayReport, TraceDiff, record
 
 __all__ = [
-    "Budget", "Deployment", "EngineProtocol", "GoldenTrace", "GroupRecord",
-    "ReplayReport", "ReplicaPool", "TRAFFIC_CLASSES", "TraceDiff", "Traffic",
-    "TrafficClass", "deploy", "record", "resolve_models", "work_unit_name",
+    "Budget", "ClassQueues", "ControlConfig", "ControlDecision",
+    "Deployment", "EngineProtocol", "GoldenTrace", "GroupRecord",
+    "OverloadController", "PRIORITIES", "ReplayReport", "ReplicaPool",
+    "SHED_POLICIES", "SLOEstimator", "SLOTarget", "ShedRecord",
+    "TRAFFIC_CLASSES", "TraceDiff", "Traffic", "TrafficClass", "deploy",
+    "record", "resolve_models", "slo_targets", "work_unit_name",
     "work_units",
 ]

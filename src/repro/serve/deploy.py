@@ -36,9 +36,13 @@ import time
 from typing import Any, Callable, Iterable, Mapping
 
 from repro.backend import registry as backend_registry
+from repro.serve.control import (ControlConfig, OverloadController,
+                                 validate_shed_policy)
 from repro.serve.frontdoor import (ArrivalRequest, FrontDoor,
                                    FrontDoorConfig, FrontDoorReport,
-                                   merge_arrivals, poisson_arrivals)
+                                   merge_arrivals, poisson_arrivals,
+                                   with_priorities)
+from repro.serve.slo import slo_targets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +68,16 @@ class Budget:
     so ``tp`` does not apply to them).  ``replicas`` may exceed
     ``devices`` (placement wraps round-robin) — useful on 1-device hosts
     where N replicas still shard load across N in-flight windows.
+
+    ``slo_ms`` / ``queue_depth`` / ``shed_policy`` size the *overload
+    control plane*: setting either of the first two attaches an
+    :class:`~repro.serve.control.OverloadController` to the front-door,
+    with the DSE-derived serving plan as its initial operating point.
+    ``slo_ms`` is a scalar (interactive p99 target; see
+    :func:`~repro.serve.slo.slo_targets`) or a per-class mapping;
+    ``queue_depth`` bounds each model's pending queue (arrivals beyond
+    it shed per ``shed_policy`` instead of growing the queue without
+    bound).
     """
 
     max_pes: int = 4096           # AdArray PE budget handed to the DSE
@@ -76,6 +90,10 @@ class Budget:
     devices: int | None = None    # device pool (None = jax.device_count())
     replicas: int | str | None = None  # DP engine replicas (None=1, "auto")
     tp: int | None = None         # LM tensor-parallel degree (None = 1)
+    # overload control plane (both None = legacy static front-door)
+    slo_ms: float | Mapping[str, float] | None = None
+    queue_depth: int | None = None
+    shed_policy: str = "lowest-priority"
 
 
 @dataclasses.dataclass
@@ -114,6 +132,9 @@ class Deployment:
     # schedules + serving sources (None when preflight="off" or for
     # hand-built Deployments)
     analysis: Any = None
+    # the overload controller attached to the front-door (None when the
+    # Budget requested no SLO targets and no queue bound)
+    controller: OverloadController | None = None
 
     def _pool(self, m: str):
         """The model's ReplicaPool, or None when served by a bare engine."""
@@ -205,6 +226,19 @@ class Deployment:
         # benchmark JSON carries the analysis that cleared the deployment
         out["analysis"] = (self.analysis.to_dict()
                            if self.analysis is not None else None)
+        # the overload control plane in force (None = legacy static door)
+        ctl = self.controller
+        out["control"] = None if ctl is None else {
+            "slo_ms": {p: t.total_p99_ms for p, t in ctl.targets.items()},
+            "queue_depth": ctl.cfg.queue_depth,
+            "shed_policy": ctl.cfg.shed_policy,
+            "tick_s": ctl.cfg.tick_s,
+            "operating": {m: {"deadline_s": ctl.deadline_s(m),
+                              "cap": ctl.cap(m)}
+                          for m in sorted(ctl.bound())},
+            "ticks": ctl.ticks,
+            "decisions": len(ctl.decisions),
+        }
         return out
 
     def summary(self) -> str:
@@ -213,7 +247,7 @@ class Deployment:
         backend = f"backend={self.backend.tag()}" if self.backend else \
             "backend=n/a"
         for m, rec in self.report().items():
-            if m == "analysis":  # deployment-wide record, not a model
+            if m in ("analysis", "control"):  # deployment-wide records
                 continue
             design = self.designs[m]
             if design is not None:
@@ -237,6 +271,14 @@ class Deployment:
             lines.append(f"preflight {verdict}: "
                          f"{len(self.analysis.errors)} error(s), "
                          f"{len(self.analysis.warnings)} warning(s)")
+        if self.controller is not None:
+            ctl = self.controller
+            slos = " ".join(f"{p}<= {t.total_p99_ms:.0f}ms"
+                            for p, t in ctl.targets.items()) or "none"
+            lines.append(f"control: slo [{slos}] "
+                         f"queue_depth={ctl.cfg.queue_depth} "
+                         f"shed={ctl.cfg.shed_policy} "
+                         f"tick={ctl.cfg.tick_s * 1e3:.0f}ms")
         return "\n".join(lines)
 
     # -- synthetic traffic + warmup (launcher / benchmark helpers) ----------
@@ -267,15 +309,22 @@ class Deployment:
                 streams[m] = lm_stream()
         return streams, truths
 
-    def synthetic_traffic(self, n: int, seed: int = 100):
+    def synthetic_traffic(self, n: int, seed: int = 100,
+                          priorities: str | Mapping[str, float] | None
+                          = None):
         """A merged Poisson arrival feed of ``n`` requests per model at
         the deployment's offered rate.  Returns ``(arrivals, truths)``
         where ``truths[model]()`` lazily materializes ground truth for
-        NSAI models (absent for LM models)."""
+        NSAI models (absent for LM models).  ``priorities`` stamps a
+        traffic-class mix onto the stream (one class name, or a
+        ``{class: weight}`` mapping sampled deterministically — see
+        :func:`~repro.serve.frontdoor.with_priorities`)."""
         streams, truths = self._streams(n, seed)
         arrivals = merge_arrivals(*(
             poisson_arrivals(m, s, self.traffic.rate_rps, seed=seed + j)
             for j, (m, s) in enumerate(streams.items())))
+        if priorities is not None:
+            arrivals = with_priorities(arrivals, priorities, seed=seed)
         return arrivals, truths
 
     def warmup(self):
@@ -515,14 +564,36 @@ def deploy(workloads: Iterable[str], traffic: Traffic | None = None,
 
             raise PreflightError(analysis)
 
+    # overload control plane: requested via the Budget's SLO/queue knobs.
+    # The DSE-derived serving plan is the controller's *initial* operating
+    # point — the feedback loop adapts deadline/cap from there, and the
+    # plan's buckets are the cap steps it may move across.
+    controller = None
+    if budget.slo_ms is not None or budget.queue_depth is not None:
+        validate_shed_policy(budget.shed_policy)
+        controller = OverloadController(
+            targets=slo_targets(budget.slo_ms),
+            cfg=ControlConfig(queue_depth=budget.queue_depth,
+                              shed_policy=budget.shed_policy))
+        for m in models:
+            if classes[m] == "reason":
+                cap = plans[m].batch_size
+                buckets = tuple(plans[m].buckets or (cap,))
+            else:
+                cap = budget.max_slots
+                buckets = None
+            controller.bind(m, deadline_s=traffic.deadline_s, cap=cap,
+                            buckets=buckets)
+
     door = FrontDoor(engines,
                      FrontDoorConfig(deadline_s=traffic.deadline_s,
                                      poll_s=traffic.poll_s),
-                     clock=clock, sleep=sleep)
+                     clock=clock, sleep=sleep, controller=controller)
     return Deployment(engines=engines, door=door, classes=classes,
                       designs=designs, plans=plans, configs=configs,
                       variants=variants, traffic=traffic, budget=budget,
                       seed=seed, backend=lowering_plan,
                       options={m: dict(options.get(m, {})) for m in models
                                if options.get(m)},
-                      mesh=mesh, replicas=replicas, analysis=analysis)
+                      mesh=mesh, replicas=replicas, analysis=analysis,
+                      controller=controller)

@@ -93,6 +93,9 @@ class Request:
     uid: int
     prompt: np.ndarray                 # (P,) int32
     max_new_tokens: int | None = None  # falls back to ServeConfig default
+    # traffic class for overload control (see serve.slo.PRIORITIES);
+    # the engine ignores it — the front-door sheds and orders by it
+    priority: str = "standard"
 
 
 @dataclasses.dataclass
@@ -490,6 +493,15 @@ class Engine:
     def inflight(self) -> int:
         """Dispatched-but-undrained admission groups."""
         return len(self._open)
+
+    @property
+    def accepting(self) -> bool:
+        """True while ``submit`` would start real work promptly: no
+        earlier requests are still queued waiting for slots.  The
+        front-door's overload path defers group closes on this signal so
+        backlog accumulates in its bounded (sheddable) queue instead of
+        the engine's unbounded one."""
+        return not self._queue
 
     def submit(self, group: Sequence[Request]) -> GroupRecord:
         """Dispatch one admission group: enqueue, prefill what fits.

@@ -44,6 +44,17 @@ offered rate), :func:`trace_arrivals` (replay explicit timestamps), and
 :func:`merge_arrivals` to interleave per-model streams into one time-
 ordered front-door feed (stable on ties: equal timestamps keep each
 stream's FIFO order, earlier-argument streams first).
+:func:`with_priorities` stamps a priority-class mix onto a stream.
+
+**Overload control** (optional): pass an :class:`~repro.serve.control.
+OverloadController` and the front-door (a) keeps its pending queues in
+bounded per-priority-class :class:`~repro.serve.control.ClassQueues` —
+arrivals beyond the depth bound are *shed* (reject-with-backpressure,
+lowest-priority-first) and surfaced in the report as first-class
+:class:`~repro.serve.control.ShedRecord` outcomes, and (b) feeds every
+completion back to the controller's windowed per-class p99 estimator
+and lets it adapt the per-model deadline and bucket cap each control
+tick.  Without a controller the behavior is the legacy unbounded FIFO.
 """
 
 from __future__ import annotations
@@ -56,7 +67,11 @@ from typing import Any, Callable, Iterable, Iterator, Mapping, Sequence
 import numpy as np
 
 from repro.serve import runtime as rt
+from repro.serve import slo as slo_mod
+from repro.serve.control import (ClassQueues, OverloadController,
+                                 ShedRecord)
 from repro.serve.runtime import EngineProtocol, GroupRecord
+from repro.serve.slo import DEFAULT_PRIORITY, SLOTarget
 
 
 # ---------------------------------------------------------------------------
@@ -70,11 +85,15 @@ class ArrivalRequest:
 
     ``request`` is any protocol request envelope (``serve.engine.Request``,
     ``serve.reason.ReasonRequest`` — anything the named model's engine
-    accepts)."""
+    accepts).  ``priority`` names the traffic class for overload control
+    (one of :data:`~repro.serve.slo.PRIORITIES`); ``None`` defers to the
+    request envelope's own ``priority`` attribute, defaulting to
+    ``standard``."""
 
     t: float
     model: str
     request: Any
+    priority: str | None = None
 
 
 def poisson_arrivals(model: str, requests: Iterable[Any],
@@ -128,6 +147,33 @@ def merge_arrivals(*streams: Iterable[ArrivalRequest]
     return heapq.merge(*streams, key=lambda a: a.t)
 
 
+def with_priorities(stream: Iterable[ArrivalRequest],
+                    mix: str | Mapping[str, float],
+                    seed: int = 0) -> Iterator[ArrivalRequest]:
+    """Stamp priority classes onto an arrival stream.
+
+    ``mix`` is either one class name (every arrival gets it) or a
+    ``{class: weight}`` mapping sampled per arrival with a seeded rng —
+    deterministic, so traced replays shed identically.  Unknown class
+    names raise the named :func:`~repro.serve.slo.validate_priority`
+    error."""
+    if isinstance(mix, str):
+        prio = slo_mod.validate_priority(mix)
+        for a in stream:
+            yield dataclasses.replace(a, priority=prio)
+        return
+    classes = [slo_mod.validate_priority(c) for c in mix]
+    w = np.asarray([float(mix[c]) for c in classes], dtype=float)
+    if (w < 0).any() or not w.sum():
+        raise ValueError(f"priority mix weights must be >= 0 and "
+                         f"sum > 0: {dict(mix)}")
+    rng = np.random.default_rng(seed)
+    p = w / w.sum()
+    for a in stream:
+        yield dataclasses.replace(
+            a, priority=classes[int(rng.choice(len(classes), p=p))])
+
+
 def pow2_buckets(max_batch: int, min_bucket: int = 2) -> tuple[int, ...]:
     """Power-of-two batch buckets up to (and always including) max_batch:
     8 -> (2, 4, 8); 6 -> (2, 4, 6).
@@ -170,6 +216,7 @@ class RequestLatency:
     bucket: int
     group_size: int
     close_reason: str             # full | deadline | flush
+    priority: str = DEFAULT_PRIORITY
 
     @property
     def queue_s(self) -> float:
@@ -209,12 +256,50 @@ class FrontDoorReport:
     ``results`` maps model -> uid -> the engine's own result type
     (``Result`` with generated ``tokens`` for LM engines, ``ReasonResult``
     with an ``answer`` for NSAI engines) — one report covers both request
-    classes."""
+    classes.
+
+    Overload-control outcomes are first class: ``shed`` lists every
+    rejected request (:class:`~repro.serve.control.ShedRecord` — never a
+    silent drop, so ``offered == admitted + shed`` exactly), ``slo``
+    holds the targets that were in force, ``decisions`` the controller's
+    non-hold actions, and ``queue_depth_max`` the per-model pending
+    high-water mark (the boundedness proof the soak gate reads)."""
 
     results: dict[str, dict[int, Any]]
     latencies: list[RequestLatency]
     groups: list[ServedGroup]
     wall_time_s: float
+    shed: list[ShedRecord] = dataclasses.field(default_factory=list)
+    slo: dict[str, SLOTarget] = dataclasses.field(default_factory=dict)
+    decisions: list = dataclasses.field(default_factory=list)
+    queue_depth_max: dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def offered(self, model: str | None = None) -> int:
+        """Requests that reached the front-door: admitted + shed."""
+        admitted = sum(1 for l in self.latencies
+                       if model is None or l.model == model)
+        return admitted + sum(1 for s in self.shed
+                              if model is None or s.model == model)
+
+    def shed_counts(self, model: str | None = None) -> dict[str, int]:
+        """Shed requests per priority class."""
+        out: dict[str, int] = {}
+        for s in self.shed:
+            if model is None or s.model == model:
+                out[s.priority] = out.get(s.priority, 0) + 1
+        return {p: out[p] for p in slo_mod.PRIORITIES if p in out}
+
+    def shed_rate(self, model: str | None = None) -> float:
+        offered = self.offered(model)
+        n_shed = sum(1 for s in self.shed
+                     if model is None or s.model == model)
+        return n_shed / offered if offered else 0.0
+
+    def slo_attainment(self, model: str | None = None) -> dict[str, dict]:
+        """Exact per-class SLO attainment (see :func:`repro.serve.slo.
+        attainment`) against the targets this serve ran under."""
+        return slo_mod.attainment(self.latencies, self.slo, model)
 
     def percentiles(self, field: str = "total_s", model: str | None = None,
                     qs: tuple[int, ...] = (50, 95, 99)) -> dict[str, float]:
@@ -294,10 +379,27 @@ class FrontDoorReport:
             lines.append(
                 f"{model}: {n} served @ {self.throughput_rps(model):.1f}/s"
                 f" ({self.work_per_s(model):.1f} {self.work_unit(model)}/s)"
-                f" | queue p50/p95 {q['p50'] * 1e3:.1f}/{q['p95'] * 1e3:.1f}ms"
-                f" | service p50/p95 {s['p50'] * 1e3:.1f}/"
-                f"{s['p95'] * 1e3:.1f}ms"
+                f" | queue p50/p95/p99 {q['p50'] * 1e3:.1f}/"
+                f"{q['p95'] * 1e3:.1f}/{q['p99'] * 1e3:.1f}ms"
+                f" | service p50/p95/p99 {s['p50'] * 1e3:.1f}/"
+                f"{s['p95'] * 1e3:.1f}/{s['p99'] * 1e3:.1f}ms"
                 f" | total p99 {t['p99'] * 1e3:.1f}ms | buckets {hist}")
+            sheds = self.shed_counts(model)
+            if sheds:
+                parts = " ".join(f"{p}:{c}" for p, c in sheds.items())
+                lines.append(
+                    f"{model}: shed {sum(sheds.values())} "
+                    f"({self.shed_rate(model):.1%} of "
+                    f"{self.offered(model)} offered) [{parts}] "
+                    f"queue<= {self.queue_depth_max.get(model, 0)}")
+            if self.slo:
+                att = self.slo_attainment(model)
+                parts = " ".join(
+                    f"{p}:{row['attainment']:.1%}"
+                    f"{'' if row['target_ms'] is None else '@' + format(row['target_ms'], '.0f') + 'ms'}"
+                    for p, row in att.items() if row["n"])
+                if parts:
+                    lines.append(f"{model}: slo attainment {parts}")
             replicas = self.replica_breakdown(model)
             if replicas:
                 parts = " ".join(
@@ -339,12 +441,20 @@ class FrontDoor:
     to drive the admission policy deterministically.  The engines' record
     clocks are pointed at the front-door clock for the duration of
     ``serve`` so queue/service latencies share one origin.
+
+    ``controller`` (optional) turns on the overload control plane: the
+    DSE-derived static knobs become the controller's *initial* operating
+    point, pending queues become bounded priority
+    :class:`~repro.serve.control.ClassQueues` with shedding, and the
+    controller adapts deadline/bucket-cap each tick from the windowed
+    per-class p99 feedback (see :mod:`repro.serve.control`).
     """
 
     def __init__(self, engines: Mapping[str, EngineProtocol],
                  cfg: FrontDoorConfig | None = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 controller: OverloadController | None = None):
         if not engines:
             raise ValueError("front-door needs at least one engine")
         cfg = cfg or FrontDoorConfig()
@@ -359,6 +469,34 @@ class FrontDoor:
                      for m, eng in self.engines.items()}
         if any(c < 1 for c in self.caps.values()):
             raise ValueError(f"admission caps must be >= 1: {self.caps}")
+        self.controller = controller
+        if controller is not None:
+            for m, cap in self.caps.items():
+                if m not in controller.bound():
+                    controller.bind(m, deadline_s=cfg.deadline_s, cap=cap,
+                                    buckets=pow2_buckets(cap, min_bucket=1))
+
+    def _deadline(self, model: str) -> float:
+        if self.controller is not None:
+            return self.controller.deadline_s(model)
+        return self.cfg.deadline_s
+
+    def _cap(self, model: str) -> int:
+        if self.controller is not None:
+            return min(self.controller.cap(model), self.caps[model])
+        return self.caps[model]
+
+    def _accepting(self, model: str) -> bool:
+        """Whether a group close should dispatch now.  Only consulted in
+        overload-control mode: deferring closes while the engine's
+        in-flight window is full keeps backlog in the front-door's
+        *bounded* queue (where the depth bound sheds it) instead of
+        blocking inside ``submit`` — that's the backpressure that makes
+        reject-with-backpressure possible.  Engines without an
+        ``accepting`` signal always dispatch (legacy behavior)."""
+        if self.controller is None:
+            return True
+        return getattr(self.engines[model], "accepting", True)
 
     def serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
         """Serve one arrival stream to completion (single-threaded event
@@ -374,15 +512,23 @@ class FrontDoor:
                 eng.clock = saved_clocks[m]
 
     def _serve(self, arrivals: Iterable[ArrivalRequest]) -> FrontDoorReport:
+        ctl = self.controller
         results: dict[str, dict[int, Any]] = {m: {} for m in self.engines}
-        pending: dict[str, list[ArrivalRequest]] = \
-            {m: [] for m in self.engines}
+        # per-model bounded priority queues (unbounded single-class FIFO
+        # when no controller — the legacy behavior, byte for byte)
+        pending: dict[str, ClassQueues] = \
+            {m: (ctl.queues(m) if ctl is not None else ClassQueues())
+             for m in self.engines}
+        shed: list[ShedRecord] = []
         # serve-lifetime duplicate guard: engines intentionally allow uid
         # reuse after a drain, so a duplicate that slips past a mid-serve
         # drain would silently overwrite the earlier answer in `results`
         seen: dict[str, set] = {m: set() for m in self.engines}
-        # (model, engine record, close_reason, close_s, [arrival times])
-        submitted: list[tuple[str, GroupRecord, str, float, list[float]]] = []
+        # (model, rec, close_reason, close_s, [arrival times], [classes])
+        submitted: list[tuple[str, GroupRecord, str, float,
+                              list[float], list[str]]] = []
+        # submitted groups whose completion hasn't been fed back yet
+        watch: list[tuple[str, GroupRecord, list[float], list[str]]] = []
 
         t0 = self._clock()
 
@@ -390,11 +536,31 @@ class FrontDoor:
             return self._clock() - t0
 
         def close_group(model: str, reason: str):
-            group = pending[model]
-            pending[model] = []
+            group = pending[model].pop(self._cap(model))
             rec = self.engines[model].submit([a.request for a in group])
-            submitted.append((model, rec, reason, now(),
-                              [a.t for a in group]))
+            entry = (model, rec, reason, now(), [a.t for a in group],
+                     [a.priority or DEFAULT_PRIORITY for a in group])
+            submitted.append(entry)
+            if ctl is not None:
+                watch.append((model, rec, entry[4], entry[5]))
+
+        def feedback():
+            # feed completions to the windowed estimator and let the
+            # controller adapt the operating point if a tick is due
+            t = now()
+            live = []
+            for model, rec, arrs, prios in watch:
+                if rec.done_t is None:
+                    live.append((model, rec, arrs, prios))
+                    continue
+                done_s = rec.done_t - t0
+                for arr, prio in zip(arrs, prios):
+                    ctl.observe(model, prio, done_s - arr, t)
+            watch[:] = live
+            obs = {m: dict(rt.engine_observation(eng),
+                           queue_depth=len(pending[m]))
+                   for m, eng in self.engines.items()}
+            ctl.maybe_tick(t, obs)
 
         it = iter(arrivals)
         nxt = next(it, None)
@@ -420,23 +586,50 @@ class FrontDoor:
                                      f"model {model!r} (results are keyed "
                                      "by uid)")
                 seen[model].add(uid)
-                pending[model].append(nxt)
+                prio = nxt.priority or rt.request_priority(nxt.request)
+                arrival = dataclasses.replace(nxt, priority=prio)
+                rejected = pending[model].offer(arrival, prio, now())
+                if rejected is not None:
+                    shed.append(rejected)
                 nxt = next(it, None)
-                if len(pending[model]) >= self.caps[model]:
+                while len(pending[model]) >= self._cap(model) \
+                        and self._accepting(model):
                     close_group(model, "full")
             if nxt is None:
                 # stream over: no future arrival can fill an open group,
-                # so holding it to the deadline only adds latency
-                for model in self.engines:
-                    if pending[model]:
-                        close_group(model, "flush")
+                # so holding it to the deadline only adds latency.  Flush
+                # in arrival order ACROSS models (oldest open group
+                # first), not engine-dict order — cross-model dispatch
+                # order must track arrival order
+                flushable = [m for m in self.engines if pending[m]]
+                while flushable:
+                    model = min(flushable,
+                                key=lambda m: pending[m].oldest_t)
+                    close_group(model, "flush")
+                    flushable = [m for m in self.engines if pending[m]]
                 break
             t = now()
-            for model, queue in pending.items():
-                if queue and t >= queue[0].t + self.cfg.deadline_s:
+            # deadline closes, oldest open group first across models so
+            # simultaneous expiries dispatch in arrival order; a close is
+            # deferred (not skipped) while the engine signals
+            # backpressure — the queue keeps aging and sheds at its bound
+            deferred = False
+            due = sorted(
+                (pending[m].oldest_t, m) for m in self.engines
+                if pending[m]
+                and t >= pending[m].oldest_t + self._deadline(m))
+            for _, model in due:
+                if not pending[model]:
+                    continue
+                if self._accepting(model):
                     close_group(model, "deadline")
-            events = [nxt.t] + [q[0].t + self.cfg.deadline_s
-                                for q in pending.values() if q]
+                else:
+                    deferred = True
+            if ctl is not None:
+                feedback()
+            events = [nxt.t] + \
+                [pending[m].oldest_t + self._deadline(m)
+                 for m in self.engines if pending[m]]
             dt = min(events) - now()
             if dt > 0:
                 # the device keeps working while the host waits; collect
@@ -447,14 +640,23 @@ class FrontDoor:
                     results[model].update(eng.drain_ready())
                     inflight += eng.inflight
                 self._sleep(min(dt, self.cfg.poll_s) if inflight else dt)
+            elif deferred:
+                # every pending event is past due but the engines are
+                # backpressuring: drain to free window room and let time
+                # advance one poll, or a virtual clock would livelock
+                for model, eng in self.engines.items():
+                    results[model].update(eng.drain_ready())
+                self._sleep(self.cfg.poll_s)
 
         for model, eng in self.engines.items():
             results[model].update(eng.drain_all())
+        if ctl is not None:
+            feedback()
         wall = now()
 
         latencies: list[RequestLatency] = []
         groups: list[ServedGroup] = []
-        for model, rec, reason, close_s, arr_times in submitted:
+        for model, rec, reason, close_s, arr_times, prios in submitted:
             if rec.dispatch_t is None or rec.done_t is None:
                 raise RuntimeError(
                     f"{model}: engine left group {rec.index} unstamped "
@@ -464,12 +666,17 @@ class FrontDoor:
             done_s = rec.done_t - t0
             groups.append(ServedGroup(
                 model=model, uids=rec.uids, bucket=rec.bucket, size=rec.size,
-                close_reason=reason, open_s=arr_times[0], close_s=close_s,
+                close_reason=reason, open_s=min(arr_times), close_s=close_s,
                 dispatch_s=dispatch_s, done_s=done_s, replica=rec.replica))
-            for uid, arr in zip(rec.uids, arr_times):
+            for uid, arr, prio in zip(rec.uids, arr_times, prios):
                 latencies.append(RequestLatency(
                     uid=uid, model=model, arrival_s=arr,
                     dispatch_s=dispatch_s, done_s=done_s, bucket=rec.bucket,
-                    group_size=rec.size, close_reason=reason))
-        return FrontDoorReport(results=results, latencies=latencies,
-                               groups=groups, wall_time_s=wall)
+                    group_size=rec.size, close_reason=reason,
+                    priority=prio))
+        return FrontDoorReport(
+            results=results, latencies=latencies, groups=groups,
+            wall_time_s=wall, shed=shed,
+            slo=dict(ctl.targets) if ctl is not None else {},
+            decisions=list(ctl.decisions) if ctl is not None else [],
+            queue_depth_max={m: q.depth_max for m, q in pending.items()})

@@ -116,6 +116,9 @@ class ReasonRequest:
     candidate_attrs: np.ndarray | None = None  # (8, A) int32
     # superposed-classification traffic (mimonet)
     images: np.ndarray | None = None           # (K, H, W, 1) float32
+    # traffic class for overload control (see serve.slo.PRIORITIES);
+    # the engine ignores it — the front-door sheds and orders by it
+    priority: str = "standard"
 
 
 @dataclasses.dataclass
@@ -456,6 +459,13 @@ class ReasonEngine:
     def inflight(self) -> int:
         """Dispatched-but-undrained admission groups."""
         return len(self._inflight)
+
+    @property
+    def accepting(self) -> bool:
+        """True while ``submit`` would dispatch without blocking on the
+        depth-k in-flight window — the backpressure signal the
+        front-door's overload path defers group closes on."""
+        return len(self._inflight) < self.cfg.max_inflight
 
     # -- the offline loop ---------------------------------------------------
 

@@ -139,6 +139,12 @@ class ReplicaPool:
         """The replicas' stats trees, recursively summed."""
         return _merge_stats([r.stats for r in self.replicas])
 
+    @property
+    def accepting(self) -> bool:
+        """True while at least one replica would take a group without
+        blocking — least-inflight routing sends work to that replica."""
+        return any(getattr(r, "accepting", True) for r in self.replicas)
+
     def submit(self, group, **kw) -> GroupRecord:
         """Dispatch one admission group to the least-loaded replica.
 
@@ -174,6 +180,16 @@ class ReplicaPool:
         for r in self.replicas:
             out.update(r.drain_all())
         return out
+
+    def observation(self) -> dict[str, Any]:
+        """Pool-merged view for the overload controller's tick (see
+        :func:`repro.serve.runtime.engine_observation`): total in-flight
+        depth, the per-replica split (a hot replica hides behind a pool
+        average — the controller's backlog signal shouldn't), and the
+        steady-state work rate off the merged stats tree."""
+        return {"inflight": self.inflight,
+                "inflight_per_replica": [r.inflight for r in self.replicas],
+                "work_rate": rt.measured_rate(self.stats)}
 
     # -- offline + accounting helpers ---------------------------------------
 

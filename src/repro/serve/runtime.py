@@ -150,6 +150,33 @@ def measured_rate(stats: Mapping, field: str = "work") -> float:
     return 0.0
 
 
+def request_priority(request: Any) -> str:
+    """Priority class of a request envelope.
+
+    The envelope is structural (like ``uid``): any request may carry a
+    ``priority`` attribute naming one of :data:`~repro.serve.slo.
+    PRIORITIES`; envelopes without one serve as ``standard``.  The
+    front-door validates the class at admission (named error), so
+    engines never see an unknown class."""
+    from repro.serve.slo import DEFAULT_PRIORITY
+
+    return getattr(request, "priority", None) or DEFAULT_PRIORITY
+
+
+def engine_observation(engine: Any) -> dict[str, Any]:
+    """What the overload controller sees of one engine each tick.
+
+    Prefers the engine's own ``observation()`` (``ReplicaPool`` merges
+    across replicas there); otherwise derives the generic view from the
+    protocol surface.  ``work_rate`` is the steady-state throughput in
+    the engine's own unit (see :func:`measured_rate`)."""
+    obs = getattr(engine, "observation", None)
+    if callable(obs):
+        return obs()
+    return {"inflight": engine.inflight,
+            "work_rate": measured_rate(engine.stats)}
+
+
 def work_units(result: Any) -> int:
     """Throughput units one result carries: generated tokens for LM
     results, 1 problem for NSAI results."""

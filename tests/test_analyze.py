@@ -259,9 +259,13 @@ def test_nsf007_dispatch_site_without_floor(monkeypatch):
 # -- golden fixtures: serving lint (NSF101-NSF104) ----------------------------
 
 
-def _lint(tmp_path, src):
-    """Write a fixture under a serve/ dir so path routing applies."""
-    p = tmp_path / "serve" / "fixture.py"
+def _lint(tmp_path, src, name="fixture.py"):
+    """Write a fixture under a serve/ dir so path routing applies.
+
+    ``name`` matters to NSF105's clock half, which keys on control-plane
+    basenames (control.py / slo.py / sim.py).
+    """
+    p = tmp_path / "serve" / name
     p.parent.mkdir(exist_ok=True)
     p.write_text(textwrap.dedent(src))
     return AnalysisReport(list(lint_file(str(p))))
@@ -367,6 +371,91 @@ def test_nsf104_stamp_then_block_is_clean(tmp_path):
                 jax.block_until_ready(self.fn(group))
                 return rec
         """)
+    assert rep.findings == []
+
+
+def test_nsf105_unbounded_queue_append(tmp_path):
+    # method named enqueue (not submit) so NSF104 doesn't co-fire
+    rep = _lint(tmp_path, """
+        class Router:
+            def __init__(self):
+                self.pending = []
+
+            def enqueue(self, item):
+                self.pending.append(item)
+        """)
+    assert _rules_of(rep) == ["NSF105"]
+    assert "bound check" in rep.findings[0].message
+
+
+def test_nsf105_bounded_queue_append_is_clean(tmp_path):
+    rep = _lint(tmp_path, """
+        class Router:
+            def __init__(self, depth):
+                self.pending = []
+                self.depth = depth
+
+            def enqueue(self, item):
+                if len(self.pending) >= self.depth:
+                    return False
+                self.pending.append(item)
+                return True
+        """)
+    assert rep.findings == []
+
+
+def test_nsf105_closure_bound_check_does_not_dominate(tmp_path):
+    # the check lives in a nested function — the outer append is still
+    # unbounded, so the closure must not satisfy the rule
+    rep = _lint(tmp_path, """
+        class Router:
+            def enqueue(self, item):
+                def bounded():
+                    return len(self.pending) < self.depth
+                self.pending.append(item)
+                return bounded
+        """)
+    assert _rules_of(rep) == ["NSF105"]
+
+
+def test_nsf105_non_queue_append_is_clean(tmp_path):
+    rep = _lint(tmp_path, """
+        def collect(rows):
+            out = []
+            for r in rows:
+                out.append(r)
+            return out
+        """)
+    assert rep.findings == []
+
+
+def test_nsf105_time_reference_in_control_plane_module(tmp_path):
+    # attribute *reference* (no call) — NSF101 only flags calls, so this
+    # would slip through without the control-plane clause
+    rep = _lint(tmp_path, """
+        import dataclasses
+        import time
+
+
+        @dataclasses.dataclass
+        class ControlConfig:
+            clock: object = time.monotonic
+        """, name="control.py")
+    assert _rules_of(rep) == ["NSF105"]
+    assert len(rep.findings) == 2  # the import and the reference
+    assert "control-plane" in rep.findings[0].message
+
+
+def test_nsf105_time_reference_outside_control_plane_is_clean(tmp_path):
+    rep = _lint(tmp_path, """
+        import dataclasses
+        import time
+
+
+        @dataclasses.dataclass
+        class Cfg:
+            clock: object = time.monotonic
+        """, name="helpers.py")
     assert rep.findings == []
 
 
